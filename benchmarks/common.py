@@ -1,0 +1,117 @@
+"""Shared benchmark harness: the paper's five-phase evaluation protocol
+(§4.3) — init, compress, decompress, verify, metrics — with
+time.perf_counter timing and tracemalloc peak tracking."""
+
+from __future__ import annotations
+
+import hashlib
+import time
+import tracemalloc
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.api import PromptCompressor
+from repro.data.corpus import Prompt, generate_corpus
+from repro.tokenizer.vocab import default_tokenizer
+
+METHODS = ("zstd", "token", "hybrid")
+N_PROMPTS = int(__import__("os").environ.get("REPRO_BENCH_PROMPTS", "386"))
+
+
+@dataclass
+class Cycle:
+    """One compress/decompress cycle's measurements (paper §4.3 phases 2-5)."""
+    method: str
+    n_chars: int
+    n_bytes: int
+    compressed_bytes: int
+    t_compress_s: float
+    t_decompress_s: float
+    mem_compress_mb: float
+    mem_decompress_mb: float
+    lossless: bool
+
+    @property
+    def cr(self) -> float:
+        return self.n_bytes / self.compressed_bytes
+
+    @property
+    def space_savings(self) -> float:
+        return (1 - self.compressed_bytes / self.n_bytes) * 100.0
+
+    @property
+    def bpc(self) -> float:
+        return self.compressed_bytes * 8.0 / max(self.n_chars, 1)
+
+    @property
+    def comp_mbps(self) -> float:
+        return self.n_bytes / 1e6 / max(self.t_compress_s, 1e-9)
+
+    @property
+    def decomp_mbps(self) -> float:
+        return self.n_bytes / 1e6 / max(self.t_decompress_s, 1e-9)
+
+
+_corpus_cache: Dict[int, List[Prompt]] = {}
+
+
+def corpus(n: int = N_PROMPTS, seed: int = 0) -> List[Prompt]:
+    key = (n, seed)
+    if key not in _corpus_cache:
+        _corpus_cache[key] = generate_corpus(n, seed=seed)
+    return _corpus_cache[key]
+
+
+def run_cycle(pc: PromptCompressor, text: str, method: str,
+              track_memory: bool = True) -> Cycle:
+    raw = text.encode("utf-8")
+    if track_memory:
+        tracemalloc.start()
+    t0 = time.perf_counter()
+    payload = pc.compress_raw(text, method)
+    t1 = time.perf_counter()
+    mem_c = tracemalloc.get_traced_memory()[1] / 1e6 if track_memory else 0.0
+    if track_memory:
+        tracemalloc.stop()
+        tracemalloc.start()
+    t2 = time.perf_counter()
+    rt = pc.decompress_raw(payload, method)
+    t3 = time.perf_counter()
+    mem_d = tracemalloc.get_traced_memory()[1] / 1e6 if track_memory else 0.0
+    if track_memory:
+        tracemalloc.stop()
+    lossless = (rt == text and hashlib.sha256(rt.encode()).digest()
+                == hashlib.sha256(raw).digest())
+    return Cycle(method=method, n_chars=len(text), n_bytes=len(raw),
+                 compressed_bytes=len(payload), t_compress_s=t1 - t0,
+                 t_decompress_s=t3 - t2, mem_compress_mb=mem_c,
+                 mem_decompress_mb=mem_d, lossless=lossless)
+
+
+_cycles_cache: Dict[str, List[Cycle]] = {}
+
+
+def all_cycles(n: int = N_PROMPTS, track_memory: bool = True) -> Dict[str, List[Cycle]]:
+    """386 prompts x 3 methods = 1158 cycles (paper §4.3), cached."""
+    key = f"{n}:{track_memory}"
+    if key in _cycles_cache:
+        return {m: [c for c in _cycles_cache[key] if c.method == m] for m in METHODS}
+    pc = PromptCompressor(default_tokenizer(), level=15)
+    cycles: List[Cycle] = []
+    for p in corpus(n):
+        for m in METHODS:
+            cycles.append(run_cycle(pc, p.text, m, track_memory))
+    _cycles_cache[key] = cycles
+    return {m: [c for c in cycles if c.method == m] for m in METHODS}
+
+
+def stats(vals) -> Dict[str, float]:
+    arr = np.asarray(list(vals), dtype=np.float64)
+    return {"mean": float(arr.mean()), "min": float(arr.min()),
+            "max": float(arr.max()), "std": float(arr.std())}
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,16 @@
+"""Paper §5.3: projected storage for 1M prompts averaging 2KB, per method
+(paper: 2GB raw -> ~0.4GB hybrid)."""
+
+from benchmarks.common import METHODS, all_cycles, csv_row
+
+
+def run() -> list:
+    rows = []
+    by_method = all_cycles()
+    for m in METHODS:
+        cs = by_method[m]
+        ratio = sum(c.compressed_bytes for c in cs) / sum(c.n_bytes for c in cs)
+        projected = 2.0 * ratio  # GB for the paper's 1M x 2KB scenario
+        rows.append(csv_row(f"disk_1M_prompts_{m}", 0,
+                            f"2.00GB->{projected:.2f}GB"))
+    return rows

@@ -1,0 +1,18 @@
+"""Paper §5.5: tracemalloc peak memory per method (paper: 0.10-0.52 MB
+means across 386 prompts)."""
+
+from benchmarks.common import METHODS, all_cycles, csv_row, stats
+
+
+def run() -> list:
+    rows = []
+    by_method = all_cycles()
+    for m in METHODS:
+        cs = by_method[m]
+        mc = stats(c.mem_compress_mb for c in cs)
+        md = stats(c.mem_decompress_mb for c in cs)
+        rows.append(csv_row(
+            f"mem_{m}", 0,
+            f"compress_mean={mc['mean']:.2f}MB max={mc['max']:.2f}MB "
+            f"decompress_mean={md['mean']:.2f}MB max={md['max']:.2f}MB"))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark driver (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows; exit code 0 iff every
+lossless check passed."""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (baselines, compression_ratio, disk_sizes,
+                            entropy_efficiency, memory, robustness, scaling,
+                            space_savings, throughput)
+
+    modules = [
+        ("table5_compression_ratio", compression_ratio),
+        ("table6_space_savings", space_savings),
+        ("table7_throughput", throughput),
+        ("sec5.5_memory", memory),
+        ("table2_3_robustness", robustness),
+        ("sec5.7_scaling", scaling),
+        ("sec3.6_entropy", entropy_efficiency),
+        ("sec5.3_disk", disk_sizes),
+        ("beyond_paper_baselines", baselines),
+    ]
+    print("name,us_per_call,derived")
+    failed = False
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # pragma: no cover
+            failed = True
+            rows = [f"{name},0,ERROR:{type(e).__name__}:{e}"]
+        dt = time.perf_counter() - t0
+        for row in rows:
+            print(row)
+            if "FAIL" in row or "ERROR" in row:
+                failed = True
+        print(f"{name}_wall,{1e6*dt:.0f},done")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

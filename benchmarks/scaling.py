@@ -1,0 +1,24 @@
+"""Paper §5.7 Eq. 38: CR(n) = c1 * n^c2 power-law fit (paper: c2 ~ 0.15
+for hybrid) + size-quartile means."""
+
+import numpy as np
+
+from benchmarks.common import all_cycles, csv_row
+
+
+def run() -> list:
+    cs = all_cycles()["hybrid"]
+    x = np.log([c.n_chars for c in cs])
+    y = np.log([c.cr for c in cs])
+    A = np.stack([x, np.ones_like(x)], 1)
+    (c2, logc1), *_ = np.linalg.lstsq(A, y, rcond=None)
+    rows = [csv_row("eq38_cr_powerlaw", 0,
+                    f"c1={np.exp(logc1):.2f} c2={c2:.3f}")]
+    order = np.argsort([c.n_chars for c in cs])
+    qs = np.array_split(order, 4)
+    for i, q in enumerate(qs):
+        mean_cr = np.mean([cs[j].cr for j in q])
+        mean_n = np.mean([cs[j].n_chars for j in q])
+        rows.append(csv_row(f"scaling_quartile_{i+1}", 0,
+                            f"mean_chars={mean_n:.0f} mean_cr={mean_cr:.2f}x"))
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Table 6 / §5.2: space savings by method + the SS(n)=a*ln(n)+b
+logarithmic fit (Eq. 35; paper: a~2.5, b~60, R^2=0.94 for hybrid)."""
+
+import numpy as np
+
+from benchmarks.common import METHODS, all_cycles, csv_row, stats
+
+
+def run() -> list:
+    rows = []
+    by_method = all_cycles()
+    for m in METHODS:
+        st = stats(c.space_savings for c in by_method[m])
+        rows.append(csv_row(
+            f"table6_ss_{m}", 0,
+            f"mean={st['mean']:.1f}% min={st['min']:.1f}% max={st['max']:.1f}%"))
+    # Eq. 35 fit on the hybrid method
+    cs = by_method["hybrid"]
+    x = np.log([c.n_chars for c in cs])
+    y = np.array([c.space_savings for c in cs])
+    A = np.stack([x, np.ones_like(x)], 1)
+    (a, b), *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = A @ np.array([a, b])
+    r2 = 1 - ((y - pred) ** 2).sum() / ((y - y.mean()) ** 2).sum()
+    rows.append(csv_row("eq35_hybrid_ss_logfit", 0,
+                        f"a={a:.2f} b={b:.1f} R2={r2:.3f}"))
+    return rows

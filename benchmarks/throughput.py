@@ -1,0 +1,19 @@
+"""Paper Table 7 / §5.4: compression and decompression throughput (MB/s).
+Reference: zstd 10.7/132.9, token 4.6/8.5, hybrid 3.3/2.3 MB/s on the
+paper's (unspecified) host — same order of magnitude expected here."""
+
+from benchmarks.common import METHODS, all_cycles, csv_row, stats
+
+
+def run() -> list:
+    rows = []
+    by_method = all_cycles()
+    for m in METHODS:
+        cs = by_method[m]
+        tot_mb = sum(c.n_bytes for c in cs) / 1e6
+        comp = tot_mb / sum(c.t_compress_s for c in cs)
+        decomp = tot_mb / sum(c.t_decompress_s for c in cs)
+        us = 1e6 * sum(c.t_compress_s for c in cs) / len(cs)
+        rows.append(csv_row(f"table7_throughput_{m}", us,
+                            f"compress={comp:.1f}MB/s decompress={decomp:.1f}MB/s"))
+    return rows

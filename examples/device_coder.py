@@ -1,0 +1,35 @@
+#!/usr/bin/env python
+"""The TPU-native stage: batch-compress token streams with the JAX
+interleaved rANS coder and validate losslessness (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/device_coder.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.rans import tokens_compress_device, tokens_decompress_device
+from repro.data.corpus import generate_corpus
+from repro.tokenizer.vocab import default_tokenizer
+
+
+def main() -> None:
+    tok = default_tokenizer()
+    prompts = generate_corpus(8, seed=2)
+    streams = [np.asarray(tok.encode(p.text)) for p in prompts]
+    raw = sum(len(p.text.encode()) for p in prompts)
+    t0 = time.perf_counter()
+    blobs = [tokens_compress_device(s) for s in streams]
+    dt = time.perf_counter() - t0
+    for s, b in zip(streams, blobs):
+        assert np.array_equal(tokens_decompress_device(b).astype(np.int64), s)
+    comp = sum(len(b) for b in blobs)
+    print(f"device rANS coder: {raw/1e6:.2f}MB text -> {comp/1e6:.2f}MB "
+          f"(CR {raw/comp:.2f}x) in {dt:.1f}s [CPU-backend proxy; "
+          f"lanes vectorize on the TPU VPU]")
+    print("losslessness: verified on all streams")
+
+
+if __name__ == "__main__":
+    main()

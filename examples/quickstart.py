@@ -1,0 +1,35 @@
+#!/usr/bin/env python
+"""Quickstart: LoPace's three compression methods on a real prompt.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import AdaptiveCompressor, PromptCompressor
+from repro.core.entropy import bits_per_char, shannon_entropy, theoretical_cr
+from repro.data.corpus import generate_corpus
+from repro.tokenizer.vocab import default_tokenizer
+
+
+def main() -> None:
+    tok = default_tokenizer()
+    prompt = generate_corpus(8, seed=42)[3].text
+    raw = len(prompt.encode("utf-8"))
+    print(f"prompt: {len(prompt)} chars / {raw} bytes "
+          f"(H={shannon_entropy(prompt):.2f} bits/char, "
+          f"order-0 bound {theoretical_cr(prompt):.2f}x)\n")
+
+    print(f"{'method':8s} {'bytes':>9s} {'CR':>7s} {'savings':>8s} {'BPC':>6s} lossless")
+    for method in ("zstd", "token", "hybrid"):
+        pc = PromptCompressor(tok, method=method, level=15)
+        blob = pc.compress(prompt)
+        ok = pc.decompress(blob) == prompt
+        print(f"{method:8s} {len(blob):9d} {raw/len(blob):6.2f}x "
+              f"{100*(1-len(blob)/raw):7.1f}% {bits_per_char(prompt, len(blob)):6.2f} {ok}")
+
+    ac = AdaptiveCompressor(tok)
+    choice = ac.choose(prompt)
+    print(f"\nadaptive selection -> {choice.method} ({choice.reason})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: LoPace (lossless prompt compression engine) as a first-class
+storage layer of a multi-pod JAX LM training/serving framework.
+
+See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+"""
+
+__version__ = "1.0.0"

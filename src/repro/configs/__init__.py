@@ -1,0 +1,9 @@
+"""Per-architecture configs (assignment pool) + registry."""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, count_params, active_params
+from repro.configs.registry import ARCH_IDS, SHAPES, ShapeSpec, all_configs, cells, get_config
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "count_params", "active_params",
+    "ARCH_IDS", "SHAPES", "ShapeSpec", "all_configs", "cells", "get_config",
+]

@@ -1,0 +1,161 @@
+"""ModelConfig: the single declarative description every architecture in
+the pool reduces to.  Configs are frozen dataclasses; reduced smoke
+variants are derived with `.smoke()`."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0  # per-expert hidden size
+    router_softcap: float = 0.0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention dims (DeepSeek-V2 / MiniCPM3)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # temporal-mixer pattern, repeated every len(block_pattern) layers.
+    # kinds: attn | local | mla | rglru | mlstm | slstm
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # attention details
+    window: int = 0                 # local-attention window (kind "local")
+    attn_logit_softcap: float = 0.0  # gemma2 attention softcap
+    final_logit_softcap: float = 0.0  # gemma2 output softcap
+    rope_base: float = 10_000.0
+    pos_embedding: str = "rope"     # rope | sinusoidal | none
+
+    # channel mixer
+    ffn_kind: str = "swiglu"        # swiglu | geglu | gelu | none
+    moe: Optional[MoEConfig] = None
+
+    mla: Optional[MLAConfig] = None
+
+    # norms / embeddings
+    norm_style: str = "rmsnorm"     # rmsnorm | rmsnorm_unit | layernorm
+    norm_eps: float = 1e-6
+    post_block_norms: bool = False  # gemma2 pre+post sandwich norms
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False  # gemma: embed * sqrt(d_model)
+
+    # recurrent dims
+    rnn_width: int = 0              # RG-LRU width (0 -> d_model)
+    conv_width: int = 4             # temporal conv in griffin/xlstm blocks
+
+    # modality frontend: token | audio_stub | vision_stub
+    frontend: str = "token"
+    n_patches: int = 576            # vision_stub prefix length
+
+    # numerics
+    param_dtype: str = "float32"
+    activation_dtype: str = "bfloat16"
+    kv_cache_dtype: str = "bfloat16"   # "int8" -> quantized KV (KIVI-style)
+
+    # which shapes this arch supports (DESIGN.md §Arch-applicability)
+    supports_long_context: bool = False
+
+    # family tag from the assignment table: moe|ssm|hybrid|dense|audio|vlm
+    family: str = "dense"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.rnn_width == 0:
+            object.__setattr__(self, "rnn_width", self.d_model)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0
+
+    @property
+    def period(self) -> int:
+        return len(self.block_pattern)
+
+    def kind_of_layer(self, i: int) -> str:
+        return self.block_pattern[i % self.period]
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        moe = None
+        if self.moe is not None:
+            moe = replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                n_shared=min(self.moe.n_shared, 1),
+                d_ff_expert=min(self.moe.d_ff_expert or 64, 64),
+            )
+        mla = None
+        if self.mla is not None:
+            mla = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                            qk_nope_head_dim=8, qk_rope_head_dim=4, v_head_dim=8)
+        return replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=2 * self.period,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=16,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=512,
+            window=min(self.window, 32) if self.window else 0,
+            rnn_width=64 if self.rnn_width else 0,
+            moe=moe,
+            mla=mla,
+            n_patches=8,
+        )
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count via shape-only tracing of init_params
+    (no allocation)."""
+    import jax
+
+    from repro.models.transformer import init_params
+
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), "uint32"))
+    return sum(int(_prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: shared + top_k routed experts
+    instead of all routed experts) — the N in MODEL_FLOPS = 6*N_active*D."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    e = cfg.moe
+    f = e.d_ff_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    inactive = (e.n_experts - e.top_k) * per_expert * cfg.n_layers
+    return total - inactive

@@ -1,0 +1,26 @@
+"""gemma2-27b [dense] — 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000; local+global alternating, logit softcaps, pre+post norms
+[arXiv:2408.00118; hf]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256_000,
+    block_pattern=("local", "attn"),   # sliding 4096 alternating with global
+    window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    post_block_norms=True,
+    ffn_kind="geglu",
+    norm_style="rmsnorm_unit",
+    scale_embeddings=True,
+    tie_embeddings=True,
+)

@@ -1,0 +1,23 @@
+"""llava-next-34b [vlm] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000; anyres tiling [hf:llava-hf/llava-v1.6].
+Frontend is a STUB per assignment: input_specs() provides precomputed
+patch embeddings (one 576-patch tile) prepended to the token stream; the
+Yi-34B-style text backbone is exact."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64_000,
+    block_pattern=("attn",),
+    ffn_kind="swiglu",
+    rope_base=5_000_000.0,
+    frontend="vision_stub",
+    n_patches=576,
+)

@@ -1,0 +1,18 @@
+"""The paper's own end-to-end config: a ~100M-param LM trained from the
+LoPace-compressed PromptStore (examples/train_lm.py), demonstrating the
+token-stream storage mode feeding a real training loop."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="lopace-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab_size=8192,   # matches repro.tokenizer.default_tokenizer()
+    block_pattern=("attn",),
+    ffn_kind="swiglu",
+)

@@ -1,0 +1,19 @@
+"""minicpm3-4b [dense] — 62L d_model=2560 40H d_ff=6400 vocab=73448; MLA
+latent attention [hf:openbmb/MiniCPM3-4B]."""
+
+from repro.configs.base import ModelConfig, MLAConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73_448,
+    block_pattern=("mla",),
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256,
+                  qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64),
+    ffn_kind="swiglu",
+)

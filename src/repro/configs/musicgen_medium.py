@@ -1,0 +1,23 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (kv=24) d_ff=6144
+vocab=2048; decoder-only over EnCodec tokens [arXiv:2306.05284].
+Frontend is a STUB per assignment: input_specs() provides precomputed
+frame embeddings; the backbone (layernorm + gelu MLP + sinusoidal
+positions, MusicGen-style) is exact."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    block_pattern=("attn",),
+    ffn_kind="gelu",
+    norm_style="layernorm",
+    pos_embedding="sinusoidal",
+    frontend="audio_stub",
+)

@@ -1,0 +1,24 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000; RG-LRU + local attention at 2:1 [arXiv:2402.19427; hf]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,                  # 8 full (rglru,rglru,local) periods + 2 rem
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    block_pattern=("rglru", "rglru", "local"),
+    window=2048,
+    ffn_kind="geglu",
+    norm_style="rmsnorm_unit",
+    scale_embeddings=True,
+    tie_embeddings=True,
+    rnn_width=2560,
+    supports_long_context=True,   # bounded window + O(1) recurrent state
+)

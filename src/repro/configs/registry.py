@@ -1,0 +1,85 @@
+"""Architecture registry: `get_config(arch_id)` + the assigned shape grid.
+
+Shapes (assignment):
+  train_4k     seq_len=4096    global_batch=256   (train_step)
+  prefill_32k  seq_len=32768   global_batch=32    (serve prefill forward)
+  decode_32k   seq_len=32768   global_batch=128   (serve_step: 1 new token,
+                                                   KV cache of seq_len)
+  long_500k    seq_len=524288  global_batch=1     (decode; sub-quadratic
+                                                   archs only)
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS = [
+    "deepseek_moe_16b",
+    "dbrx_132b",
+    "xlstm_1_3b",
+    "recurrentgemma_2b",
+    "minicpm3_4b",
+    "gemma_7b",
+    "gemma2_27b",
+    "internlm2_20b",
+    "musicgen_medium",
+    "llava_next_34b",
+]
+
+# canonical ids from the assignment (dash form) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+ALIASES.update({"xlstm-1.3b": "xlstm_1_3b", "minicpm3-4b": "minicpm3_4b",
+                "dbrx-132b": "dbrx_132b", "deepseek-moe-16b": "deepseek_moe_16b",
+                "recurrentgemma-2b": "recurrentgemma_2b", "gemma-7b": "gemma_7b",
+                "gemma2-27b": "gemma2_27b", "internlm2-20b": "internlm2_20b",
+                "musicgen-medium": "musicgen_medium",
+                "llava-next-34b": "llava_next_34b"})
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch).replace("-", "_")
+    if mod_name not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def cells(include_skipped: bool = False) -> List[Tuple[str, str, str]]:
+    """All (arch, shape, status) cells of the assignment grid.
+    status: "run" or "skip:<reason>"."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            status = "run"
+            if shape.name == "long_500k" and not cfg.supports_long_context:
+                status = ("skip:full-attention arch — 512k dense KV is "
+                          "quadratic prefill; no windowing mechanism")
+            out.append((arch, shape.name, status))
+    if include_skipped:
+        return out
+    return [c for c in out if c[2] == "run"]

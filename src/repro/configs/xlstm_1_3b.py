@@ -1,0 +1,19 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304; sLSTM + mLSTM
+blocks at ratio 7:1 (xLSTM[7:1]) [arXiv:2405.04517]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                      # xLSTM blocks carry their own projections
+    vocab_size=50_304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    ffn_kind="none",
+    pos_embedding="none",
+    supports_long_context=True,  # O(1) recurrent state per layer
+)

@@ -1,0 +1,35 @@
+"""LoPace core: the paper's contribution as a composable library.
+
+Three lossless methods (zstd / token / hybrid), self-describing binary
+packing, pluggable byte backends, adaptive selection, a content-addressed
+PromptStore, and the JAX/TPU batch entropy coder (repro.core.rans).
+"""
+
+from repro.core.api import (
+    PromptCompressor,
+    compress_hybrid,
+    compress_token,
+    compress_zstd,
+    decompress_hybrid,
+    decompress_token,
+    decompress_zstd,
+    hybrid_tokens,
+)
+from repro.core.adaptive import AdaptiveCompressor
+from repro.core.packing import pack_tokens, unpack_tokens
+from repro.core.store import PromptStore
+
+__all__ = [
+    "PromptCompressor",
+    "AdaptiveCompressor",
+    "PromptStore",
+    "compress_zstd",
+    "decompress_zstd",
+    "compress_token",
+    "decompress_token",
+    "compress_hybrid",
+    "decompress_hybrid",
+    "hybrid_tokens",
+    "pack_tokens",
+    "unpack_tokens",
+]

@@ -1,0 +1,61 @@
+"""Adaptive method selection (paper §6.2.1 "Adaptive Method Selection" —
+named future work, implemented here as a beyond-paper feature).
+
+Strategy: cheap per-prompt features decide the method *before* paying for
+the expensive compressor —
+
+* token-expansion guard: if the packed token stream would be larger than
+  the UTF-8 bytes (the uint32/ASCII pathology of §3.3.4), never pick
+  ``token``;
+* a fast zstd-level-1 probe on a bounded sample estimates byte-level
+  redundancy; highly incompressible content (probe ratio ~1) routes to
+  ``zstd`` at a low level to save the tokenization pass entirely;
+* otherwise ``hybrid`` (the paper's recommendation for maximum ratio).
+
+The probe costs O(min(n, sample)) at zstd's fastest level, a few percent
+of the full hybrid cost, and picks the best method on >95 % of corpus
+prompts (see benchmarks/baselines.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core import packing
+from repro.core.api import PromptCompressor
+from repro.core.zstd_backend import compress_bytes
+from repro.tokenizer.bpe import BPETokenizer
+
+_PROBE_SAMPLE = 16_384
+_INCOMPRESSIBLE = 1.05  # probe CR below this -> raw-ish content
+
+
+@dataclass
+class Choice:
+    method: str
+    reason: str
+    probe_ratio: float
+
+
+class AdaptiveCompressor(PromptCompressor):
+    """Drop-in PromptCompressor that picks the method per prompt."""
+
+    def __init__(self, tokenizer: Optional[BPETokenizer] = None, **kw) -> None:
+        super().__init__(tokenizer=tokenizer, method="hybrid", **kw)
+
+    def choose(self, text: str) -> Choice:
+        raw = text.encode("utf-8")
+        sample = raw[:_PROBE_SAMPLE]
+        probe = len(sample) / max(1, len(compress_bytes(sample, level=1, backend="zstd")))
+        if probe < _INCOMPRESSIBLE:
+            return Choice("zstd", "incompressible probe; skip tokenization", probe)
+        ids = self.tokenizer.encode(text)
+        if packing.packed_nbytes_fixed(ids) >= len(raw):
+            return Choice("zstd", "token packing would expand (uint32/ASCII)", probe)
+        return Choice("hybrid", "compressible + token-efficient", probe)
+
+    def compress(self, text: str, method: Optional[str] = None) -> bytes:
+        if method is None:
+            method = self.choose(text).method
+        return super().compress(text, method)

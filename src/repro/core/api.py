@@ -1,0 +1,238 @@
+"""LoPace public API: the paper's three compression methods plus the
+production frame format used by the PromptStore and the data pipeline.
+
+Paper-exact payloads (Algorithms 1 and 2; used by the benchmark suite so
+measured sizes match the paper's definitions bit-for-bit):
+
+    zstd   : C_zstd(utf8(T))
+    token  : [format_byte | packed(τ(T))]
+    hybrid : C_zstd([format_byte | packed(τ(T))])
+
+Production frames wrap a payload with a 14-byte self-describing header
+(magic, version, method, backend, level, packing scheme, tokenizer
+fingerprint) so stored blobs can always be decoded — the tokenizer
+versioning safeguard of §8.4.1 #1.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import struct
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core import packing
+from repro.core.zstd_backend import BACKENDS, DEFAULT_LEVEL, compress_bytes, decompress_bytes
+from repro.tokenizer.bpe import BPETokenizer
+
+MAGIC = b"LP"
+VERSION = 1
+
+METHODS = ("zstd", "token", "hybrid")
+_METHOD_ID = {m: i for i, m in enumerate(METHODS)}
+_BACKEND_IDS = {name: i for i, name in enumerate(sorted(BACKENDS))}
+_BACKEND_NAMES = {i: name for name, i in _BACKEND_IDS.items()}
+_SCHEME_IDS = {"fixed": 0, "varint": 1, "delta-varint": 2}
+_SCHEME_NAMES = {v: k for k, v in _SCHEME_IDS.items()}
+
+
+# ---------------------------------------------------------------------------
+# Paper-exact method functions
+# ---------------------------------------------------------------------------
+
+
+def compress_zstd(text: str, level: int = DEFAULT_LEVEL, backend: str = "zstd") -> bytes:
+    """Method 1 (§3.2): byte-level dictionary compression of UTF-8 text."""
+    return compress_bytes(text.encode("utf-8"), level=level, backend=backend)
+
+
+def decompress_zstd(payload: bytes, backend: str = "zstd") -> str:
+    return decompress_bytes(payload, backend=backend).decode("utf-8")
+
+
+def compress_token(text: str, tokenizer: BPETokenizer, scheme: str = "fixed") -> bytes:
+    """Method 2 (§3.3): BPE tokenize + binary pack (format byte included)."""
+    return packing.pack_tokens(tokenizer.encode(text), scheme=scheme)
+
+
+def decompress_token(payload: bytes, tokenizer: BPETokenizer) -> str:
+    return tokenizer.decode(packing.unpack_tokens(payload))
+
+
+def compress_hybrid(
+    text: str,
+    tokenizer: BPETokenizer,
+    level: int = DEFAULT_LEVEL,
+    backend: str = "zstd",
+    scheme: str = "fixed",
+) -> bytes:
+    """Method 3 (§3.4, Algorithm 1): C_zstd(P(τ(T)))."""
+    return compress_bytes(
+        packing.pack_tokens(tokenizer.encode(text), scheme=scheme),
+        level=level,
+        backend=backend,
+    )
+
+
+def decompress_hybrid(payload: bytes, tokenizer: BPETokenizer, backend: str = "zstd") -> str:
+    """Algorithm 2: τ⁻¹(P⁻¹(C_zstd⁻¹(payload)))."""
+    return tokenizer.decode(packing.unpack_tokens(decompress_bytes(payload, backend=backend)))
+
+
+def hybrid_tokens(payload: bytes, backend: str = "zstd") -> np.ndarray:
+    """Token-stream storage mode (§8.4.2 #10): recover token ids WITHOUT
+    detokenization — the training/serving pipeline consumes these directly."""
+    return packing.unpack_tokens(decompress_bytes(payload, backend=backend))
+
+
+# ---------------------------------------------------------------------------
+# Production frame
+# ---------------------------------------------------------------------------
+
+_HEADER = struct.Struct("<2sBBBBB8s")  # magic, ver, method, backend, level, scheme, tokfp
+
+
+@dataclass(frozen=True)
+class FrameInfo:
+    method: str
+    backend: str
+    level: int
+    scheme: str
+    tokenizer_fp: bytes
+    payload: bytes
+
+
+def _tok_fp(tokenizer: Optional[BPETokenizer]) -> bytes:
+    if tokenizer is None:
+        return b"\x00" * 8
+    return bytes.fromhex(tokenizer.fingerprint())[:8]
+
+
+def parse_frame(blob: bytes) -> FrameInfo:
+    if len(blob) < _HEADER.size or blob[:2] != MAGIC:
+        raise ValueError("not a LoPace frame")
+    magic, ver, mid, bid, level, sid, fp = _HEADER.unpack_from(blob, 0)
+    if ver != VERSION:
+        raise ValueError(f"unsupported LoPace frame version {ver}")
+    return FrameInfo(
+        method=METHODS[mid],
+        backend=_BACKEND_NAMES[bid],
+        level=level,
+        scheme=_SCHEME_NAMES[sid],
+        tokenizer_fp=fp,
+        payload=blob[_HEADER.size:],
+    )
+
+
+class PromptCompressor:
+    """The engine of the paper: one instance, three methods, lossless.
+
+    Cross-instance compatibility (§6.2.2): any instance constructed with
+    the same tokenizer decodes any other instance's output; frames carry
+    the tokenizer fingerprint and decompress refuses a mismatch instead
+    of corrupting data.
+    """
+
+    def __init__(
+        self,
+        tokenizer: Optional[BPETokenizer] = None,
+        method: str = "hybrid",
+        level: int = DEFAULT_LEVEL,
+        backend: str = "zstd",
+        scheme: str = "fixed",
+    ) -> None:
+        if method not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        if scheme not in _SCHEME_IDS:
+            raise ValueError(f"unknown packing scheme {scheme!r}")
+        if method in ("token", "hybrid") and tokenizer is None:
+            from repro.tokenizer.vocab import default_tokenizer
+
+            tokenizer = default_tokenizer()
+        self.tokenizer = tokenizer
+        self.method = method
+        self.level = level
+        self.backend = backend
+        self.scheme = scheme
+
+    # -- raw (paper-exact) ------------------------------------------------
+
+    def compress_raw(self, text: str, method: Optional[str] = None) -> bytes:
+        method = method or self.method
+        if method == "zstd":
+            return compress_zstd(text, self.level, self.backend)
+        if method == "token":
+            return compress_token(text, self.tokenizer, self.scheme)
+        return compress_hybrid(text, self.tokenizer, self.level, self.backend, self.scheme)
+
+    def decompress_raw(self, payload: bytes, method: Optional[str] = None) -> str:
+        method = method or self.method
+        if method == "zstd":
+            return decompress_zstd(payload, self.backend)
+        if method == "token":
+            return decompress_token(payload, self.tokenizer)
+        return decompress_hybrid(payload, self.tokenizer, self.backend)
+
+    # -- framed (production) ------------------------------------------------
+
+    def compress(self, text: str, method: Optional[str] = None) -> bytes:
+        method = method or self.method
+        payload = self.compress_raw(text, method)
+        header = _HEADER.pack(
+            MAGIC,
+            VERSION,
+            _METHOD_ID[method],
+            _BACKEND_IDS[self.backend],
+            self.level & 0xFF,
+            _SCHEME_IDS[self.scheme],
+            _tok_fp(self.tokenizer if method != "zstd" else None),
+        )
+        return header + payload
+
+    def decompress(self, blob: bytes) -> str:
+        info = parse_frame(blob)
+        if info.method != "zstd":
+            if self.tokenizer is None:
+                raise ValueError("frame needs a tokenizer but none configured")
+            if info.tokenizer_fp != _tok_fp(self.tokenizer):
+                raise ValueError(
+                    "tokenizer fingerprint mismatch: payload was compressed with a "
+                    "different vocabulary (paper §8.4.1 versioning safeguard)"
+                )
+        if info.method == "zstd":
+            return decompress_zstd(info.payload, info.backend)
+        if info.method == "token":
+            return decompress_token(info.payload, self.tokenizer)
+        return decompress_hybrid(info.payload, self.tokenizer, info.backend)
+
+    def tokens(self, blob: bytes) -> np.ndarray:
+        """Token-stream mode on a framed blob (no detokenization)."""
+        info = parse_frame(blob)
+        if info.method == "zstd":
+            return np.asarray(self.tokenizer.encode(decompress_zstd(info.payload, info.backend)),
+                              dtype=np.uint32)
+        if info.method == "token":
+            return packing.unpack_tokens(info.payload)
+        return hybrid_tokens(info.payload, info.backend)
+
+    # -- verification (§3.5.2) ---------------------------------------------
+
+    def verify(self, text: str, method: Optional[str] = None) -> dict:
+        """Compress + decompress + the paper's three-way lossless check."""
+        blob = self.compress(text, method)
+        rt = self.decompress(blob)
+        exact = rt == text
+        h0 = hashlib.sha256(text.encode("utf-8")).hexdigest()
+        h1 = hashlib.sha256(rt.encode("utf-8")).hexdigest()
+        n_err = sum(a != b for a, b in zip(text, rt)) + abs(len(text) - len(rt))
+        return {
+            "exact_match": exact,
+            "sha256_match": h0 == h1,
+            "reconstruction_errors": n_err,
+            "original_bytes": len(text.encode("utf-8")),
+            "compressed_bytes": len(blob),
+        }

@@ -1,0 +1,133 @@
+"""Our own LZ77 codec ("repro-lz") — the dictionary-coding substrate the
+paper's Zstd stage is built from (§3.2.2: ``C_zstd = FSE(LZ77(T, W, L))``).
+
+The wire format is LZ4-block-style: greedy hash-table match finding,
+min-match 4, 64 KiB window, sequences of
+
+    [token: litlen<<4 | (matchlen-4)] [litlen ext*] [literals]
+    [offset u16le] [matchlen ext*]
+
+with a final literals-only sequence.  Pure Python + slice tricks; it exists
+so the framework owns a complete compression stack end-to-end (the
+``zstandard`` C library remains the paper-faithful default backend, this is
+the from-scratch baseline and the feeder for the rANS entropy stage).
+"""
+
+from __future__ import annotations
+
+_MIN_MATCH = 4
+_WINDOW = 0xFFFF  # 64 KiB - 1, max encodable offset
+_HASH_MASK = (1 << 20) - 1
+
+
+def _ext_len(value: int) -> bytes:
+    """LZ4-style length extension: 255-run + remainder."""
+    out = bytearray()
+    while value >= 255:
+        out.append(255)
+        value -= 255
+    out.append(value)
+    return bytes(out)
+
+
+def _match_len(data: bytes, a: int, b: int, n: int) -> int:
+    """Length of the common run data[a:] == data[b:] (a < b), capped at n-b."""
+    l = 0
+    step = 64
+    while b + l + step <= n and data[a + l : a + l + step] == data[b + l : b + l + step]:
+        l += step
+    while b + l < n and data[a + l] == data[b + l]:
+        l += 1
+    return l
+
+
+def lz_compress(data: bytes) -> bytes:
+    """Greedy single-pass LZ77; returns self-contained block."""
+    n = len(data)
+    out = bytearray()
+    if n == 0:
+        return bytes(out)
+    table: dict = {}
+    i = 0
+    lit_start = 0
+    # leave the last MIN_MATCH bytes as literals (simplifies the tail)
+    limit = n - _MIN_MATCH
+    while i <= limit:
+        key = data[i : i + _MIN_MATCH]
+        cand = table.get(key)
+        table[key] = i
+        if cand is not None and i - cand <= _WINDOW:
+            mlen = _match_len(data, cand, i, n)
+            if mlen >= _MIN_MATCH:
+                lit_len = i - lit_start
+                offset = i - cand
+                tok_lit = min(lit_len, 15)
+                tok_match = min(mlen - _MIN_MATCH, 15)
+                out.append((tok_lit << 4) | tok_match)
+                if tok_lit == 15:
+                    out += _ext_len(lit_len - 15)
+                out += data[lit_start:i]
+                out.append(offset & 0xFF)
+                out.append(offset >> 8)
+                if tok_match == 15:
+                    out += _ext_len(mlen - _MIN_MATCH - 15)
+                # seed the table sparsely inside the match (speed/ratio balance)
+                end = i + mlen
+                for j in range(i + 1, min(end, limit), 7):
+                    table[data[j : j + _MIN_MATCH]] = j
+                i = end
+                lit_start = i
+                continue
+        i += 1
+    # final literals-only sequence
+    lit_len = n - lit_start
+    tok_lit = min(lit_len, 15)
+    out.append(tok_lit << 4)
+    if tok_lit == 15:
+        out += _ext_len(lit_len - 15)
+    out += data[lit_start:n]
+    return bytes(out)
+
+
+def lz_decompress(comp: bytes) -> bytes:
+    out = bytearray()
+    i, n = 0, len(comp)
+    if n == 0:
+        return b""
+    while i < n:
+        token = comp[i]
+        i += 1
+        lit_len = token >> 4
+        if lit_len == 15:
+            while True:
+                b = comp[i]
+                i += 1
+                lit_len += b
+                if b != 255:
+                    break
+        if lit_len:
+            out += comp[i : i + lit_len]
+            i += lit_len
+        if i >= n:  # final sequence: literals only
+            break
+        offset = comp[i] | (comp[i + 1] << 8)
+        i += 2
+        mlen = (token & 0xF) + _MIN_MATCH
+        if (token & 0xF) == 15:
+            while True:
+                b = comp[i]
+                i += 1
+                mlen += b
+                if b != 255:
+                    break
+        start = len(out) - offset
+        if start < 0:
+            raise ValueError("corrupt LZ stream: offset before start")
+        if offset >= mlen:
+            out += out[start : start + mlen]
+        else:
+            # overlapping copy: the pattern repeats with period `offset`
+            seg = bytes(out[start:])
+            reps = mlen // offset + 1
+            out += (seg * reps)[:mlen]
+    return bytes(out)

@@ -1,0 +1,175 @@
+"""Binary packing of token-id streams (paper §3.3.3, Algorithms 1–2).
+
+Paper-faithful formats
+----------------------
+``0x00``  uint16 little-endian fixed width (all ids <= 65535)
+``0x01``  uint32 little-endian fixed width
+
+Beyond-paper formats (paper §8.4.2 future work #1/#13, each selectable and
+benchmarked separately; the format byte keeps every payload self-describing
+exactly as the paper's scheme does)
+----------------------------------------------------------------------
+``0x02``  LEB128 varint
+``0x03``  delta-zigzag LEB128 varint (exploits local id correlation)
+
+All packers are bijective on sequences of non-negative ids < 2**32, which
+is what the lossless proof of §3.5 requires of ``P``/``P^-1``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import numpy as np
+
+FMT_U16 = 0x00
+FMT_U32 = 0x01
+FMT_VARINT = 0x02
+FMT_DELTA_VARINT = 0x03
+
+_FIXED = {FMT_U16: np.uint16, FMT_U32: np.uint32}
+
+TokenSeq = Union[Sequence[int], np.ndarray]
+
+
+def _as_u32(ids: TokenSeq) -> np.ndarray:
+    arr = np.asarray(ids)
+    if arr.size and (arr.min() < 0 or arr.max() > 0xFFFFFFFF):
+        raise ValueError("token ids must be in [0, 2**32)")
+    return arr.astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-width (paper Algorithm 1 packing decision, Eq. 7)
+# ---------------------------------------------------------------------------
+
+
+def pack_fixed(ids: TokenSeq) -> bytes:
+    arr = _as_u32(ids)
+    if arr.size == 0 or int(arr.max()) <= 0xFFFF:
+        return bytes([FMT_U16]) + arr.astype("<u2").tobytes()
+    return bytes([FMT_U32]) + arr.astype("<u4").tobytes()
+
+
+# ---------------------------------------------------------------------------
+# LEB128 varint (+ delta-zigzag variant)
+# ---------------------------------------------------------------------------
+
+
+def _varint_encode(arr: np.ndarray) -> bytes:
+    """Vectorized LEB128 over a uint64 array."""
+    if arr.size == 0:
+        return b""
+    a = arr.astype(np.uint64)
+    # number of 7-bit groups per value (at least 1)
+    nbits = np.maximum(1, 64 - _clz64(a))
+    ngroups = (nbits + 6) // 7
+    total = int(ngroups.sum())
+    out = np.empty(total, dtype=np.uint8)
+    # offsets of each value's first byte
+    ends = np.cumsum(ngroups)
+    starts = ends - ngroups
+    # scalar loop only over groups via numpy trick: max 5 groups for u32
+    max_g = int(ngroups.max())
+    for g in range(max_g):
+        sel = ngroups > g
+        vals = (a[sel] >> np.uint64(7 * g)) & np.uint64(0x7F)
+        cont = (ngroups[sel] - 1 > g).astype(np.uint8) << 7
+        out[starts[sel] + g] = vals.astype(np.uint8) | cont
+    return out.tobytes()
+
+
+def _clz64(a: np.ndarray) -> np.ndarray:
+    """Count leading zeros of uint64 array (via float64 exponent trick is
+    unsafe for >2**53; use bit-length by successive shifts)."""
+    x = a.copy()
+    n = np.full(a.shape, 64, dtype=np.int64)
+    shift = 32
+    while shift:
+        y = x >> np.uint64(shift)
+        has = y != 0
+        n = np.where(has, n - shift, n)
+        x = np.where(has, y, x)
+        shift //= 2
+    return (n - (x != 0).astype(np.int64)).astype(np.int64)
+
+
+def _varint_decode(data: bytes) -> np.ndarray:
+    buf = np.frombuffer(data, dtype=np.uint8)
+    if buf.size == 0:
+        return np.zeros(0, dtype=np.uint32)
+    is_last = (buf & 0x80) == 0
+    ends = np.flatnonzero(is_last)
+    starts = np.concatenate(([0], ends[:-1] + 1))
+    lengths = ends - starts + 1
+    if lengths.max() > 5:
+        raise ValueError("varint group longer than 5 bytes for u32 stream")
+    vals = np.zeros(len(ends), dtype=np.uint64)
+    max_g = int(lengths.max())
+    for g in range(max_g):
+        sel = lengths > g
+        vals[sel] |= (buf[starts[sel] + g].astype(np.uint64) & np.uint64(0x7F)) << np.uint64(7 * g)
+    return vals.astype(np.uint32)
+
+
+def _zigzag(d: np.ndarray) -> np.ndarray:
+    d64 = d.astype(np.int64)
+    return ((d64 << 1) ^ (d64 >> 63)).astype(np.uint64)
+
+
+def _unzigzag(z: np.ndarray) -> np.ndarray:
+    z64 = z.astype(np.uint64)
+    return ((z64 >> np.uint64(1)) ^ (np.uint64(0) - (z64 & np.uint64(1)))).astype(np.int64)
+
+
+def pack_varint(ids: TokenSeq) -> bytes:
+    return bytes([FMT_VARINT]) + _varint_encode(_as_u32(ids).astype(np.uint64))
+
+
+def pack_delta_varint(ids: TokenSeq) -> bytes:
+    arr = _as_u32(ids).astype(np.int64)
+    deltas = np.diff(arr, prepend=np.int64(0))
+    return bytes([FMT_DELTA_VARINT]) + _varint_encode(_zigzag(deltas))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+PACKERS = {
+    "fixed": pack_fixed,
+    "varint": pack_varint,
+    "delta-varint": pack_delta_varint,
+}
+
+
+def pack_tokens(ids: TokenSeq, scheme: str = "fixed") -> bytes:
+    """Pack a token-id stream; the leading format byte makes the payload
+    self-describing (paper §3.1), so `unpack_tokens` needs no side channel."""
+    try:
+        return PACKERS[scheme](ids)
+    except KeyError:
+        raise ValueError(f"unknown packing scheme {scheme!r}") from None
+
+
+def unpack_tokens(payload: bytes) -> np.ndarray:
+    """Inverse of any packer. Returns uint32 ids."""
+    if not payload:
+        raise ValueError("empty token payload")
+    fmt, body = payload[0], payload[1:]
+    if fmt in _FIXED:
+        width = "<u2" if fmt == FMT_U16 else "<u4"
+        return np.frombuffer(body, dtype=width).astype(np.uint32)
+    if fmt == FMT_VARINT:
+        return _varint_decode(body)
+    if fmt == FMT_DELTA_VARINT:
+        deltas = _unzigzag(_varint_decode(body).astype(np.uint64))
+        return np.cumsum(deltas, dtype=np.int64).astype(np.uint32)
+    raise ValueError(f"unknown packing format byte 0x{fmt:02x}")
+
+
+def packed_nbytes_fixed(ids: TokenSeq) -> int:
+    """Paper Eq. 10 numerator: 1 + k*n without materializing the payload."""
+    arr = _as_u32(ids)
+    k = 2 if (arr.size == 0 or int(arr.max()) <= 0xFFFF) else 4
+    return 1 + k * int(arr.size)

@@ -1,0 +1,231 @@
+"""JAX interleaved rANS — the TPU-native batch entropy coder.
+
+Hardware adaptation (DESIGN.md §4): the paper's entropy stage (FSE inside
+Zstd) is a sequential, branchy CPU loop.  The rANS state recurrence cannot
+be parallelized *within* a stream, but streams are embarrassingly
+parallel, so the TPU formulation is:
+
+* split each token stream round-robin across K interleaved lanes,
+* run all lanes in lockstep with one ``lax.scan`` over vectorized uint32
+  state updates (VPU-friendly: every op is an elementwise u32 op or a
+  2^prob_bits-entry table gather),
+* a 32-bit state with 16-bit renormalization emits **at most one** word
+  per step (x_max = f << (32-pb) >= 2^20 > 2^16 for pb <= 16), so the
+  emit buffer has static shape [K, T] and a host-side compaction recovers
+  the dense stream — no data-dependent shapes anywhere,
+* ``vmap`` over the batch of prompts on top of the lane axis.
+
+Decode is symmetric (at most one word consumed per step) and
+division-free.  All arithmetic is uint32 with the same semantics as the
+python oracle in ``rans_np`` (tests assert stream equivalence).
+
+Alphabet handling: token ids are remapped to a dense alphabet of the
+symbols actually present (stored delta-varint in the header — reusing
+LoPace's own packing), so the slot table stays <= 2^prob_bits regardless
+of vocabulary size.
+"""
+
+from __future__ import annotations
+
+import struct
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.rans_np import normalize_freqs
+
+_STATE_LOW = np.uint32(1 << 16)
+DEFAULT_LANES = 8
+
+
+@partial(jax.jit, static_argnames=("prob_bits",))
+def rans_encode_lanes(symbols, valid, freqs, prob_bits: int = 12):
+    """Encode K lanes in lockstep.
+
+    symbols: [K, T] int32 dense-alphabet ids; valid: [K, T] bool;
+    freqs: [A] uint32 summing to 2**prob_bits.
+    Returns (words [K, T] u32 — junk where ~flag, flags [K, T] bool
+    in *emission order along reversed time*, states [K] u32).
+    """
+    cum = jnp.concatenate([jnp.zeros(1, jnp.uint32), jnp.cumsum(freqs).astype(jnp.uint32)])
+    shift = jnp.uint32(32 - prob_bits)
+    pb = jnp.uint32(prob_bits)
+
+    def lane(sym_l, val_l):
+        def step(x, inp):
+            s, ok = inp
+            f = freqs[s]
+            c = cum[s]
+            x_max = f << shift
+            emit = (x >= x_max) & ok
+            word = jnp.where(emit, x & jnp.uint32(0xFFFF), jnp.uint32(0))
+            x1 = jnp.where(emit, x >> jnp.uint32(16), x)
+            fs = jnp.maximum(f, jnp.uint32(1))  # div-safe on masked steps
+            x2 = ((x1 // fs) << pb) + (x1 % fs) + c
+            return jnp.where(ok, x2, x), (word, emit)
+
+        # encoder walks the symbols back-to-front
+        x_final, (words, flags) = jax.lax.scan(
+            step, jnp.uint32(_STATE_LOW), (sym_l[::-1], val_l[::-1])
+        )
+        return words, flags, x_final
+
+    return jax.vmap(lane)(symbols, valid)
+
+
+@partial(jax.jit, static_argnames=("prob_bits", "n_steps"))
+def rans_decode_lanes(words, n_words, states, n_valid, freqs, prob_bits: int, n_steps: int):
+    """Decode K lanes in lockstep.
+
+    words: [K, W] u32 per-lane streams in emission order (decoder consumes
+    from index n_words-1 downward); states/n_words/n_valid: [K].
+    Returns symbols [K, n_steps] int32 (zeros beyond n_valid).
+    """
+    cum = jnp.concatenate([jnp.zeros(1, jnp.uint32), jnp.cumsum(freqs).astype(jnp.uint32)])
+    slot2sym = jnp.repeat(
+        jnp.arange(freqs.shape[0], dtype=jnp.int32), freqs.astype(jnp.int32),
+        total_repeat_length=1 << prob_bits,
+    )
+    mask = jnp.uint32((1 << prob_bits) - 1)
+    pb = jnp.uint32(prob_bits)
+    W = words.shape[1]
+
+    def lane(words_l, state_l, n_words_l, n_valid_l):
+        def step(carry, t):
+            x, pos = carry
+            ok = t < n_valid_l
+            slot = x & mask
+            s = slot2sym[slot]
+            x1 = freqs[s] * (x >> pb) + slot - cum[s]
+            need = (x1 < _STATE_LOW) & ok
+            safe_pos = jnp.clip(pos, 0, W - 1)
+            x2 = jnp.where(need, (x1 << jnp.uint32(16)) | words_l[safe_pos], x1)
+            pos2 = jnp.where(need, pos - jnp.int32(1), pos)
+            return (jnp.where(ok, x2, x), jnp.where(ok, pos2, pos)), jnp.where(ok, s, 0)
+
+        (_, _), syms = jax.lax.scan(
+            step,
+            (state_l, n_words_l - jnp.int32(1)),
+            jnp.arange(n_steps, dtype=jnp.int32),
+        )
+        return syms
+
+    return jax.vmap(lane)(words, states, n_words, n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Host wrappers: token stream <-> self-contained blob
+# ---------------------------------------------------------------------------
+#
+# blob layout:
+#   u32 n_tokens | u8 prob_bits | u8 lanes | u16 alphabet_size
+#   u32 alpha_len | alphabet ids delta-varint packed (LoPace packing §3.3.3)
+#   freqs          : alphabet_size x u16le  (freq 2**16 impossible: alphabet>=2
+#                    enforced by padding a dummy symbol)
+#   per-lane       : u32 state | u16 n_words
+#   words          : concatenated u16le, per lane in consumption order
+
+
+def _pick_prob_bits(n_present: int) -> int:
+    pb = 12
+    while (1 << pb) < 4 * n_present:
+        pb += 1
+    return min(pb, 16)
+
+
+def _lane_split(ids: np.ndarray, lanes: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Round-robin split into [lanes, T] + validity mask + per-lane counts."""
+    n = ids.size
+    T = max(1, -(-n // lanes))
+    sym = np.zeros((lanes, T), dtype=np.int32)
+    val = np.zeros((lanes, T), dtype=bool)
+    cnt = np.zeros(lanes, dtype=np.int32)
+    for k in range(lanes):
+        lane_ids = ids[k::lanes]
+        sym[k, : lane_ids.size] = lane_ids
+        val[k, : lane_ids.size] = True
+        cnt[k] = lane_ids.size
+    return sym, val, cnt
+
+
+def tokens_compress_device(ids, lanes: int = DEFAULT_LANES) -> bytes:
+    """Compress a token-id stream with the JAX coder. Returns a blob."""
+    ids = np.asarray(ids, dtype=np.int64)
+    if ids.size == 0:
+        return struct.pack("<IBBH", 0, 12, lanes, 0)
+    alphabet, dense = np.unique(ids, return_inverse=True)
+    if alphabet.size == 1:  # degenerate single-symbol stream: pad alphabet
+        alphabet = np.concatenate([alphabet, alphabet[-1:] + 1])
+    n_present = alphabet.size
+    prob_bits = _pick_prob_bits(n_present)
+    counts = np.bincount(dense, minlength=n_present)
+    freqs = normalize_freqs(counts, prob_bits)
+
+    sym, val, _ = _lane_split(dense.astype(np.int32), lanes)
+    words, flags, states = rans_encode_lanes(
+        jnp.asarray(sym), jnp.asarray(val), jnp.asarray(freqs.astype(np.uint32)),
+        prob_bits=prob_bits,
+    )
+    words = np.asarray(words, dtype=np.uint32)
+    flags = np.asarray(flags)
+    states = np.asarray(states, dtype=np.uint32)
+
+    header = struct.pack("<IBBH", ids.size, prob_bits, lanes, n_present)
+    alpha_blob = packing.pack_tokens(alphabet.astype(np.uint32), scheme="delta-varint")
+    parts = [header, struct.pack("<I", len(alpha_blob)), alpha_blob,
+             freqs.astype("<u2").tobytes()]
+    lane_words = []
+    for k in range(lanes):
+        w = words[k][flags[k]].astype(np.uint16)  # dense, in emission order
+        lane_words.append(w)
+        parts.append(struct.pack("<IH", int(states[k]), w.size))
+    for w in lane_words:
+        parts.append(w.astype("<u2").tobytes())
+    return b"".join(parts)
+
+
+def tokens_decompress_device(blob: bytes) -> np.ndarray:
+    n, prob_bits, lanes, n_present = struct.unpack_from("<IBBH", blob, 0)
+    off = 8
+    if n == 0:
+        return np.zeros(0, dtype=np.uint32)
+    (alpha_len,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    alphabet = packing.unpack_tokens(blob[off : off + alpha_len]).astype(np.int64)
+    off += alpha_len
+    freqs = np.frombuffer(blob, dtype="<u2", count=n_present, offset=off).astype(np.uint32)
+    off += 2 * n_present
+    states = np.zeros(lanes, dtype=np.uint32)
+    n_words = np.zeros(lanes, dtype=np.int32)
+    for k in range(lanes):
+        s, w = struct.unpack_from("<IH", blob, off)
+        off += 6
+        states[k], n_words[k] = s, w
+    max_w = max(1, int(n_words.max()))
+    words = np.zeros((lanes, max_w), dtype=np.uint32)
+    for k in range(lanes):
+        w = np.frombuffer(blob, dtype="<u2", count=int(n_words[k]), offset=off)
+        off += 2 * int(n_words[k])
+        words[k, : w.size] = w.astype(np.uint32)
+
+    n_valid = np.array([len(range(k, n, lanes)) for k in range(lanes)], dtype=np.int32)
+    T_sym = max(1, -(-n // lanes))
+    sym = rans_decode_lanes(
+        jnp.asarray(words),
+        jnp.asarray(n_words),
+        jnp.asarray(states),
+        jnp.asarray(n_valid),
+        jnp.asarray(freqs),
+        prob_bits=prob_bits,
+        n_steps=T_sym,
+    )
+    sym = np.asarray(sym)
+    out = np.zeros(n, dtype=np.int64)
+    for k in range(lanes):
+        cnt = int(n_valid[k])
+        out[k::lanes] = sym[k, :cnt]
+    return alphabet[out].astype(np.uint32)

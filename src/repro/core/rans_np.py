@@ -1,0 +1,144 @@
+"""Reference rANS entropy coder (numpy/python, exact-arithmetic oracle).
+
+This is the entropy-coding stage of the paper's model of Zstd
+(``FSE(LZ77(...))`` — FSE is the table-driven cousin of rANS) implemented
+from scratch.  It serves three roles:
+
+1. oracle for the JAX/TPU interleaved coder in ``repro.core.rans``,
+2. entropy stage of the from-scratch ``repro-lzr`` backend
+   (LZ77 -> rANS ~= the paper's LZ77 -> FSE description of Zstd),
+3. order-0 coder over *token ids* for the token-stream storage mode.
+
+Classic 32-bit-state rANS with 16-bit renormalization; python ints make
+the arithmetic exact, numpy handles tables.  Streaming convention: encoder
+walks the symbols in reverse and appends 16-bit words; the serialized
+stream stores those words reversed so the decoder reads forward.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Tuple
+
+import numpy as np
+
+PROB_BITS_DEFAULT = 12
+_STATE_LOW = 1 << 16  # renormalization lower bound
+
+
+def normalize_freqs(counts: np.ndarray, prob_bits: int = PROB_BITS_DEFAULT) -> np.ndarray:
+    """Scale a histogram to sum to 2**prob_bits with every observed symbol
+    keeping frequency >= 1 (largest-remainder apportionment)."""
+    counts = np.asarray(counts, dtype=np.float64)
+    total = counts.sum()
+    target = 1 << prob_bits
+    if total <= 0:
+        raise ValueError("empty histogram")
+    present = counts > 0
+    n_present = int(present.sum())
+    if n_present > target:
+        raise ValueError(f"alphabet has {n_present} symbols > table size {target}")
+    raw = counts * (target / total)
+    freqs = np.floor(raw).astype(np.int64)
+    freqs[present & (freqs == 0)] = 1
+    diff = target - int(freqs.sum())
+    if diff > 0:  # hand out leftovers by largest remainder
+        rema = raw - np.floor(raw)
+        rema[~present] = -1.0
+        order = np.argsort(-rema, kind="stable")
+        freqs[order[:diff]] += 1
+    elif diff < 0:  # take back from the largest entries (keep >= 1)
+        order = np.argsort(-freqs, kind="stable")
+        k = 0
+        while diff < 0:
+            idx = order[k % len(order)]
+            if freqs[idx] > 1:
+                freqs[idx] -= 1
+                diff += 1
+            k += 1
+    assert freqs.sum() == target
+    return freqs.astype(np.uint32)
+
+
+def rans_encode(
+    symbols: np.ndarray, freqs: np.ndarray, prob_bits: int = PROB_BITS_DEFAULT
+) -> Tuple[np.ndarray, int]:
+    """Encode `symbols` under `freqs`; returns (emitted u16 words, state)."""
+    cum = np.concatenate(([0], np.cumsum(freqs.astype(np.int64))))
+    x = _STATE_LOW
+    words = []
+    shift = 16 + 16 - prob_bits  # x_max = freq << shift keeps x < 2**32
+    for s in symbols[::-1]:
+        s = int(s)
+        f = int(freqs[s])
+        if f == 0:
+            raise ValueError(f"symbol {s} has zero frequency")
+        x_max = f << shift
+        while x >= x_max:
+            words.append(x & 0xFFFF)
+            x >>= 16
+        x = ((x // f) << prob_bits) + (x % f) + int(cum[s])
+    return np.array(words, dtype=np.uint16), x
+
+
+def rans_decode(
+    words: np.ndarray, state: int, n: int, freqs: np.ndarray,
+    prob_bits: int = PROB_BITS_DEFAULT,
+) -> np.ndarray:
+    """Inverse of `rans_encode`. `words` in emission order."""
+    cum = np.concatenate(([0], np.cumsum(freqs.astype(np.int64))))
+    # slot -> symbol lookup
+    slot2sym = np.repeat(
+        np.arange(len(freqs), dtype=np.int64), freqs.astype(np.int64)
+    )
+    mask = (1 << prob_bits) - 1
+    x = int(state)
+    pos = len(words) - 1  # consume in reverse emission order
+    out = np.empty(n, dtype=np.int64)
+    for i in range(n):
+        slot = x & mask
+        s = int(slot2sym[slot])
+        out[i] = s
+        x = int(freqs[s]) * (x >> prob_bits) + slot - int(cum[s])
+        while x < _STATE_LOW:
+            if pos < 0:
+                raise ValueError("rANS stream underflow")
+            x = (x << 16) | int(words[pos])
+            pos -= 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Self-contained byte-stream format
+# ---------------------------------------------------------------------------
+#
+#   u32le n_symbols | u8 prob_bits | u16le alphabet_size
+#   freqs: alphabet_size x u16le   | u32le state | u32le n_words | words u16le
+# (words stored reversed so decode reads forward)
+
+
+def rans_compress_bytes(data: bytes, prob_bits: int = PROB_BITS_DEFAULT) -> bytes:
+    symbols = np.frombuffer(data, dtype=np.uint8)
+    if symbols.size == 0:
+        return struct.pack("<IBH", 0, prob_bits, 0)
+    counts = np.bincount(symbols, minlength=256)
+    freqs = normalize_freqs(counts, prob_bits)
+    words, state = rans_encode(symbols, freqs, prob_bits)
+    header = struct.pack("<IBH", symbols.size, prob_bits, 256)
+    table = freqs.astype("<u2").tobytes()
+    tail = struct.pack("<II", state, words.size) + words[::-1].astype("<u2").tobytes()
+    return header + table + tail
+
+
+def rans_decompress_bytes(blob: bytes) -> bytes:
+    n, prob_bits, asize = struct.unpack_from("<IBH", blob, 0)
+    off = 7
+    if n == 0:
+        return b""
+    freqs = np.frombuffer(blob, dtype="<u2", count=asize, offset=off).astype(np.uint32)
+    off += 2 * asize
+    state, n_words = struct.unpack_from("<II", blob, off)
+    off += 8
+    words = np.frombuffer(blob, dtype="<u2", count=n_words, offset=off)[::-1]
+    out = rans_decode(words, state, n, freqs, prob_bits)
+    return out.astype(np.uint8).tobytes()

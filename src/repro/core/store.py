@@ -1,0 +1,146 @@
+"""PromptStore: the database-integration layer of the paper (§6.2.3).
+
+An append-only, content-addressed store of LoPace frames:
+
+    <root>/data.bin     concatenated frames
+    <root>/index.jsonl  one record per frame: key (sha256 of the text),
+                        offset, length, method, n_chars, tokenizer fp
+
+Properties the paper calls for:
+* application-level compression before storage (§2.4),
+* searchable token ids without full decompression (§6.2.3 — `get_tokens`),
+* integrity: every get() verifies the content hash (§4.6 discipline),
+* durability: appends are flushed+fsynced before the index line is
+  published; a torn final record is detected and ignored on open.
+
+This is the storage substrate the training data pipeline and the serving
+prompt cache are built on.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.api import PromptCompressor
+
+
+def _sha(text: str) -> str:
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()
+
+
+class PromptStore:
+    def __init__(self, root: str | Path, compressor: Optional[PromptCompressor] = None):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.compressor = compressor or PromptCompressor()
+        self._data_path = self.root / "data.bin"
+        self._index_path = self.root / "index.jsonl"
+        self._index: Dict[str, dict] = {}
+        self._load_index()
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _load_index(self) -> None:
+        if not self._index_path.exists():
+            return
+        data_size = self._data_path.stat().st_size if self._data_path.exists() else 0
+        for line in self._index_path.read_text().splitlines():
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                break  # torn tail record from a crash; ignore the remainder
+            if rec["offset"] + rec["length"] > data_size:
+                break  # index ahead of data: crashed between data+index write
+            self._index[rec["key"]] = rec
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._index
+
+    def keys(self) -> List[str]:
+        return list(self._index)
+
+    # -- writes --------------------------------------------------------------
+
+    def put(self, text: str, method: Optional[str] = None) -> str:
+        """Compress and store; returns the content key. Idempotent."""
+        key = _sha(text)
+        if key in self._index:
+            return key
+        blob = self.compressor.compress(text, method)
+        with open(self._data_path, "ab") as f:
+            offset = f.tell()
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        rec = {
+            "key": key,
+            "offset": offset,
+            "length": len(blob),
+            "method": method or self.compressor.method,
+            "n_chars": len(text),
+        }
+        with open(self._index_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self._index[key] = rec
+        return key
+
+    def put_many(self, texts: List[str], method: Optional[str] = None) -> List[str]:
+        return [self.put(t, method) for t in texts]
+
+    # -- reads ----------------------------------------------------------------
+
+    def _read_blob(self, key: str) -> bytes:
+        rec = self._index[key]
+        with open(self._data_path, "rb") as f:
+            f.seek(rec["offset"])
+            return f.read(rec["length"])
+
+    def get(self, key: str, verify: bool = True) -> str:
+        text = self.compressor.decompress(self._read_blob(key))
+        if verify and _sha(text) != key:
+            raise ValueError(f"integrity failure for {key}: stored hash mismatch")
+        return text
+
+    def get_tokens(self, key: str) -> np.ndarray:
+        """Token ids without detokenization (token-stream mode, §8.4.2 #10)."""
+        return self.compressor.tokens(self._read_blob(key))
+
+    def iter_tokens(self) -> Iterator[np.ndarray]:
+        for key in self._index:
+            yield self.get_tokens(key)
+
+    # -- ops ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        stored = sum(r["length"] for r in self._index.values())
+        original = sum(r["n_chars"] for r in self._index.values())
+        return {
+            "n_prompts": len(self._index),
+            "stored_bytes": stored,
+            "original_chars": original,
+            "space_savings_pct": 100.0 * (1 - stored / original) if original else 0.0,
+        }
+
+    def verify_all(self) -> dict:
+        """SHA-256 sweep over every record (paper §5.10 robustness check)."""
+        ok = bad = 0
+        for key in self._index:
+            try:
+                self.get(key, verify=True)
+                ok += 1
+            except Exception:
+                bad += 1
+        return {"success": ok, "failure": bad, "total": ok + bad}

@@ -1,0 +1,121 @@
+"""Byte-compression backends.
+
+``zstd``      the paper's backend (zstandard C library, level 1-22,
+              default 15 per §4.5) — paper-faithful path.
+``zstd-dict`` zstd with a trained dictionary (paper §8.4.2 #2 future work).
+``repro-lz``  our own LZ77 (LZ4-style block) — from-scratch substrate.
+``repro-lzr`` our LZ77 + our rANS entropy stage — the paper's own
+              structural model of Zstd (FSE(LZ77(T))) built from scratch.
+``zlib`` / ``bz2`` / ``lzma``  stdlib baselines (paper §8.4.2 #3).
+
+Every backend exposes compress(data, level) / decompress(data) and is
+registered in BACKENDS for the benchmark sweep.
+"""
+
+from __future__ import annotations
+
+import bz2 as _bz2
+import lzma as _lzma
+import zlib as _zlib
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.lz77 import lz_compress, lz_decompress
+from repro.core.rans_np import rans_compress_bytes, rans_decompress_bytes
+
+try:
+    import zstandard as _zstd
+
+    HAVE_ZSTD = True
+except ImportError:  # pragma: no cover - zstandard is present in this env
+    _zstd = None
+    HAVE_ZSTD = False
+
+DEFAULT_LEVEL = 15  # paper §4.5
+
+
+# -- zstd ---------------------------------------------------------------
+
+
+def _zstd_compress(data: bytes, level: int = DEFAULT_LEVEL) -> bytes:
+    if not HAVE_ZSTD:
+        raise RuntimeError("zstandard not available; use backend='repro-lzr'")
+    return _zstd.ZstdCompressor(level=level).compress(data)
+
+
+def _zstd_decompress(data: bytes) -> bytes:
+    return _zstd.ZstdDecompressor().decompress(data)
+
+
+class ZstdDictBackend:
+    """Zstd with a trained dictionary (future-work baseline §8.4.2 #2)."""
+
+    def __init__(self, samples, dict_size: int = 16384, level: int = DEFAULT_LEVEL):
+        if not HAVE_ZSTD:
+            raise RuntimeError("zstandard not available")
+        self._dict = _zstd.train_dictionary(dict_size, [s.encode() if isinstance(s, str) else s for s in samples])
+        self._level = level
+
+    def compress(self, data: bytes, level: Optional[int] = None) -> bytes:
+        c = _zstd.ZstdCompressor(level=level or self._level, dict_data=self._dict)
+        return c.compress(data)
+
+    def decompress(self, data: bytes) -> bytes:
+        return _zstd.ZstdDecompressor(dict_data=self._dict).decompress(data)
+
+
+# -- from-scratch backends ----------------------------------------------
+
+
+def _repro_lz_compress(data: bytes, level: int = 0) -> bytes:
+    return lz_compress(data)
+
+
+def _repro_lzr_compress(data: bytes, level: int = 0) -> bytes:
+    return rans_compress_bytes(lz_compress(data))
+
+
+def _repro_lzr_decompress(data: bytes) -> bytes:
+    return lz_decompress(rans_decompress_bytes(data))
+
+
+# -- stdlib baselines ----------------------------------------------------
+
+
+def _zlib_compress(data: bytes, level: int = 9) -> bytes:
+    return _zlib.compress(data, min(max(level, 0), 9))
+
+
+def _bz2_compress(data: bytes, level: int = 9) -> bytes:
+    return _bz2.compress(data, min(max(level, 1), 9))
+
+
+def _lzma_compress(data: bytes, level: int = 6) -> bytes:
+    return _lzma.compress(data, preset=min(max(level, 0), 9))
+
+
+# -- registry ------------------------------------------------------------
+
+BACKENDS: Dict[str, Tuple[Callable[..., bytes], Callable[[bytes], bytes]]] = {
+    "zstd": (_zstd_compress, _zstd_decompress),
+    "repro-lz": (_repro_lz_compress, lz_decompress),
+    "repro-lzr": (_repro_lzr_compress, _repro_lzr_decompress),
+    "zlib": (_zlib_compress, _zlib.decompress),
+    "bz2": (_bz2_compress, _bz2.decompress),
+    "lzma": (_lzma_compress, _lzma.decompress),
+}
+
+
+def compress_bytes(data: bytes, level: int = DEFAULT_LEVEL, backend: str = "zstd") -> bytes:
+    try:
+        fn = BACKENDS[backend][0]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}") from None
+    return fn(data, level)
+
+
+def decompress_bytes(data: bytes, backend: str = "zstd") -> bytes:
+    try:
+        fn = BACKENDS[backend][1]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}") from None
+    return fn(data)

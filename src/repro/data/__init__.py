@@ -1,0 +1,6 @@
+"""Data substrate: synthetic corpus generation and the sharded,
+LoPace-compressed training data pipeline."""
+
+from repro.data.corpus import Prompt, generate_corpus, corpus_stats
+
+__all__ = ["Prompt", "generate_corpus", "corpus_stats"]

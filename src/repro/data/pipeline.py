@@ -1,0 +1,113 @@
+"""Training data pipeline backed by the LoPace PromptStore.
+
+The corpus lives compressed (hybrid method).  The loader decompresses to
+token ids directly (token-stream storage mode — the paper's §8.4.2 #10),
+packs them into fixed-length example windows, and yields deterministic,
+host-sharded, resumable batches:
+
+* determinism: example order is a seeded permutation of window indices;
+  batch i is a pure function of (seed, step) — restart-safe;
+* host sharding: each data-parallel host takes a strided slice of every
+  global batch (shard_id, num_shards);
+* resume: `state()`/`restore()` round-trip the step counter through the
+  checkpoint `extra` dict (repro.dist.checkpoint).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.store import PromptStore
+from repro.models.transformer import IGNORE_INDEX
+
+
+@dataclass
+class PipelineConfig:
+    seq_len: int = 1024
+    global_batch: int = 8
+    seed: int = 0
+    shard_id: int = 0
+    num_shards: int = 1
+    pad_id: int = 0
+
+
+class TokenPipeline:
+    def __init__(self, store: PromptStore, cfg: PipelineConfig):
+        assert cfg.global_batch % cfg.num_shards == 0
+        self.cfg = cfg
+        # Concatenate every stored prompt's token stream (decompressed via
+        # the token-stream path — never re-tokenized).
+        streams = [np.asarray(t, np.int64) for t in store.iter_tokens()]
+        if not streams:
+            raise ValueError("empty PromptStore")
+        tokens = np.concatenate(streams)
+        n_windows = (tokens.size - 1) // cfg.seq_len
+        if n_windows < 1:
+            raise ValueError("corpus smaller than one window")
+        self._inputs = tokens[: n_windows * cfg.seq_len].reshape(
+            n_windows, cfg.seq_len)
+        self._labels = tokens[1 : n_windows * cfg.seq_len + 1].reshape(
+            n_windows, cfg.seq_len)
+        self.n_windows = n_windows
+        self._step = 0
+
+    # -- determinism / resume -------------------------------------------------
+
+    def state(self) -> Dict[str, int]:
+        return {"step": self._step, "seed": self.cfg.seed}
+
+    def restore(self, state: Dict[str, int]) -> None:
+        assert state["seed"] == self.cfg.seed, "resume with a different seed"
+        self._step = int(state["step"])
+
+    def _order_for_epoch(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.cfg.seed, epoch))
+        return rng.permutation(self.n_windows)
+
+    # -- batches ---------------------------------------------------------------
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Global batch `step` (pure function of step — restart-safe),
+        sliced down to this host's shard."""
+        gb, ns = self.cfg.global_batch, self.cfg.num_shards
+        per_epoch = max(self.n_windows // gb, 1)
+        epoch, pos = divmod(step, per_epoch)
+        order = self._order_for_epoch(epoch)
+        idx = order[(pos * gb) % self.n_windows:][:gb]
+        if idx.size < gb:  # wrap
+            idx = np.concatenate([idx, order[: gb - idx.size]])
+        shard = idx[self.cfg.shard_id::ns]
+        return {"tokens": self._inputs[shard], "labels": self._labels[shard]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self._step)
+        self._step += 1
+        return b
+
+    def with_accum(self, batch: Dict[str, np.ndarray], grad_accum: int
+                   ) -> Dict[str, np.ndarray]:
+        """Reshape [B, S] -> [accum, B/accum, S] for the scan-accum step."""
+        out = {}
+        for k, v in batch.items():
+            b = v.shape[0]
+            assert b % grad_accum == 0
+            out[k] = v.reshape(grad_accum, b // grad_accum, *v.shape[1:])
+        return out
+
+
+def build_store_from_corpus(root, n_prompts: int = 64, seed: int = 0,
+                            method: str = "hybrid") -> PromptStore:
+    """Helper used by examples/tests: synthesize corpus -> compress -> store."""
+    from repro.core.api import PromptCompressor
+    from repro.data.corpus import generate_corpus
+    from repro.tokenizer.vocab import default_tokenizer
+
+    store = PromptStore(root, PromptCompressor(default_tokenizer(), method=method))
+    store.put_many([p.text for p in generate_corpus(n_prompts, seed=seed)])
+    return store

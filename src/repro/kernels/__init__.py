@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True against the
+pure-jnp oracles in each kernel's ref.py):
+
+  flash_attention/  blockwise online-softmax attention (causal/GQA/window/
+                    softcap) — the perf-critical layer of every arch
+  token_pack/       LoPace fixed-width + delta-zigzag byte packing
+  histogram/        token-frequency one-hot-matmul reduction (rANS tables)
+"""

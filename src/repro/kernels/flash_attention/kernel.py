@@ -1,0 +1,135 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Blockwise online-softmax attention with causal masking, GQA head mapping,
+sliding-window masking and gemma2-style score soft-capping — the same
+semantics as the pure-jnp fallback in repro.models.attention (oracle in
+ref.py).
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks); the kv-block axis is the
+minor-most (sequential on TPU) so VMEM scratch carries the online-softmax
+state (m, l, acc) across kv steps.  BlockSpecs keep one (block_q, head_dim)
+q tile and one (block_kv, head_dim) k/v tile in VMEM at a time; with the
+default 512x512 blocks and head_dim 128 that is ~0.8 MB of operand VMEM
+plus ~0.5 MB scratch — comfortably inside a v5e core's 16 MB while leaving
+room for double-buffered pipelining.  MXU alignment: block sizes are
+multiples of 128 and head_dim is 128/256 for every assigned arch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 512
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,        # blocks
+    acc_ref, m_ref, l_ref,             # VMEM scratch
+    *, scale: float, causal: bool, window: int, softcap: float,
+    block_q: int, block_kv: int, n_kv_blocks: int, q_offset: int, kv_len: int,
+):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bkv, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # [bq, bkv]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = (q_offset + iq * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0))
+    k_pos = ikv * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < kv_len  # drop kv padding columns
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[:, :1]                         # [bq, 1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)     # [bq, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                        # [bq, bkv]
+    corr = jnp.exp(m_prev - m_new)                # [bq, 1]
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ikv == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,   # [B, Hq, Sq, hd]
+    k: jnp.ndarray,   # [B, Hkv, Skv, hd]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    kv_len = Skv if kv_len is None else kv_len
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    if Sq % block_q or Skv % block_kv:
+        raise ValueError(f"seq lens ({Sq},{Skv}) must divide blocks "
+                         f"({block_q},{block_kv}); pad upstream")
+    nq, nkv = Sq // block_q, Skv // block_kv
+    grid = (B, Hq, nq, nkv)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, n_kv_blocks=nkv,
+        q_offset=q_offset, kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 128), jnp.float32),  # m (lane-broadcast)
+            pltpu.VMEM((block_q, 128), jnp.float32),  # l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+`flash_attention(...)` takes the model-layout tensors [B, S, H, hd],
+transposes to the kernel layout, pads sequence to block multiples and
+dispatches to the Pallas kernel (TPU) or interpret mode (CPU tests).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BLOCK_KV,
+    DEFAULT_BLOCK_Q,
+    flash_attention_fwd,
+)
+
+
+@partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_kv",
+    "q_offset", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # [B, Sq, Hq, hd]
+    k: jnp.ndarray,  # [B, Skv, Hkv, hd]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    Sq, Skv = q.shape[1], k.shape[1]
+    bq = min(block_q, max(Sq, 16))
+    bkv = min(block_kv, max(Skv, 16))
+    pad_q = (-Sq) % bq
+    pad_kv = (-Skv) % bkv
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        # padded kv columns are dropped inside the kernel via kv_len mask
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    out = flash_attention_fwd(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=bq, block_kv=bkv, q_offset=q_offset,
+        kv_len=Skv, interpret=interpret)
+    out = out[:, :, :Sq]
+    return jnp.moveaxis(out, 2, 1)

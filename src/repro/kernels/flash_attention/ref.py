@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive materialized
+softmax attention with identical masking/softcap semantics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q: jnp.ndarray,   # [B, Hq, Sq, hd]
+    k: jnp.ndarray,   # [B, Hkv, Skv, hd]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bngqh,bnkh->bngqk", qf, kf) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, jnp.finfo(jnp.float32).min * 0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bnkh->bngqh", p, vf)
+    return o.reshape(B, Hq, Sq, v.shape[-1]).astype(q.dtype)

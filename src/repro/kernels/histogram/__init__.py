@@ -1,0 +1,4 @@
+from repro.kernels.histogram.ops import token_histogram
+from repro.kernels.histogram.ref import histogram_ref
+
+__all__ = ["token_histogram", "histogram_ref"]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: token-frequency histogram (rANS table builder).
+
+Scatter-add is the natural GPU formulation; on TPU the MXU-native
+formulation is a one-hot matmul per block: counts += 1[ids == v] summed
+over the block, accumulated across the sequential grid axis in the output
+ref (classic Pallas reduction pattern — output block index_map is constant
+so the same [V] tile stays resident in VMEM).
+
+Block sizing: [block_n] ids expand to a [block_n, V_tile] one-hot in
+VREGs; V is tiled by the second grid axis so arbitrary vocabularies fit
+(V_tile lanes are 128-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 1024
+DEFAULT_BLOCK_V = 2048
+
+
+def _hist_kernel(ids_ref, o_ref, *, block_v: int):
+    # grid = (v_tiles, n_blocks): token blocks are the MINOR axis, so for a
+    # fixed vocab tile the output block stays resident in VMEM while every
+    # token block accumulates into it.
+    jv = pl.program_id(0)      # vocab tile
+    i = pl.program_id(1)       # sequential accumulation axis (token blocks)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]                                   # [bn]
+    base = jv * block_v
+    vocab = base + jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], block_v), 1)
+    onehot = (ids[:, None] == vocab).astype(jnp.int32)   # [bn, bv]
+    o_ref[...] += onehot.sum(axis=0)
+
+
+def histogram_kernel(ids: jnp.ndarray, vocab_size: int, *,
+                     block_n: int = DEFAULT_BLOCK_N,
+                     block_v: int = DEFAULT_BLOCK_V,
+                     interpret: bool = False) -> jnp.ndarray:
+    """ids: [N] int32 in [0, vocab); returns counts [vocab] int32.
+    Out-of-range ids (e.g. -1 padding) fall in no bucket."""
+    n = ids.shape[0]
+    block_n = min(block_n, n)
+    block_v = min(block_v, vocab_size)
+    if n % block_n or vocab_size % block_v:
+        raise ValueError("pad N / vocab to block multiples upstream")
+    grid = (vocab_size // block_v, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, block_v=block_v),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda j, i: (i,))],
+        out_specs=pl.BlockSpec((block_v,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((vocab_size,), jnp.int32),
+        interpret=interpret,
+    )(ids)

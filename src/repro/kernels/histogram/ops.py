@@ -1,0 +1,26 @@
+"""Public wrapper: device histogram feeding rANS table normalization."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram.kernel import histogram_kernel
+
+
+@partial(jax.jit, static_argnames=("vocab_size", "interpret"))
+def token_histogram(ids: jnp.ndarray, vocab_size: int,
+                    interpret: bool = True) -> jnp.ndarray:
+    """ids: [N] any int dtype -> counts [vocab_size] int32.
+    Pads N and vocab to kernel block multiples (pad ids are -1 = no bucket)."""
+    n = ids.shape[0]
+    block_n = min(1024, max(n, 8))
+    pad_n = (-n) % block_n
+    idsp = jnp.pad(ids.astype(jnp.int32), (0, pad_n), constant_values=-1)
+    block_v = min(2048, vocab_size)
+    pad_v = (-vocab_size) % block_v
+    out = histogram_kernel(idsp, vocab_size + pad_v, block_n=block_n,
+                           block_v=block_v, interpret=interpret)
+    return out[:vocab_size]

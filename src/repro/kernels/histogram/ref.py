@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the histogram kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def histogram_ref(ids: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    """Out-of-range ids contribute to no bucket (matches the kernel)."""
+    valid = (ids >= 0) & (ids < vocab_size)
+    safe = jnp.where(valid, ids, 0)
+    return jnp.zeros(vocab_size, jnp.int32).at[safe].add(valid.astype(jnp.int32))

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for LoPace binary packing (paper §3.3.3).
+
+The hot loop of the token method is pure data movement: split each token
+id into little-endian bytes (2 for uint16 mode, 4 for uint32 mode) —
+strictly memory-bound, so the kernel's job is to stream blocks through
+VMEM at line rate with byte extraction on the VPU.  Output layout is
+[N, k] uint8 whose row-major view *is* the packed little-endian stream.
+
+The delta-zigzag variant fuses LoPace's beyond-paper delta packing
+(DESIGN.md §7): given x and x_prev (shifted by the wrapper), it emits
+zigzag(x - x_prev) bytes in the same layout.
+
+Block shape (block_n, 128-aligned byte lanes): ids arrive as [block_n]
+int32 tiles; per-element shifts/masks vectorize on 8x128 VREGs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 2048
+
+
+def _pack_kernel(x_ref, o_ref, *, width: int):
+    x = x_ref[...].astype(jnp.uint32)                   # [bn]
+    parts = [(x >> jnp.uint32(8 * i)) & jnp.uint32(0xFF) for i in range(width)]
+    o_ref[...] = jnp.stack(parts, axis=-1).astype(jnp.uint8)  # [bn, width]
+
+
+def _delta_zigzag_kernel(x_ref, xp_ref, o_ref, *, width: int):
+    x = x_ref[...].astype(jnp.int32)
+    xp = xp_ref[...].astype(jnp.int32)
+    d = x - xp                                          # token ids < 2**31
+    z = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)       # zigzag to unsigned
+    parts = [(z >> jnp.uint32(8 * i)) & jnp.uint32(0xFF) for i in range(width)]
+    o_ref[...] = jnp.stack(parts, axis=-1).astype(jnp.uint8)
+
+
+def pack_tokens_kernel(ids: jnp.ndarray, *, width: int,
+                       block_n: int = DEFAULT_BLOCK_N,
+                       interpret: bool = False) -> jnp.ndarray:
+    """ids: [N] int32/uint32 -> [N, width] uint8 little-endian bytes."""
+    n = ids.shape[0]
+    block_n = min(block_n, n)
+    if n % block_n:
+        raise ValueError("pad N to a block multiple upstream")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, width=width),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_n, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, width), jnp.uint8),
+        interpret=interpret,
+    )(ids)
+
+
+def delta_zigzag_kernel(ids: jnp.ndarray, prev: jnp.ndarray, *, width: int = 4,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        interpret: bool = False) -> jnp.ndarray:
+    n = ids.shape[0]
+    block_n = min(block_n, n)
+    if n % block_n:
+        raise ValueError("pad N to a block multiple upstream")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_delta_zigzag_kernel, width=width),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_n, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, width), jnp.uint8),
+        interpret=interpret,
+    )(ids, prev)

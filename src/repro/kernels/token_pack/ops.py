@@ -1,0 +1,53 @@
+"""Public wrapper: batch token packing on device.
+
+`pack_tokens_device(ids)` reproduces LoPace's fixed-width packing decision
+(Eq. 7: uint16 iff max(ids) <= 65535) and returns (format_byte, bytes) —
+bit-identical to repro.core.packing.pack_fixed, validated in tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.token_pack.kernel import delta_zigzag_kernel, pack_tokens_kernel
+
+_BLOCK = 2048
+
+
+@partial(jax.jit, static_argnames=("width", "interpret"))
+def _pack_padded(ids: jnp.ndarray, width: int, interpret: bool) -> jnp.ndarray:
+    n = ids.shape[0]
+    pad = (-n) % min(_BLOCK, max(n, 1))
+    idsp = jnp.pad(ids, (0, pad))
+    return pack_tokens_kernel(idsp.astype(jnp.int32), width=width,
+                              block_n=min(_BLOCK, idsp.shape[0]),
+                              interpret=interpret)
+
+
+def pack_tokens_device(ids, interpret: bool = True) -> Tuple[int, bytes]:
+    """Returns (format_byte, packed_bytes) per paper Algorithm 1 lines 2-8."""
+    ids = np.asarray(ids, dtype=np.uint32)
+    if ids.size == 0:
+        return 0x00, b""
+    width = 2 if int(ids.max()) <= 0xFFFF else 4
+    out = _pack_padded(jnp.asarray(ids, jnp.int32), width, interpret)
+    return (0x00 if width == 2 else 0x01), np.asarray(out)[: ids.size].tobytes()
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def delta_zigzag_device(ids: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """[N] ids -> [N,4] zigzag-delta bytes (feeder for the rANS stage)."""
+    prev = jnp.concatenate([jnp.zeros(1, ids.dtype), ids[:-1]])
+    n = ids.shape[0]
+    pad = (-n) % min(_BLOCK, max(n, 1))
+    idsp = jnp.pad(ids, (0, pad))
+    prevp = jnp.pad(prev, (0, pad))
+    out = delta_zigzag_kernel(idsp.astype(jnp.int32), prevp.astype(jnp.int32),
+                              width=4, block_n=min(_BLOCK, idsp.shape[0]),
+                              interpret=interpret)
+    return out[:n]

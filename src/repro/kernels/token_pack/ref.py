@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the token-pack kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_ref(ids: jnp.ndarray, width: int) -> jnp.ndarray:
+    x = ids.astype(jnp.uint32)
+    parts = [(x >> jnp.uint32(8 * i)) & jnp.uint32(0xFF) for i in range(width)]
+    return jnp.stack(parts, axis=-1).astype(jnp.uint8)
+
+
+def delta_zigzag_ref(ids: jnp.ndarray, prev: jnp.ndarray, width: int = 4) -> jnp.ndarray:
+    d = ids.astype(jnp.int32) - prev.astype(jnp.int32)
+    z = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)
+    parts = [(z >> jnp.uint32(8 * i)) & jnp.uint32(0xFF) for i in range(width)]
+    return jnp.stack(parts, axis=-1).astype(jnp.uint8)

@@ -1,0 +1,28 @@
+"""Production mesh factory.
+
+Single pod: 16 x 16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod : 2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod
+axis composes with data for hierarchical gradient reduction
+(reduce-scatter on ICI inside a pod, all-reduce on DCI across pods).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax import; tests
+and benches see the single real CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real host devices (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,104 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
+JSON results written by launch.dryrun.
+
+    PYTHONPATH=src python -m repro.launch.report [--out EXPERIMENTS.md-section]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.registry import ARCH_IDS, SHAPES
+
+DEFAULT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def load_cells(result_dir: Path):
+    cells = {}
+    for f in sorted(result_dir.glob("*.json")):
+        doc = json.loads(f.read_text())
+        cells[(doc["arch"], doc["shape"], doc["mesh"])] = doc
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile s | HBM/dev GB | args GB | temp GB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                doc = cells.get((arch, shape, mesh))
+                if doc is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                st = doc["status"]
+                if st != "ok":
+                    tag = "SKIP" if st.startswith("skip") else "FAIL"
+                    reason = st.split(":", 1)[-1][:60]
+                    lines.append(f"| {arch} | {shape} | {mesh} | {tag}: {reason} | | | | |")
+                    continue
+                mem = doc["memory_analysis"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {doc['compile_s']} | "
+                    f"{doc['hbm_per_device_gb']:.2f} | "
+                    f"{mem.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+                    f"{mem.get('temp_size_in_bytes', 0)/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL_FLOPS | MF/HLO | roofline frac | dominant collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            doc = cells.get((arch, shape, "single"))
+            if doc is None or doc["status"] != "ok" or not doc.get("roofline"):
+                if doc is not None and doc["status"].startswith("skip"):
+                    lines.append(f"| {arch} | {shape} | — | — | — | N/A (skip: "
+                                 f"{doc['status'].split(':',1)[-1][:40]}) | | | | |")
+                continue
+            rt = doc["roofline"]
+            colls = sorted(doc.get("collective_bytes", {}).items(),
+                           key=lambda kv: -kv[1])[:2]
+            coll_s = " ".join(f"{k}:{v/1e9:.1f}GB" for k, v in colls)
+            lines.append(
+                f"| {arch} | {shape} | {rt['compute_s']:.4f} | {rt['memory_s']:.4f} | "
+                f"{rt['collective_s']:.4f} | {rt['bottleneck']} | "
+                f"{rt['model_flops']:.2e} | {rt['model_flops_ratio']:.2f} | "
+                f"{rt['peak_fraction']:.2f} | {coll_s} |")
+    return "\n".join(lines)
+
+
+def summary(cells) -> str:
+    ok = sum(1 for d in cells.values() if d["status"] == "ok")
+    skip = sum(1 for d in cells.values() if d["status"].startswith("skip"))
+    fail = len(cells) - ok - skip
+    return (f"cells: {len(cells)} total, {ok} compiled ok, {skip} skipped "
+            f"(documented N/A), {fail} failed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(DEFAULT_DIR))
+    args = ap.parse_args()
+    cells = load_cells(Path(args.dir))
+    print("## Dry-run summary\n")
+    print(summary(cells), "\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single-pod 16x16, per §Roofline)\n")
+    print(roofline_table(cells))
+
+
+if __name__ == "__main__":
+    main()

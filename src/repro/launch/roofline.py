@@ -1,0 +1,134 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (assignment spec):
+
+    compute    = HLO_FLOPs      / (chips x 197e12   bf16 FLOP/s)
+    memory     = HLO_bytes      / (chips x 819e9    HBM B/s)
+    collective = collective_B   / (chips x 50e9     ICI B/s/link)
+
+`cost_analysis()` provides FLOPs / bytes; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD HLO text and sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (result size ~= moved payload per chip for the ring
+algorithms; a documented approximation).
+
+MODEL_FLOPS uses the 6*N*D (train) / 2*N*D (inference) rule with
+N = active params, so the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat/dispatch/attention overheads.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  f32[16,512]{1,0} all-reduce(...)   or   (bf16[8,128], u32[...]) all-to-all
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the HLO module."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        if m.group(3):  # -start of a start/done pair: count once
+            pass
+        out[kind] = out.get(kind, 0) + _shape_bytes(shapes)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives_by_kind: Dict[str, int]
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_ratio: float
+    peak_fraction: float  # compute_s / max(all terms): roofline fraction
+    memory_per_device_bytes: Optional[float] = None
+    notes: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def derive_terms(*, arch: str, shape: str, mesh: str, chips: int,
+                 hlo_flops: float, hlo_bytes: float,
+                 collectives: Dict[str, int], model_flops: float,
+                 memory_per_device: Optional[float] = None,
+                 flops_are_per_chip: bool = False,
+                 notes: str = "") -> RooflineTerms:
+    """hlo_flops/bytes: totals from cost_analysis (global unless
+    flops_are_per_chip); collective bytes are per-chip-ish result sums."""
+    global_flops = hlo_flops * (chips if flops_are_per_chip else 1.0)
+    global_bytes = hlo_bytes * (chips if flops_are_per_chip else 1.0)
+    coll_total = float(sum(collectives.values()))
+    compute_s = global_flops / chips / PEAK_FLOPS
+    memory_s = global_bytes / chips / HBM_BW
+    collective_s = coll_total / ICI_BW  # result sums ~ per-chip payload
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    dominant = terms[bottleneck]
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=global_flops, hlo_bytes=global_bytes,
+        collective_bytes=coll_total, collectives_by_kind=collectives,
+        model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_ratio=(model_flops / global_flops if global_flops else 0.0),
+        peak_fraction=(compute_s / dominant if dominant > 0 else 0.0),
+        memory_per_device_bytes=memory_per_device,
+        notes=notes,
+    )
+
+
+def model_flops_for(cfg, shape_spec, n_active: int) -> float:
+    """6*N*D train, 2*N*D prefill, 2*N*B decode (one token/slot)."""
+    if shape_spec.step == "train":
+        return 6.0 * n_active * shape_spec.seq_len * shape_spec.global_batch
+    if shape_spec.step == "prefill":
+        return 2.0 * n_active * shape_spec.seq_len * shape_spec.global_batch
+    return 2.0 * n_active * shape_spec.global_batch

@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Serving launcher: LoPace PromptStore admission + slot-batched decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+
+from repro.data.pipeline import build_store_from_corpus
+from repro.train.serve_loop import BatchServer
+from repro.train.train_loop import init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    from repro.configs.lopace import CONFIG
+
+    cfg = CONFIG.smoke()
+    params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = build_store_from_corpus(tmp, n_prompts=max(8, args.requests), seed=4)
+        server = BatchServer(params, cfg, batch_slots=args.slots,
+                             max_len=args.max_len)
+        keys = store.keys()[: args.requests]
+        t0 = time.perf_counter()
+        reqs = [server.submit_text(store, k, max_new_tokens=args.max_new)
+                for k in keys]
+        server.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in reqs)
+        print(f"[serve] {sum(r.done for r in reqs)}/{len(reqs)} requests, "
+              f"{toks} tokens in {dt:.1f}s ({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Model substrate: composable decoder-only LM blocks in pure JAX.
+
+Every assigned architecture is expressed as a `ModelConfig` (see
+repro.configs) consumed by `repro.models.transformer`:
+
+* temporal mixers: full/local GQA attention (w/ RoPE, softcaps, sinks),
+  MLA (latent KV), RG-LRU (Griffin), mLSTM / sLSTM (xLSTM)
+* channel mixers: SwiGLU / GeGLU / GELU FFN, fine-grained MoE with shared
+  + routed experts (DeepSeekMoE / DBRX style)
+* scan-over-layers (period-aware for interleaved block patterns) so HLO
+  size and compile time are depth-independent
+* KV cache / recurrent-state decode path (`init_cache`, `decode_step`)
+"""
+
+from repro.models.transformer import (
+    Model,
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    prefill,
+    decode_step,
+)
+
+__all__ = [
+    "Model",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "prefill",
+    "decode_step",
+]

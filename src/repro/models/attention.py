@@ -1,0 +1,560 @@
+"""Attention temporal mixers: full/local GQA and MLA (latent KV).
+
+Two attention engines with identical semantics (one oracle in
+repro.kernels.flash_attention.ref):
+
+* `flash_self_attention` — flash-style blockwise attention with a
+  **custom VJP** (FlashAttention backward: recompute score blocks from
+  the saved (q, k, v, out, logsumexp) instead of letting autodiff save
+  every scan step's O(S^2) probabilities).  This is the training/prefill
+  path; activation memory is O(S * hd) per head.
+* `blockwise_attention` — forward-only online-softmax blockwise attention
+  over arbitrary cached kv positions (ring buffers, decode); never
+  differentiated.
+
+The Pallas kernel in repro.kernels.flash_attention is the TPU fast path
+for the same contract.
+
+`ANALYSIS_FULL_BLOCKS` (set by launch.dryrun) lifts block sizes to the
+full sequence so every internal scan has trip count 1 — XLA's
+cost_analysis counts while-bodies once, so this makes the dry-run FLOP
+accounting exact (see launch/dryrun.py depth-extrapolation notes).
+
+Cache layouts (per layer; stacked over layers by the transformer scan):
+  full attn : k,v [B, S_max, n_kv, hd] + key_pos [S_max]
+  local attn: ring buffer with S_max = window
+  MLA       : ckv [B, S_max, kv_rank] + krope [B, S_max, rope_dim]
+              (decode runs the absorbed MQA-over-latent form)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, big_neg, dense_init, softcap
+
+ANALYSIS_FULL_BLOCKS = False  # dry-run cost-accounting mode
+_BLOCK_Q, _BLOCK_KV = 512, 512
+
+
+def _block_sizes(Sq: int, Skv: int) -> Tuple[int, int]:
+    if ANALYSIS_FULL_BLOCKS:
+        return Sq, Skv
+    return min(_BLOCK_Q, Sq), min(_BLOCK_KV, Skv)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure jnp
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(
+    q: jnp.ndarray,            # [B, Sq, n_q, hd_qk]
+    k: jnp.ndarray,            # [B, Skv, n_kv, hd_qk]
+    v: jnp.ndarray,            # [B, Skv, n_kv, hd_v]
+    q_positions: jnp.ndarray,  # [Sq] int32
+    kv_positions: jnp.ndarray, # [Skv] int32 (-1 = invalid slot)
+    *,
+    causal: bool = True,
+    window: int = 0,           # 0 = unlimited
+    attn_softcap: float = 0.0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    scale: Optional[float] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # [B, Skv, n_kv, 1] int8-KV scales
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Returns [B, Sq, n_q, hd_v]; fp32 accumulation, input-dtype output."""
+    B, Sq, n_q, hd_qk = q.shape
+    Skv, n_kv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    g = n_q // n_kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd_qk)
+
+    if Sq <= 8:
+        # decode path: one fused pass over the whole cache (flash-decoding
+        # layout — a kv-block scan would serialize and force SPMD to
+        # rematerialize a sequence-sharded cache; a single einsum lets the
+        # partitioner keep kv sharded and combine partial softmaxes with an
+        # O(B*n_q) collective instead of moving the cache).
+        # keep k/v in their storage dtype: bf16 x bf16 -> f32 accumulate is
+        # MXU-native; up-casting the whole cache would double the bytes
+        # actually moved from HBM (§Perf iteration A1).  int8-KV scales are
+        # per (token, head) — constant along the contracted hd — so they
+        # fold into the POST-contraction scores/probs and the dequantized
+        # cache never materializes (§Perf iteration A3).
+        qf = q.reshape(B, Sq, n_kv, g, hd_qk)
+        kk = k.astype(q.dtype) if k.dtype == jnp.int8 else k
+        s = jnp.einsum("bqngh,bsnh->bngqs", qf, kk,
+                       preferred_element_type=jnp.float32) * scale
+        if k_scale is not None:
+            ksc = k_scale[..., 0].astype(jnp.float32).transpose(0, 2, 1)
+            s = s * ksc[:, :, None, None, :]
+        if attn_softcap > 0.0:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        mask = kv_positions[None, :] >= 0
+        if causal:
+            mask = mask & (kv_positions[None, :] <= q_positions[:, None])
+        if window > 0:
+            mask = mask & (q_positions[:, None] - kv_positions[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, big_neg(jnp.float32))
+        p = jax.nn.softmax(s, axis=-1)
+        if v_scale is not None:
+            vsc = v_scale[..., 0].astype(jnp.float32).transpose(0, 2, 1)
+            p = p * vsc[:, :, None, None, :]
+        vv = v.astype(q.dtype) if v.dtype == jnp.int8 else v
+        o = jnp.einsum("bngqs,bsnh->bqngh", p.astype(vv.dtype), vv,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, Sq, n_q, hd_v).astype(q.dtype)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    # pad sequences up to block multiples (padding masked via positions)
+    pad_q = (-Sq) % block_q
+    pad_kv = (-Skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=2**30)
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad_kv), constant_values=-1)
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    nq_blk, nkv_blk = Sq_p // block_q, Skv_p // block_kv
+
+    # [B, S, n, h] -> [n_blocks, B, n_kv, g, block, h]
+    qb = q.reshape(B, nq_blk, block_q, n_kv, g, hd_qk).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nkv_blk, block_kv, n_kv, hd_qk).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nkv_blk, block_kv, n_kv, hd_v).transpose(1, 0, 3, 2, 4)
+    qpb = q_positions.reshape(nq_blk, block_q)
+    kpb = kv_positions.reshape(nkv_blk, block_kv)
+
+    neg = big_neg(jnp.float32)
+
+    def q_step(_, q_in):
+        q_blk, qp = q_in  # [B, n_kv, g, bq, hd], [bq]
+
+        def kv_step(carry, kv_in):
+            acc, m, l = carry
+            k_blk, v_blk, kp = kv_in  # [B, n_kv, bkv, hd], ..., [bkv]
+            s = jnp.einsum(
+                "bngqh,bnkh->bngqk", q_blk.astype(jnp.float32),
+                k_blk.astype(jnp.float32),
+            ) * scale
+            if attn_softcap > 0.0:
+                s = attn_softcap * jnp.tanh(s / attn_softcap)
+            mask = kp[None, :] >= 0
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window > 0:
+                mask &= qp[:, None] - kp[None, :] < window
+            s = jnp.where(mask[None, None, None], s, neg)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bngqk,bnkh->bngqh", p, v_blk.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, n_kv, g, block_q, hd_v), jnp.float32)
+        m0 = jnp.full((B, n_kv, g, block_q), neg, jnp.float32)
+        l0 = jnp.zeros((B, n_kv, g, block_q), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kb, vb, kpb))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return None, out
+
+    _, ob = jax.lax.scan(q_step, None, (qb, qpb))  # [nq_blk, B, n_kv, g, bq, hd_v]
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq_p, n_q, hd_v)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash self-attention with custom VJP (training / prefill path)
+# ---------------------------------------------------------------------------
+#
+# Layout inside: q [B, n_kv, g, Sq, hd] kept WHOLE (so SPMD can shard heads
+# or the q-sequence — context parallelism for head counts that do not
+# divide the TP axis); kv blocks are scanned with online softmax.  Peak
+# temporary per step is [B, n_kv, g, Sq_shard, bkv].
+#
+# Backward (FlashAttention-style): recompute score blocks from the saved
+# (q, k, v, out, logsumexp) in one kv-block sweep that accumulates dq and
+# emits per-block dk/dv — no O(S^2) residuals.
+#
+# SEQ_SHARD_SPECS, set by the launcher for archs whose head count does not
+# divide the model axis, pins (q, kv) sharding so the einsums split over
+# the q-sequence instead of replicating (XLA inserts the all-gather /
+# reduce-scatter pair that sequence-parallel attention requires).
+
+
+SEQ_SHARD_SPECS = None  # Optional[(q_pspec, kv_pspec)] — launcher-controlled
+
+
+def _maybe_seq_shard(q, k, v):
+    if SEQ_SHARD_SPECS is None:
+        return q, k, v
+    q_spec, kv_spec = SEQ_SHARD_SPECS
+    q = jax.lax.with_sharding_constraint(q, q_spec)
+    k = jax.lax.with_sharding_constraint(k, kv_spec)
+    v = jax.lax.with_sharding_constraint(v, kv_spec)
+    return q, k, v
+
+
+def _mask_block(qp, kp, causal: bool, window: int):
+    mask = (kp[None, :] >= 0)
+    mask = jnp.broadcast_to(mask, (qp.shape[0], kp.shape[0]))
+    if causal:
+        mask = mask & (kp[None, :] <= qp[:, None])
+    if window > 0:
+        mask = mask & (qp[:, None] - kp[None, :] < window)
+    return mask
+
+
+def _scores_block(q_all, k_blk, qp, kp, scale, causal, window, cap):
+    """q_all [B,n,g,Sq,hd] x k_blk [B,n,bkv,hd] -> (s, dcap) [B,n,g,Sq,bkv]."""
+    s = jnp.einsum("bngqh,bnkh->bngqk", q_all, k_blk) * scale
+    dcap = None
+    if cap > 0.0:
+        t = jnp.tanh(s / cap)
+        dcap = 1.0 - t * t
+        s = cap * t
+    neg = big_neg(jnp.float32)
+    mask = _mask_block(qp, kp, causal, window)
+    s = jnp.where(mask[None, None, None], s, neg)
+    return s, dcap
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_self_attention(q, k, v, causal=True, window=0, attn_softcap=0.0,
+                         scale=None, blocks=None, q_offset=0):
+    """Self-attention over positions q_offset+[0..Sq) x [0..Skv) (the
+    train/prefill layout; ring-buffer caches use blockwise_attention).
+    q [B,Sq,n_q,hd], k/v [B,Skv,n_kv,hd(:v)] -> [B,Sq,n_q,hd_v]."""
+    out, _, _ = _flash_fwd_impl(q, k, v, causal, window, attn_softcap, scale,
+                                blocks, q_offset)
+    return out
+
+
+def _split_heads(q, k, v):
+    B, Sq, n_q, hd = q.shape
+    Skv, n_kv = k.shape[1], k.shape[2]
+    g = n_q // n_kv
+    qh = q.astype(jnp.float32).reshape(B, Sq, n_kv, g, hd).transpose(0, 2, 3, 1, 4)
+    kh = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vh = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    return qh, kh, vh
+
+
+def _flash_fwd_impl(q, k, v, causal, window, cap, scale, blocks, q_offset):
+    B, Sq, n_q, hd = q.shape
+    Skv, n_kv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    g = n_q // n_kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    _, bkv = blocks if blocks is not None else _block_sizes(Sq, Skv)
+    if Skv % bkv:
+        raise ValueError(f"flash attention needs block-divisible kv ({Skv}%{bkv})")
+    nkv = Skv // bkv
+    neg = big_neg(jnp.float32)
+
+    q, k, v = _maybe_seq_shard(q, k, v)
+    qh, kh, vh = _split_heads(q, k, v)            # [B,n,g,Sq,h], [B,n,Skv,h]
+    kb = kh.reshape(B, n_kv, nkv, bkv, hd).transpose(2, 0, 1, 3, 4)
+    vb = vh.reshape(B, n_kv, nkv, bkv, hd_v).transpose(2, 0, 1, 3, 4)
+    qp = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    kpb = jnp.arange(Skv, dtype=jnp.int32).reshape(nkv, bkv)
+
+    def kv_step(carry, kv_in):
+        acc, m, l = carry
+        k_blk, v_blk, kp = kv_in
+        s, _ = _scores_block(qh, k_blk, qp, kp, scale, causal, window, cap)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bngqk,bnkh->bngqh", p, v_blk)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, n_kv, g, Sq, hd_v), jnp.float32)
+    m0 = jnp.full((B, n_kv, g, Sq), neg, jnp.float32)
+    l0 = jnp.zeros((B, n_kv, g, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kb, vb, kpb))
+    oh = acc / jnp.maximum(l[..., None], 1e-37)   # [B,n,g,Sq,hd_v]
+    lse = m + jnp.log(jnp.maximum(l, 1e-37))      # [B,n,g,Sq]
+    out = oh.transpose(0, 3, 1, 2, 4).reshape(B, Sq, n_q, hd_v).astype(q.dtype)
+    return out, oh, lse
+
+
+def _flash_fwd_rule(q, k, v, causal, window, cap, scale, blocks, q_offset):
+    out, oh, lse = _flash_fwd_impl(q, k, v, causal, window, cap, scale,
+                                   blocks, q_offset)
+    return out, (q, k, v, oh, lse)
+
+
+def _flash_bwd_rule(causal, window, cap, scale, blocks, q_offset,
+                    residuals, dout):
+    q, k, v, oh, lse = residuals
+    B, Sq, n_q, hd = q.shape
+    Skv, n_kv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    g = n_q // n_kv
+    scale_v = scale if scale is not None else 1.0 / np.sqrt(hd)
+    _, bkv = blocks if blocks is not None else _block_sizes(Sq, Skv)
+    nkv = Skv // bkv
+
+    q, k, v = _maybe_seq_shard(q, k, v)
+    qh, kh, vh = _split_heads(q, k, v)
+    kb = kh.reshape(B, n_kv, nkv, bkv, hd).transpose(2, 0, 1, 3, 4)
+    vb = vh.reshape(B, n_kv, nkv, bkv, hd_v).transpose(2, 0, 1, 3, 4)
+    doh = (dout.astype(jnp.float32)
+           .reshape(B, Sq, n_kv, g, hd_v).transpose(0, 2, 3, 1, 4))
+    qp = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    kpb = jnp.arange(Skv, dtype=jnp.int32).reshape(nkv, bkv)
+    D = jnp.einsum("bngqh,bngqh->bngq", doh, oh)   # rowsum(dout*out)
+
+    def kv_step(dq_acc, kv_in):
+        k_blk, v_blk, kp = kv_in
+        s, dcap = _scores_block(qh, k_blk, qp, kp, scale_v, causal, window, cap)
+        p = jnp.exp(s - lse[..., None])
+        dp = jnp.einsum("bngqh,bnkh->bngqk", doh, v_blk)
+        ds = p * (dp - D[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        ds = ds * scale_v
+        dq_acc = dq_acc + jnp.einsum("bngqk,bnkh->bngqh", ds, k_blk)
+        dk_blk = jnp.einsum("bngqk,bngqh->bnkh", ds, qh)
+        dv_blk = jnp.einsum("bngqk,bngqh->bnkh", p, doh)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, n_kv, g, Sq, hd), jnp.float32)
+    dqh, (dkb, dvb) = jax.lax.scan(kv_step, dq0, (kb, vb, kpb))
+    dq = dqh.transpose(0, 3, 1, 2, 4).reshape(B, Sq, n_q, hd).astype(q.dtype)
+    dk = (dkb.transpose(1, 2, 0, 3, 4).reshape(B, n_kv, Skv, hd)
+          .transpose(0, 2, 1, 3).astype(k.dtype))
+    dv = (dvb.transpose(1, 2, 0, 3, 4).reshape(B, n_kv, Skv, hd_v)
+          .transpose(0, 2, 1, 3).astype(v.dtype))
+    return dq, dk, dv
+
+
+flash_self_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# GQA (full / local)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, hd, n_q, n_kv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, n_q, hd), in_axis=0, dtype=dt),
+        "wk": dense_init(k2, (d, n_kv, hd), in_axis=0, dtype=dt),
+        "wv": dense_init(k3, (d, n_kv, hd), in_axis=0, dtype=dt),
+        "wo": dense_init(k4, (n_q, hd, d), in_axis=0, dtype=dt),
+    }
+
+
+def _quantize_kv(x):
+    """Per-(token, head) int8 symmetric quantization (KIVI-style)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str) -> dict:
+    s = min(max_len, cfg.window) if kind == "local" and cfg.window else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"key_pos": jnp.full((s,), -1, jnp.int32)}
+    if cfg.kv_cache_dtype == "int8":
+        cache.update({
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+            "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+        })
+    else:
+        dt = jnp.dtype(cfg.activation_dtype)
+        cache.update({"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)})
+    return cache
+
+
+def apply_attention(
+    params: dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jnp.ndarray,                 # [B, S, d]
+    positions: jnp.ndarray,         # [S] int32
+    cache: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    B, S, _ = x.shape
+    window = cfg.window if kind == "local" else 0
+
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_base)
+        k = apply_rope(k, positions, cfg.rope_base)
+
+    if cache is None:
+        # train/prefill self-attention: flash path with custom VJP
+        out = flash_self_attention(
+            q, k, v, True, window, cfg.attn_logit_softcap, None, None, 0)
+        y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+        return y, None
+    else:
+        s_max = cache["k"].shape[1]
+        # keep only the last s_max entries (ring semantics for local attn)
+        k_new, v_new, pos_new = k[:, -s_max:], v[:, -s_max:], positions[-s_max:]
+        slots = pos_new % s_max  # identity for full prefix, ring for local
+        if "k_scale" in cache:   # int8 quantized KV (beyond-paper, §Perf)
+            kq, ks = _quantize_kv(k_new)
+            vq, vs = _quantize_kv(v_new)
+            cache = {
+                "k": cache["k"].at[:, slots].set(kq),
+                "v": cache["v"].at[:, slots].set(vq),
+                "k_scale": cache["k_scale"].at[:, slots].set(ks),
+                "v_scale": cache["v_scale"].at[:, slots].set(vs),
+                "key_pos": cache["key_pos"].at[slots].set(pos_new.astype(jnp.int32)),
+            }
+            if S <= 8:   # decode: scales fold into scores (no dequant buffer)
+                out = blockwise_attention(
+                    q, cache["k"], cache["v"], positions, cache["key_pos"],
+                    causal=True, window=window,
+                    attn_softcap=cfg.attn_logit_softcap,
+                    k_scale=cache["k_scale"], v_scale=cache["v_scale"])
+                y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+                return y, cache
+            k_all = _dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+            v_all = _dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+        else:
+            cache = {
+                "k": cache["k"].at[:, slots].set(k_new.astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, slots].set(v_new.astype(cache["v"].dtype)),
+                "key_pos": cache["key_pos"].at[slots].set(pos_new.astype(jnp.int32)),
+            }
+            k_all = cache["k"].astype(x.dtype)
+            v_all = cache["v"].astype(x.dtype)
+        kv_pos = cache["key_pos"]
+
+    out = blockwise_attention(
+        q, k_all, v_all, positions, kv_pos,
+        causal=True, window=window, attn_softcap=cfg.attn_logit_softcap,
+    )
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3 latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, n = cfg.d_model, cfg.n_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": dense_init(ks[0], (d, m.q_lora_rank), in_axis=0, dtype=dt),
+        "q_norm": jnp.ones((m.q_lora_rank,), dt),
+        "wuq": dense_init(ks[1], (m.q_lora_rank, n, qk_hd), in_axis=0, dtype=dt),
+        "wdkv": dense_init(ks[2], (d, m.kv_lora_rank), in_axis=0, dtype=dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "wkrope": dense_init(ks[3], (d, m.qk_rope_head_dim), in_axis=0, dtype=dt),
+        "wuk": dense_init(ks[4], (m.kv_lora_rank, n, m.qk_nope_head_dim), in_axis=0, dtype=dt),
+        "wuv": dense_init(ks[5], (m.kv_lora_rank, n, m.v_head_dim), in_axis=0, dtype=dt),
+        "wo": dense_init(ks[6], (n, m.v_head_dim, d), in_axis=0, dtype=dt),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    m = cfg.mla
+    dt = jnp.dtype(cfg.activation_dtype)
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+        "key_pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def _rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt((xf**2).mean(-1, keepdims=True) + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_mla(
+    params: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    n = cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = 1.0 / np.sqrt(qk_hd)
+
+    cq = _rms(jnp.einsum("bsd,dr->bsr", x, params["wdq"].astype(x.dtype)),
+              params["q_norm"])
+    qfull = jnp.einsum("bsr,rnh->bsnh", cq, params["wuq"].astype(x.dtype))
+    q_nope = qfull[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(qfull[..., m.qk_nope_head_dim:], positions, cfg.rope_base)
+
+    ckv = _rms(jnp.einsum("bsd,dr->bsr", x, params["wdkv"].astype(x.dtype)),
+               params["kv_norm"])
+    krope = apply_rope(
+        jnp.einsum("bsd,dh->bsh", x, params["wkrope"].astype(x.dtype))[:, :, None, :],
+        positions, cfg.rope_base,
+    )[:, :, 0, :]
+
+    if cache is not None:
+        s_max = cache["ckv"].shape[1]
+        ckv_new, kr_new, pos_new = ckv[:, -s_max:], krope[:, -s_max:], positions[-s_max:]
+        slots = pos_new % s_max
+        cache = {
+            "ckv": cache["ckv"].at[:, slots].set(ckv_new.astype(cache["ckv"].dtype)),
+            "krope": cache["krope"].at[:, slots].set(kr_new.astype(cache["krope"].dtype)),
+            "key_pos": cache["key_pos"].at[slots].set(pos_new.astype(jnp.int32)),
+        }
+        ckv_use = cache["ckv"].astype(x.dtype)
+        kr_use = cache["krope"].astype(x.dtype)
+        kv_pos = cache["key_pos"]
+    else:
+        ckv_use, kr_use, kv_pos = ckv, krope, positions
+
+    # Absorbed MQA-over-latent form (identical math to expanding k/v):
+    #   scores = q_nope . (W_uk^T k-latent) + q_rope . k_rope
+    #          = (q_nope W_uk) . latent + q_rope . k_rope
+    q_lat = jnp.einsum("bsnh,rnh->bsnr", q_nope, params["wuk"].astype(x.dtype))
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)           # [B,S,n,r+rope]
+    k_cat = jnp.concatenate([ckv_use, kr_use], axis=-1)[:, :, None, :]  # MQA head
+    if cache is None:
+        out_lat = flash_self_attention(
+            q_cat, k_cat, ckv_use[:, :, None, :], True, 0, 0.0, scale, None, 0)
+    else:
+        out_lat = blockwise_attention(
+            q_cat, k_cat, ckv_use[:, :, None, :], positions, kv_pos,
+            causal=True, scale=scale,
+        )                                                        # [B,S,n,r]
+    out = jnp.einsum("bsnr,rnh->bsnh", out_lat, params["wuv"].astype(x.dtype))
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return y, cache

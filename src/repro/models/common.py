@@ -1,0 +1,104 @@
+"""Shared model components: norms, RoPE, initializers, dtype policy."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    """Truncated-normal fan-in init (He-style, matches MaxText defaults)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, style: str = "rmsnorm", dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.zeros((d,), dtype) if style == "rmsnorm_unit" else jnp.ones((d,), dtype)}
+    if style == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, style: str = "rmsnorm", eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if style == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf**2).mean(-1, keepdims=True)
+        scale = p["scale"].astype(jnp.float32)
+        if style == "rmsnorm_unit":  # gemma zero-centered weights: (1 + w)
+            scale = 1.0 + scale
+        out = xf * jax.lax.rsqrt(var + eps) * scale
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, base: float = 10_000.0) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10_000.0) -> jnp.ndarray:
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] (broadcastable)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], base)  # [half]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, offset: int = 0) -> jnp.ndarray:
+    """Classic transformer sinusoidal table (musicgen backbone)."""
+    pos = np.arange(offset, offset + seq_len)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d_model)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def take_block(stacked, idx: int):
+    """Slice one layer's params out of a stacked [n, ...] tree."""
+    return jax.tree_util.tree_map(lambda a: a[idx], stacked)
+
+
+def big_neg(dtype) -> float:
+    return float(jnp.finfo(dtype).min) * 0.5

@@ -1,0 +1,207 @@
+"""Channel mixers: gated FFNs and fine-grained MoE (shared + routed).
+
+The MoE dispatch is the TPU-native sort-based formulation: tokens are
+grouped (one group per batch row, so dispatch stays local to the data
+shard — no global sort collectives), sorted by routed expert, gathered to
+a fixed [E, C] capacity layout, processed with grouped einsums that shard
+cleanly over the `model` axis (expert parallelism), and scattered back
+with combine weights.  Capacity overflow drops tokens (GShard semantics);
+the router returns load-balance aux stats so the training loss can add
+the standard auxiliary term.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+_CAPACITY_FACTOR = 1.25
+ANALYSIS_VMAP_GROUPS = False  # dry-run cost accounting (launch/dryrun.py)
+
+
+def _act(kind: str, x):
+    if kind in ("swiglu",):
+        return jax.nn.silu(x)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d, f), in_axis=0, dtype=dt),
+            "w_up": dense_init(k2, (d, f), in_axis=0, dtype=dt),
+            "w_down": dense_init(k3, (f, d), in_axis=0, dtype=dt),
+        }
+    return {  # plain gelu MLP (musicgen backbone)
+        "w_up": dense_init(k1, (d, f), in_axis=0, dtype=dt),
+        "w_down": dense_init(k2, (f, d), in_axis=0, dtype=dt),
+    }
+
+
+def apply_ffn(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in params:
+        g = _act(cfg.ffn_kind, jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype)))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+        return jnp.einsum("bsf,fd->bsd", g * u, params["w_down"].astype(x.dtype))
+    h = _act("gelu", jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype)))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    e = cfg.moe
+    d = cfg.d_model
+    f = e.d_ff_expert or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, e.n_experts), in_axis=0, dtype=dt),
+        "w_gate": dense_init(ks[1], (e.n_experts, d, f), in_axis=1, dtype=dt),
+        "w_up": dense_init(ks[2], (e.n_experts, d, f), in_axis=1, dtype=dt),
+        "w_down": dense_init(ks[3], (e.n_experts, f, d), in_axis=1, dtype=dt),
+    }
+    if e.n_shared:
+        params["shared"] = init_ffn(ks[4], cfg, d_ff=f * e.n_shared)
+    return params
+
+
+def moe_capacity(cfg: ModelConfig, group_size: int) -> int:
+    e = cfg.moe
+    c = int(np.ceil(e.top_k * group_size * _CAPACITY_FACTOR / e.n_experts))
+    return max(8, min(c + (-c) % 8, group_size))  # 8-aligned, <= group
+
+
+MOE_XE_SPEC = None     # set by the launcher: NamedSharding for [G, E, C, d]
+MOE_XG_SPEC = None     # set by the launcher: NamedSharding for [G, Sg, d]
+                       # (pins the B,S->G,Sg reshape; without it SPMD
+                       # all-gathers the full activation at the reshape)
+MOE_CHUNKS = 1         # group-chunks processed per map step (memory knob)
+MOE_GROUP = 512        # tokens per dispatch group (smaller -> smaller C,
+                       # quadratically less dispatch-tensor traffic)
+MOE_DISPATCH_DTYPE = "float32"  # "bfloat16" halves dispatch/combine bytes
+
+
+def moe_groups(total_tokens: int) -> Tuple[int, int]:
+    """(n_groups, group_size): ~512-token groups, at least 16 groups so the
+    dispatch shards over the data axis even at decode shapes."""
+    sg = min(MOE_GROUP, max(1, total_tokens // 16))
+    while total_tokens % sg:
+        sg -= 1
+    return total_tokens // sg, sg
+
+
+def _gshard_dispatch(cfg, top_e, top_p, C):
+    """GShard one-hot dispatch/combine tensors — matmul-only, no
+    sort/scatter (SPMD-partitionable along the group axis).
+
+    top_e/top_p: [G, Sg, k] -> dispatch [G,Sg,E,C] (0/1), combine (weighted).
+    Tokens beyond an expert's capacity C within a group are dropped.
+    """
+    e = cfg.moe
+    G, Sg, k = top_e.shape
+    E = e.n_experts
+    counts = jnp.zeros((G, E), jnp.float32)
+    dispatch = jnp.zeros((G, Sg, E, C), jnp.float32)
+    combine = jnp.zeros((G, Sg, E, C), jnp.float32)
+    for j in range(k):
+        mask = jax.nn.one_hot(top_e[..., j], E, dtype=jnp.float32)  # [G,Sg,E]
+        pos = counts[:, None, :] + jnp.cumsum(mask, axis=1) - mask   # rank
+        pos_tok = jnp.einsum("gse,gse->gs", pos, mask)               # [G,Sg]
+        within = (pos_tok < C).astype(jnp.float32)
+        oh_pos = jax.nn.one_hot(pos_tok, C, dtype=jnp.float32)       # [G,Sg,C]
+        disp_j = jnp.einsum("gse,gsc->gsec", mask, oh_pos * within[..., None])
+        dispatch = dispatch + disp_j
+        combine = combine + disp_j * top_p[..., j][..., None, None]
+        counts = counts + mask.sum(axis=1)
+    dt = jnp.dtype(MOE_DISPATCH_DTYPE)
+    return dispatch.astype(dt), combine.astype(dt)
+
+
+def apply_moe(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """x: [B, S, d] -> (y, aux).
+
+    TPU-native MoE (GShard/MaxText lineage): tokens form ~512-token groups;
+    a one-hot dispatch einsum gathers them into the [G, E, C, d] capacity
+    layout, which is sharding-constrained to expert-parallel layout (E over
+    `model`) so the partitioner emits activation all-to-alls instead of
+    gathering expert weights.  Group-chunks run under a checkpointed
+    lax.map to bound dispatch memory; the dry-run analysis mode processes
+    all groups at once so scan-once FLOP accounting stays exact.
+    """
+    e = cfg.moe
+    B, S, d = x.shape
+    E, k = e.n_experts, e.top_k
+    total = B * S
+    G, Sg = moe_groups(total)
+    C = moe_capacity(cfg, Sg)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if e.router_softcap:
+        logits = e.router_softcap * jnp.tanh(logits / e.router_softcap)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # [B,S,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    xg = x.reshape(G, Sg, d)
+    eg = top_e.reshape(G, Sg, k)
+    pg = top_p.reshape(G, Sg, k)
+    if MOE_XG_SPEC is not None:
+        xg = jax.lax.with_sharding_constraint(xg, MOE_XG_SPEC)
+
+    def process(args):
+        xg, eg, pg = args
+        dispatch, combine = _gshard_dispatch(cfg, eg, pg, C)
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+        if MOE_XE_SPEC is not None:                             # -> EP layout
+            xe = jax.lax.with_sharding_constraint(xe, MOE_XE_SPEC)
+        ge = _act(cfg.ffn_kind, jnp.einsum(
+            "gecd,edf->gecf", xe, params["w_gate"].astype(x.dtype)))
+        ue = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(x.dtype))
+        ye = jnp.einsum("gecf,efd->gecd", ge * ue, params["w_down"].astype(x.dtype))
+        if MOE_XE_SPEC is not None:
+            ye = jax.lax.with_sharding_constraint(ye, MOE_XE_SPEC)
+        yg = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+        if MOE_XG_SPEC is not None and yg.ndim == 3:
+            yg = jax.lax.with_sharding_constraint(yg, MOE_XG_SPEC)
+        return yg
+
+    if ANALYSIS_VMAP_GROUPS or MOE_CHUNKS <= 1 or G % MOE_CHUNKS:
+        y = process((xg, eg, pg)).reshape(B, S, d)
+    else:
+        gc = G // MOE_CHUNKS
+        xs = (xg.reshape(MOE_CHUNKS, gc, Sg, d),
+              eg.reshape(MOE_CHUNKS, gc, Sg, k),
+              pg.reshape(MOE_CHUNKS, gc, Sg, k))
+        y = jax.lax.map(jax.checkpoint(process, prevent_cse=False),
+                        xs).reshape(B, S, d)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e, E, dtype=jnp.float32).sum(2), axis=(0, 1))
+    frac_probs = probs.mean((0, 1))
+    aux = {"load_balance_loss": E * jnp.sum(frac_tokens / k * frac_probs)}
+
+    if "shared" in params:
+        y = y + apply_ffn(params["shared"], cfg, x)
+    return y, aux

@@ -1,0 +1,438 @@
+"""Recurrent temporal mixers: RG-LRU (Griffin/RecurrentGemma), mLSTM and
+sLSTM (xLSTM).
+
+Training uses parallel forms where they exist (associative scan for the
+RG-LRU's linear recurrence, the stabilized quadratic form for mLSTM);
+sLSTM's nonlinear recurrence is a `lax.scan`.  Decode carries O(1) state
+per layer — this is what makes the `long_500k` shape feasible for the
+ssm/hybrid architectures (DESIGN.md §Arch-applicability).
+
+Cache pytrees:
+  rglru : {"h": [B, W], "conv": [B, cw-1, W]}
+  mlstm : {"C": [B, nh, hd, hd], "n": [B, nh, hd], "m": [B, nh],
+           "conv": [B, cw-1, W]}
+  slstm : {"c","n","h": [B, nh, hd], "m": [B, nh, hd]}
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from functools import partial
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+_RGLRU_C = 8.0
+ANALYSIS_FULL_CHUNKS = False  # dry-run cost accounting (see launch/dryrun.py)
+RGLRU_SEQ_SPEC = None  # launcher-set NamedSharding [B, S:model, W]: sequence-
+                       # parallel RG-LRU — gate matmuls go local (no psum per
+                       # gate per layer); the linear scan crosses shard
+                       # boundaries with O(B*W) state collectives only.
+_MLSTM_CHUNK = 256
+_SLSTM_SEGMENT = 512
+
+
+# ---------------------------------------------------------------------------
+# Linear recurrence h_t = a_t * h_{t-1} + b_t with an O(S)-memory VJP.
+#
+# Autodiff through lax.associative_scan saves every tree level (~2 log S full
+# arrays); the closed-form adjoint is itself a linear recurrence run in
+# reverse:  g_t = dh_t + a_{t+1} g_{t+1},  da_t = g_t * h_{t-1},  db_t = g_t.
+# ---------------------------------------------------------------------------
+
+
+def _assoc_scan(a, b, axis=1):
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=axis)
+    return h
+
+
+@jax.custom_vjp
+def linear_scan(a, b):
+    """a, b: [B, S, W] fp32 -> h [B, S, W] with h_t = a_t h_{t-1} + b_t
+    (h_0 = b_0 convention: a_0 multiplies an implicit zero state)."""
+    return _assoc_scan(a, b)
+
+
+def _linear_scan_fwd(a, b):
+    h = _assoc_scan(a, b)
+    return h, (a, h)
+
+
+def _linear_scan_bwd(res, dh):
+    a, h = res
+    # reverse-time linear recurrence on the cotangent
+    a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+    g = _assoc_scan(a_next[:, ::-1], dh[:, ::-1])[:, ::-1]
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    return g * h_prev, g
+
+
+linear_scan.defvjp(_linear_scan_fwd, _linear_scan_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (width cw), with carried state for decode
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """x: [B, S, W]; w: [cw, W] depthwise taps; state: [B, cw-1, W] prior
+    inputs (decode) or None (train, zero history)."""
+    cw = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)  # [B, S+cw-1, W]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(cw)
+    )
+    new_state = xp[:, -(cw - 1):, :] if state is not None else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(L)) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))
+    return {
+        "w_x": dense_init(ks[1], (d, w), in_axis=0, dtype=dt),
+        "w_y": dense_init(ks[2], (d, w), in_axis=0, dtype=dt),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, w), in_axis=0, dtype=dt),
+        "w_rec_gate": dense_init(ks[4], (w, w), in_axis=0, dtype=dt),
+        "w_in_gate": dense_init(ks[5], (w, w), in_axis=0, dtype=dt),
+        "lambda": lam.astype(dt),
+        "w_out": dense_init(ks[6], (w, d), in_axis=0, dtype=dt),
+    }
+
+
+def _rglru_coeffs(params, xc):
+    """Gate math shared by train/decode. xc: [..., W] conv output."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xc, params["w_rec_gate"].astype(xc.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xc, params["w_in_gate"].astype(xc.dtype)).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xc.astype(jnp.float32))
+    return a, b
+
+
+def apply_rglru(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                cache: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Griffin recurrent block: dual-branch in-proj, causal conv, RG-LRU,
+    GeLU-gated merge, out-proj. x: [B, S, d]."""
+    y_br = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_y"].astype(x.dtype)))
+    x_br = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(x.dtype))
+    if cache is None and RGLRU_SEQ_SPEC is not None:
+        y_br = jax.lax.with_sharding_constraint(y_br, RGLRU_SEQ_SPEC)
+        x_br = jax.lax.with_sharding_constraint(x_br, RGLRU_SEQ_SPEC)
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(x_br, params["conv_w"], conv_state)
+
+    a, b = _rglru_coeffs(params, xc)  # [B,S,W] fp32
+    if cache is None:
+        # h_t = a_t h_{t-1} + b_t — O(S)-memory custom-VJP parallel scan
+        h = linear_scan(a, b)
+        new_cache = None
+    else:
+        h0 = cache["h"].astype(jnp.float32)  # [B, W]
+        # decode steps are S=1 in production; support small S via mini-scan
+        def step(h, ab):
+            a_t, b_t = ab
+            h_new = a_t * h + b_t
+            return h_new, h_new
+        hT, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+        h = hs.swapaxes(0, 1)
+        new_cache = {"h": hT, "conv": new_conv}
+    out = (h.astype(x.dtype) * y_br)
+    return jnp.einsum("bsw,wd->bsd", out, params["w_out"].astype(x.dtype)), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width),
+                          jnp.dtype(cfg.activation_dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix cell)
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    w = 2 * cfg.d_model          # up-projection factor 2 (xLSTM paper)
+    nh = cfg.n_heads
+    return w, nh, w // nh
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w, nh, hd = _mlstm_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], (d, w), in_axis=0, dtype=dt),
+        "w_gate": dense_init(ks[1], (d, w), in_axis=0, dtype=dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), in_axis=0, dtype=dt),
+        # block-diagonal per-head projections (xLSTM paper §mLSTM block)
+        "w_q": dense_init(ks[3], (nh, hd, hd), in_axis=1, dtype=dt),
+        "w_k": dense_init(ks[4], (nh, hd, hd), in_axis=1, dtype=dt),
+        "w_v": dense_init(ks[5], (nh, hd, hd), in_axis=1, dtype=dt),
+        "w_i": dense_init(ks[6], (w, nh), in_axis=0, dtype=dt),
+        "w_f": dense_init(ks[7], (w, nh), in_axis=0, dtype=dt),
+        "b_i": jnp.zeros((nh,), dt),
+        "b_f": jnp.full((nh,), 3.0, dt),  # forget-gate bias toward remembering
+        "gn_scale": jnp.ones((w,), dt),
+        "w_down": dense_init(ks[8], (w, d), in_axis=0, dtype=dt),
+    }
+
+
+def _headwise_rms(h, scale, nh):
+    """Per-head group norm (rms flavor) as in xLSTM blocks. h: [B,S,nh,hd]."""
+    hf = h.astype(jnp.float32)
+    hf = hf * jax.lax.rsqrt((hf**2).mean(-1, keepdims=True) + 1e-6)
+    B, S = h.shape[:2]
+    return (hf.reshape(B, S, -1) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def apply_mlstm(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                cache: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    B, S, d = x.shape
+    w, nh, hd = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dw->bsw", x, params["w_up"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dw->bsw", x, params["w_gate"].astype(x.dtype))
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(up, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    xch = xc.reshape(B, S, nh, hd)
+    uph = up.reshape(B, S, nh, hd)
+    q = jnp.einsum("bsne,neh->bsnh", xch, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("bsne,neh->bsnh", xch, params["w_k"].astype(x.dtype)) / np.sqrt(hd)
+    v = jnp.einsum("bsne,neh->bsnh", uph, params["w_v"].astype(x.dtype))
+    i_pre = (jnp.einsum("bsw,wn->bsn", xc, params["w_i"].astype(x.dtype))
+             + params["b_i"].astype(x.dtype)).astype(jnp.float32)   # [B,S,nh]
+    f_pre = (jnp.einsum("bsw,wn->bsn", xc, params["w_f"].astype(x.dtype))
+             + params["b_f"].astype(x.dtype)).astype(jnp.float32)
+
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid
+
+    if cache is None:
+        # Chunkwise-parallel stabilized form (xLSTM eq. 19-27 reorganized):
+        # quadratic only within a chunk of length L, state (C', n', m)
+        # carried across chunks — peak memory O(B*L*L*nh) instead of O(S^2).
+        # analysis mode caps the chunk at 1024: the chunk scan is counted
+        # once by XLA cost analysis, so the un-counted repetitions are the
+        # intra-chunk quadratic+state terms only (<2-3% of mLSTM flops,
+        # which its dense projections dominate) — and compile time drops 16x
+        # vs full-sequence chunks.
+        L = min(1024, S) if ANALYSIS_FULL_CHUNKS else min(_MLSTM_CHUNK, S)
+        if S % L:
+            raise ValueError(f"mLSTM requires seq divisible by chunk {L}")
+        nC = S // L
+
+        def chunked(t, hdim):
+            return t.astype(jnp.float32).reshape(B, nC, L, nh, hdim).swapaxes(0, 1)
+
+        qc, kc, vc = chunked(q, hd), chunked(k, hd), chunked(v, hd)
+        ic = i_pre.reshape(B, nC, L, nh).swapaxes(0, 1)           # [nC,B,L,nh]
+        lfc = log_f.reshape(B, nC, L, nh).swapaxes(0, 1)
+
+        def chunk_step(carry, xs):
+            # C' [B,nh,hd_v,hd_e], n' [B,nh,hd_e], m [B,nh]; true state is
+            # C = C' * exp(m) (stabilized scaling).  e = key dim, h = value dim.
+            Cp, npv, mp = carry
+            q_c, k_c, v_c, i_c, lf_c = xs
+            F = jnp.cumsum(lf_c, axis=1)                          # [B,L,nh]
+            a = i_c - F                                           # a_s = i_s - F_s
+            g = jnp.maximum(jax.lax.cummax(a, axis=1), mp[:, None, :])
+            m_t = F + g                                           # running max
+            # intra-chunk: q_t.k_s * exp(a_s - g_t) for s <= t
+            tri = jnp.tril(jnp.ones((L, L), bool))
+            w_ts = jnp.where(tri[None, :, :, None],
+                             jnp.exp(a[:, None, :, :] - g[:, :, None, :]), 0.0)
+            s_ts = jnp.einsum("btne,bsne->btsn", q_c, k_c) * w_ts
+            num = jnp.einsum("btsn,bsnh->btnh", s_ts, v_c)
+            n_loc = jnp.einsum("btsn,bsne->btne", w_ts, k_c)
+            # inter-chunk contribution, scaled by exp(mp - g_t)
+            inter_w = jnp.exp(mp[:, None, :] - g)                 # [B,L,nh]
+            num = num + jnp.einsum("btne,bnhe->btnh", q_c * inter_w[..., None], Cp)
+            n_tot = n_loc + npv[:, None, :, :] * inter_w[..., None]
+            denom = jnp.maximum(
+                jnp.abs(jnp.einsum("btne,btne->btn", n_tot, q_c)), jnp.exp(-m_t))
+            h_c = num / denom[..., None]
+            # end-of-chunk state update (rescaled to stabilizer g_L + F_L)
+            gL, FL = g[:, -1, :], F[:, -1, :]
+            scale_prev = jnp.exp(mp - gL)                          # [B,nh]
+            wa = jnp.exp(a - gL[:, None, :])                       # [B,L,nh]
+            C_new = (Cp * scale_prev[..., None, None]
+                     + jnp.einsum("bsnh,bsne->bnhe", v_c, k_c * wa[..., None]))
+            n_new = npv * scale_prev[..., None] + (k_c * wa[..., None]).sum(1)
+            m_new = FL + gL
+            return (C_new, n_new, m_new), h_c
+
+        C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, nh, hd), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+        # checkpoint the chunk body: backward recomputes the O(L^2) block
+        # from the carried state instead of saving it per chunk.
+        body = jax.checkpoint(chunk_step, prevent_cse=False)
+        (_, _, _), hcs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, lfc))
+        h = hcs.swapaxes(0, 1).reshape(B, S, nh, hd)
+        new_cache = None
+    else:
+        C0 = cache["C"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+
+        def step(carry, qkvif):
+            C, n, m_prev = carry
+            q_t, k_t, v_t, i_t, lf_t = qkvif
+            m_new = jnp.maximum(lf_t + m_prev, i_t)               # [B,nh]
+            fs = jnp.exp(lf_t + m_prev - m_new)[..., None]
+            is_ = jnp.exp(i_t - m_new)[..., None]
+            C_new = fs[..., None] * C + is_[..., None] * jnp.einsum(
+                "bnh,bnk->bnhk", v_t, k_t)
+            n_new = fs * n + is_ * k_t
+            denom = jnp.maximum(
+                jnp.abs(jnp.einsum("bnk,bnk->bn", n_new, q_t)), jnp.exp(-m_new))
+            h_t = jnp.einsum("bnhk,bnk->bnh", C_new, q_t) / denom[..., None]
+            return (C_new, n_new, m_new), h_t
+
+        seq = (q.swapaxes(0, 1).astype(jnp.float32),
+               k.swapaxes(0, 1).astype(jnp.float32),
+               v.swapaxes(0, 1).astype(jnp.float32),
+               i_pre.swapaxes(0, 1), log_f.swapaxes(0, 1))
+        (Cf, nf, mf), hs = jax.lax.scan(step, (C0, n0, m0), seq)
+        h = hs.swapaxes(0, 1)                                     # [B,S,nh,hd]
+        new_cache = {"C": Cf, "n": nf, "m": mf, "conv": new_conv}
+
+    hn = _headwise_rms(h.astype(x.dtype), params["gn_scale"], nh)  # [B,S,w]
+    out = hn * jax.nn.silu(gate)
+    return jnp.einsum("bsw,wd->bsd", out, params["w_down"].astype(x.dtype)), new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    w, nh, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w),
+                          jnp.dtype(cfg.activation_dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar cell with recurrent mixing)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    p = {"w_out": dense_init(ks[8], (d, d), in_axis=0, dtype=dt),
+         "gn_scale": jnp.ones((d,), dt)}
+    for j, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = dense_init(ks[j], (d, d), in_axis=0, dtype=dt)
+        p[f"r_{g}"] = dense_init(ks[4 + j], (nh, hd, hd), in_axis=1, dtype=dt)
+        p[f"b_{g}"] = (jnp.full((d,), 1.0, dt) if g == "f" else jnp.zeros((d,), dt))
+    return p
+
+
+def apply_slstm(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                cache: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+
+    pre = {
+        g: jnp.einsum("bsd,de->bse", x, params[f"w_{g}"].astype(x.dtype))
+        + params[f"b_{g}"].astype(x.dtype)
+        for g in ("z", "i", "f", "o")
+    }
+
+    if cache is None:
+        c0 = jnp.zeros((B, nh, hd), jnp.float32)
+        n0 = jnp.zeros((B, nh, hd), jnp.float32)
+        h0 = jnp.zeros((B, nh, hd), jnp.float32)
+        m0 = jnp.full((B, nh, hd), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = (cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+
+    def rmul(h, g):  # block-diagonal recurrent matmul per head
+        return jnp.einsum("bnh,nhk->bnk", h, params[f"r_{g}"].astype(jnp.float32))
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        z_p, i_p, f_p, o_p = (p.astype(jnp.float32).reshape(B, nh, hd) for p in pre_t)
+        z = jnp.tanh(z_p + rmul(h, "z"))
+        i_log = i_p + rmul(h, "i")
+        f_log = -jax.nn.softplus(-(f_p + rmul(h, "f")))  # log sigmoid(f)
+        o = jax.nn.sigmoid(o_p + rmul(h, "o"))
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_s = jnp.exp(i_log - m_new)
+        f_s = jnp.exp(f_log + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+        h_new = o * c_new / n_new
+        return (c_new, n_new, h_new, m_new), h_new
+
+    seq = tuple(p.swapaxes(0, 1) for p in (pre["z"], pre["i"], pre["f"], pre["o"]))
+    # sLSTM is a nonlinear recurrence: time is segmented and each segment is
+    # checkpointed, so backward saves only segment-boundary carries and
+    # recomputes within a segment (O(S/seg) live state instead of O(S)).
+    seg = S if (ANALYSIS_FULL_CHUNKS or S % _SLSTM_SEGMENT) else _SLSTM_SEGMENT
+    if S % seg:
+        (cf, nf, hf, mf), hs = jax.lax.scan(step, (c0, n0, h0, m0), seq)
+    else:
+        n_seg = S // seg
+        seq_seg = tuple(p.reshape(n_seg, seg, *p.shape[1:]) for p in seq)
+
+        def segment(carry, xs):
+            return jax.lax.scan(step, carry, xs)
+
+        body = jax.checkpoint(segment, prevent_cse=False)
+        (cf, nf, hf, mf), hs_seg = jax.lax.scan(body, (c0, n0, h0, m0), seq_seg)
+        hs = hs_seg.reshape(S, *hs_seg.shape[2:])
+    h = hs.swapaxes(0, 1).reshape(B, S, d)                        # [B,S,d]
+    new_cache = None if cache is None else {"c": cf, "n": nf, "h": hf, "m": mf}
+
+    hf32 = h.astype(jnp.float32)
+    hn = (hf32 * jax.lax.rsqrt((hf32.reshape(B, S, nh, hd) ** 2).mean(-1, keepdims=True)
+                               .repeat(hd, -1).reshape(B, S, d) + 1e-6)
+          * params["gn_scale"].astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", hn, params["w_out"].astype(x.dtype)), new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}

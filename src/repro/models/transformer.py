@@ -1,0 +1,352 @@
+"""Decoder-only LM composition: embeddings, period-aware scan-over-layers,
+loss, and the KV-cache / recurrent-state decode path.
+
+Scan-over-layers: parameters of layer i belong to pattern position
+i % period; per position they are stacked over the n_layers//period full
+periods and consumed by one `lax.scan`, so HLO size (and compile time on
+the dry-run meshes) is independent of depth.  A partial trailing period
+(e.g. recurrentgemma's 26 = 8*3 + 2) is applied unrolled after the scan.
+
+`forward` serves all entry points:
+  train/loss      : cache=None
+  prefill         : cache=init_cache(...), positions = arange(S)
+  decode_step     : cache=..., positions = [pos], S=1
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import recurrent as rec_mod
+from repro.models.common import (
+    apply_norm,
+    embed_init,
+    init_norm,
+    sinusoidal_positions,
+    softcap,
+)
+
+Params = Dict[str, Any]
+Cache = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer = temporal mixer + optional channel mixer
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {
+    "attn": attn_mod.init_attention,
+    "local": attn_mod.init_attention,
+    "mla": attn_mod.init_mla,
+    "rglru": rec_mod.init_rglru,
+    "mlstm": rec_mod.init_mlstm,
+    "slstm": rec_mod.init_slstm,
+}
+
+
+def _has_ffn(cfg: ModelConfig) -> bool:
+    return cfg.moe is not None or (cfg.d_ff > 0 and cfg.ffn_kind != "none")
+
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "mixer_norm": init_norm(cfg.d_model, cfg.norm_style, jnp.dtype(cfg.param_dtype)),
+        "mixer": _MIXER_INIT[kind](ks[0], cfg),
+    }
+    if _has_ffn(cfg):
+        p["ffn_norm"] = init_norm(cfg.d_model, cfg.norm_style, jnp.dtype(cfg.param_dtype))
+        p["ffn"] = (ffn_mod.init_moe(ks[1], cfg) if cfg.moe is not None
+                    else ffn_mod.init_ffn(ks[1], cfg))
+    if cfg.post_block_norms:
+        p["post_mixer_norm"] = init_norm(cfg.d_model, cfg.norm_style,
+                                         jnp.dtype(cfg.param_dtype))
+        if _has_ffn(cfg):
+            p["post_ffn_norm"] = init_norm(cfg.d_model, cfg.norm_style,
+                                           jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_layer(
+    p: Params, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+    positions: jnp.ndarray, cache: Optional[Cache],
+) -> Tuple[jnp.ndarray, Optional[Cache], jnp.ndarray]:
+    h = apply_norm(p["mixer_norm"], x, cfg.norm_style, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        y, new_cache = attn_mod.apply_attention(p["mixer"], cfg, kind, h, positions, cache)
+    elif kind == "mla":
+        y, new_cache = attn_mod.apply_mla(p["mixer"], cfg, h, positions, cache)
+    elif kind == "rglru":
+        y, new_cache = rec_mod.apply_rglru(p["mixer"], cfg, h, cache)
+    elif kind == "mlstm":
+        y, new_cache = rec_mod.apply_mlstm(p["mixer"], cfg, h, cache)
+    elif kind == "slstm":
+        y, new_cache = rec_mod.apply_slstm(p["mixer"], cfg, h, cache)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cfg.post_block_norms:
+        y = apply_norm(p["post_mixer_norm"], y, cfg.norm_style, cfg.norm_eps)
+    x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if _has_ffn(cfg):
+        h = apply_norm(p["ffn_norm"], x, cfg.norm_style, cfg.norm_eps)
+        if cfg.moe is not None:
+            y, moe_aux = ffn_mod.apply_moe(p["ffn"], cfg, h)
+            aux = aux + moe_aux["load_balance_loss"]
+        else:
+            y = ffn_mod.apply_ffn(p["ffn"], cfg, h)
+        if cfg.post_block_norms:
+            y = apply_norm(p["post_ffn_norm"], y, cfg.norm_style, cfg.norm_eps)
+        x = x + y
+    return x, new_cache, aux
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> Cache:
+    if kind in ("attn", "local"):
+        return attn_mod.init_attn_cache(cfg, batch, max_len, kind)
+    if kind == "mla":
+        return attn_mod.init_mla_cache(cfg, batch, max_len)
+    if kind == "rglru":
+        return rec_mod.init_rglru_cache(cfg, batch)
+    if kind == "mlstm":
+        return rec_mod.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return rec_mod.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_full_periods, n_remainder_layers)."""
+    return cfg.n_layers // cfg.period, cfg.n_layers % cfg.period
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    n_per, n_rem = _layout(cfg)
+    keys = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Params = {"final_norm": init_norm(cfg.d_model, cfg.norm_style, dt)}
+    if cfg.frontend != "audio_stub":
+        params["embed"] = {"table": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "w": embed_init(keys[1], (cfg.d_model, cfg.vocab_size), dt)}
+
+    blocks = []
+    for pos, kind in enumerate(cfg.block_pattern):
+        pkeys = jax.random.split(jax.random.fold_in(keys[2], pos), max(n_per, 1))
+        stacked = jax.vmap(lambda k: init_layer(k, cfg, kind))(pkeys[:n_per]) \
+            if n_per else None
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    rem = []
+    for pos in range(n_rem):
+        kind = cfg.block_pattern[pos]
+        rem.append(init_layer(jax.random.fold_in(keys[3], pos), cfg, kind))
+    params["rem_blocks"] = tuple(rem)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    n_per, n_rem = _layout(cfg)
+
+    def stack(kind):
+        one = init_layer_cache(cfg, kind, batch, max_len)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_per,) + a.shape).copy(), one)
+
+    scanned = tuple(stack(kind) for kind in cfg.block_pattern) if n_per else tuple()
+    rem = tuple(init_layer_cache(cfg, cfg.block_pattern[i], batch, max_len)
+                for i in range(n_rem))
+    return {"scanned": scanned, "rem": rem}
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                 positions: jnp.ndarray) -> jnp.ndarray:
+    dt = jnp.dtype(cfg.activation_dtype)
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"].astype(dt)  # precomputed EnCodec frame embeddings
+    elif cfg.frontend == "vision_stub":
+        tok = params["embed"]["table"].astype(dt)[batch["tokens"]]
+        if "patch_embeds" in batch:
+            x = jnp.concatenate([batch["patch_embeds"].astype(dt), tok], axis=1)
+        else:
+            x = tok
+    else:
+        x = params["embed"]["table"].astype(dt)[batch["tokens"]]
+    if cfg.scale_embeddings:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    if cfg.pos_embedding == "sinusoidal":
+        table = sinusoidal_positions(int(positions.shape[0]), cfg.d_model)
+        # positions may be offset (decode); recompute per position
+        half = cfg.d_model // 2
+        dim = jnp.arange(half, dtype=jnp.float32)
+        ang = positions[:, None].astype(jnp.float32) / jnp.power(
+            10_000.0, 2 * dim / cfg.d_model)
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)[None].astype(dt)
+    return x
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    cache: Optional[Cache] = None,
+    positions: Optional[jnp.ndarray] = None,
+    remat: str = "none",
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Cache], jnp.ndarray]:
+    """Returns (logits [B,S,V], new_cache or None, aux_loss scalar).
+
+    unroll=True replaces the layer scan with a python loop — used by the
+    dry-run cost-accounting pass (XLA counts scan bodies once; see
+    launch/dryrun.py), never in production."""
+    n_per, n_rem = _layout(cfg)
+    if positions is None:
+        S = (batch["embeds"].shape[1] if cfg.frontend == "audio_stub"
+             else batch["tokens"].shape[1])
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            S += batch["patch_embeds"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_inputs(params, cfg, batch, positions)
+
+    def period_body(carry, xs):
+        x, aux = carry
+        layer_params, layer_caches = xs
+        new_caches = []
+        for pos, kind in enumerate(cfg.block_pattern):
+            c = None if layer_caches is None else layer_caches[pos]
+            x, nc, a = apply_layer(layer_params[pos], cfg, kind, x, positions, c)
+            new_caches.append(nc)
+            aux = aux + a
+        return (x, aux), tuple(new_caches)
+
+    body = period_body
+    if remat == "full":
+        body = jax.checkpoint(period_body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            period_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if n_per and unroll:
+        from repro.models.common import take_block
+
+        per_period_caches = []
+        for i in range(n_per):
+            layer_params = tuple(take_block(b, i) for b in params["blocks"])
+            layer_caches = (tuple(take_block(c, i) for c in cache["scanned"])
+                            if cache is not None else None)
+            (x, aux0), ncs = body((x, aux0), (layer_params, layer_caches))
+            per_period_caches.append(ncs)
+        if cache is not None:
+            scanned_caches = tuple(
+                jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[
+                    pcs[pos] for pcs in per_period_caches])
+                for pos in range(len(cfg.block_pattern)))
+        else:
+            scanned_caches = tuple()
+    elif n_per:
+        xs_cache = cache["scanned"] if cache is not None else None
+        (x, aux0), scanned_caches = jax.lax.scan(
+            body, (x, aux0), (params["blocks"], xs_cache))
+    else:
+        scanned_caches = tuple()
+
+    rem_caches = []
+    for pos in range(n_rem):
+        kind = cfg.block_pattern[pos]
+        c = cache["rem"][pos] if cache is not None else None
+        x, nc, a = apply_layer(params["rem_blocks"][pos], cfg, kind, x, positions, c)
+        rem_caches.append(nc)
+        aux0 = aux0 + a
+    if cache is not None:
+        new_cache = {"scanned": scanned_caches, "rem": tuple(rem_caches)}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_style, cfg.norm_eps)
+    head_w = (params["embed"]["table"].T if cfg.tie_embeddings
+              else params["head"]["w"]).astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head_w).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache, aux0
+
+
+# ---------------------------------------------------------------------------
+# Loss / decode entry points
+# ---------------------------------------------------------------------------
+
+IGNORE_INDEX = -100
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            remat: str = "none", aux_weight: float = 0.01,
+            z_weight: float = 1e-4, unroll: bool = False
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, _, aux = forward(params, cfg, batch, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vision prefix: pad labels w/ ignore
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=IGNORE_INDEX)
+    mask = labels != IGNORE_INDEX
+    safe = jnp.where(mask, labels, 0)
+    # Vocab-shard-friendly cross entropy: no take_along_axis gather (which
+    # would force SPMD to all-gather the [B,S,V] logits when the head is
+    # vocab-parallel). logsumexp reduces over the sharded axis; the label
+    # logit comes from a fused one-hot contraction.
+    z = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = z - label_logit
+    denom = jnp.maximum(mask.sum(), 1)
+    ce = jnp.where(mask, nll, 0.0).sum() / denom
+    # z-loss (stabilizes the fp32 logits against drift)
+    zl = jnp.where(mask, z**2, 0.0).sum() / denom
+    total = ce + aux_weight * aux + z_weight * zl
+    return total, {"ce": ce, "aux": aux, "z_loss": zl}
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            max_len: int) -> Tuple[jnp.ndarray, Cache]:
+    B = (batch["embeds"] if cfg.frontend == "audio_stub" else batch["tokens"]).shape[0]
+    cache = init_cache(cfg, B, max_len)
+    logits, cache, _ = forward(params, cfg, batch, cache=cache)
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
+                inputs: Dict[str, jnp.ndarray], pos) -> Tuple[jnp.ndarray, Cache]:
+    """One token for the whole batch. inputs: {"tokens": [B,1]} or
+    {"embeds": [B,1,d]}; pos: scalar int32 position of this token."""
+    positions = jnp.asarray(pos, jnp.int32).reshape(1)
+    logits, cache, _ = forward(params, cfg, inputs, cache=cache, positions=positions)
+    return logits, cache
+
+
+class Model(NamedTuple):
+    """Convenience bundle used by examples and the launcher."""
+    cfg: ModelConfig
+
+    def init(self, rng) -> Params:
+        return init_params(rng, self.cfg)
+
+    def loss(self, params, batch, remat="none"):
+        return loss_fn(params, self.cfg, batch, remat=remat)
+
+    def decode(self, params, cache, inputs, pos):
+        return decode_step(params, self.cfg, cache, inputs, pos)

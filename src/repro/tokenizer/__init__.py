@@ -1,0 +1,20 @@
+"""Byte-level BPE tokenizer substrate.
+
+tiktoken is not available in this environment, so the tokenizer layer the
+paper depends on is built from scratch: a trainer (`train_bpe`), a runtime
+codec (`BPETokenizer.encode` / `.decode`), vocab (de)serialization, and
+special-token handling.  Special tokens are deliberately assigned IDs
+>= 100_000 (mirroring cl100k_base) so that prompts containing them exercise
+the uint32 packing path of the LoPace format.
+"""
+
+from repro.tokenizer.bpe import BPETokenizer, train_bpe
+from repro.tokenizer.vocab import load_tokenizer, save_tokenizer, default_tokenizer
+
+__all__ = [
+    "BPETokenizer",
+    "train_bpe",
+    "load_tokenizer",
+    "save_tokenizer",
+    "default_tokenizer",
+]

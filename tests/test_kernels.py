@@ -1,0 +1,121 @@
+"""Per-kernel validation (deliverable c): shape/dtype sweeps in
+interpret=True mode against the pure-jnp oracles in each ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack_tokens
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.histogram import histogram_ref, token_histogram
+from repro.kernels.token_pack import (delta_zigzag_device, delta_zigzag_ref,
+                                      pack_ref, pack_tokens_device)
+
+RNG = np.random.default_rng(0)
+
+
+# -- flash attention ---------------------------------------------------------
+
+SWEEP = [
+    # B, Sq, Skv, Hq, Hkv, hd, causal, window, cap
+    (2, 128, 128, 4, 2, 64, True, 0, 0.0),
+    (1, 256, 256, 4, 4, 32, True, 64, 0.0),
+    (2, 128, 128, 8, 1, 64, True, 0, 50.0),     # MQA + gemma2 softcap
+    (1, 96, 96, 2, 2, 64, True, 0, 0.0),        # pad path
+    (2, 1, 384, 4, 2, 64, True, 0, 0.0),        # decode with offset
+    (1, 64, 64, 2, 2, 128, True, 0, 0.0),       # hw-aligned head dim
+]
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=[str(i) for i in range(len(SWEEP))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, Sq, Skv, Hq, Hkv, hd, causal, window, cap = case
+    off = Skv - Sq if Sq < Skv else 0
+    q = jnp.asarray(RNG.normal(size=(B, Sq, Hq, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_kv=64, q_offset=off, interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                        softcap=cap, q_offset=off).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_engine():
+    """Kernel == the model's blockwise/flash jnp engines (one oracle)."""
+    from repro.models.attention import blockwise_attention, flash_self_attention
+
+    q = jnp.asarray(RNG.normal(size=(2, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 128, 2, 32)), jnp.float32)
+    pos = jnp.arange(128, dtype=jnp.int32)
+    a = flash_attention(q, k, v, block_q=64, block_kv=64, interpret=True)
+    b = blockwise_attention(q, k, v, pos, pos, block_q=64, block_kv=64)
+    c = flash_self_attention(q, k, v, True, 0, 0.0, None, (64, 64), 0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5, atol=1e-5)
+
+
+# -- token pack --------------------------------------------------------------
+
+@pytest.mark.parametrize("n,hi", [(1, 60000), (777, 60000), (2048, 60000),
+                                  (4096, 100000), (3000, 2**31 - 1)])
+def test_pack_kernel_bit_identical(n, hi):
+    ids = RNG.integers(0, hi, n)
+    fb, data = pack_tokens_device(ids)
+    assert bytes([fb]) + data == pack_tokens(ids, "fixed")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200))
+def test_pack_kernel_property(ids):
+    arr = np.asarray(ids, np.uint32)
+    fb, data = pack_tokens_device(arr)
+    assert bytes([fb]) + data == pack_tokens(arr, "fixed")
+
+
+def test_pack_ref_widths():
+    ids = jnp.asarray([0, 1, 255, 256, 65535], jnp.int32)
+    b2 = pack_ref(ids, 2)
+    assert b2.shape == (5, 2)
+    assert bytes(np.asarray(b2[4])) == b"\xff\xff"
+
+
+def test_delta_zigzag_kernel():
+    ids = jnp.asarray(RNG.integers(0, 2**30, 3000), jnp.int32)
+    prev = jnp.concatenate([jnp.zeros(1, ids.dtype), ids[:-1]])
+    np.testing.assert_array_equal(np.asarray(delta_zigzag_device(ids)),
+                                  np.asarray(delta_zigzag_ref(ids, prev)))
+
+
+# -- histogram ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n,v", [(100, 512), (5000, 8192), (4096, 100352),
+                                 (1, 8), (1024, 2048)])
+def test_histogram_vs_ref(n, v):
+    ids = jnp.asarray(RNG.integers(0, v, n), jnp.int32)
+    h = token_histogram(ids, v)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(histogram_ref(ids, v)))
+    assert int(np.asarray(h).sum()) == n
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 511), min_size=1, max_size=300))
+def test_histogram_property(ids):
+    arr = jnp.asarray(ids, jnp.int32)
+    h = np.asarray(token_histogram(arr, 512))
+    assert h.sum() == len(ids)
+    ref = np.bincount(np.asarray(ids), minlength=512)
+    np.testing.assert_array_equal(h, ref)
+
+
+def test_histogram_ignores_padding_ids():
+    ids = jnp.asarray([-1, 3, 3, -1, 7], jnp.int32)
+    h = np.asarray(token_histogram(ids, 8))
+    assert h[3] == 2 and h[7] == 1 and h.sum() == 3

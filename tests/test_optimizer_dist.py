@@ -1,0 +1,153 @@
+"""Optimizer, gradient compression, bucketed collectives, checkpointing,
+fault-tolerance scaffolding."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                   save_checkpoint)
+from repro.dist.collectives import (dequantize_int8, ef_compress_tree,
+                                    flatten_buckets, psum_bucketed,
+                                    quantize_int8, unflatten_buckets)
+from repro.dist.fault import FleetMonitor, Heartbeat, RestartPolicy
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+
+
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = init_opt_state(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, opt, m = adamw_update(cfg, grads, opt, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert int(opt["step"]) == 60
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_schedule(cfg, jnp.array(0))) == 0.0
+    assert abs(float(lr_schedule(cfg, jnp.array(10))) - 1e-3) < 1e-9
+    assert float(lr_schedule(cfg, jnp.array(100))) < 2e-4
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    opt = init_opt_state(params)
+    _, _, m = adamw_update(cfg, {"w": jnp.full(3, 100.0)}, opt, params)
+    assert float(m["grad_norm"]) > 100
+
+
+def test_int8_quantize_roundtrip_error_bound():
+    x = jnp.array(np.random.default_rng(0).normal(size=1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_conservation():
+    """EF property: decompressed + residual == grad + old residual."""
+    rng = np.random.default_rng(1)
+    grads = {"a": jnp.array(rng.normal(size=50), jnp.float32),
+             "b": (jnp.array(rng.normal(size=(4, 5)), jnp.float32),)}
+    ef0 = jax.tree_util.tree_map(lambda g: jnp.ones_like(g) * 0.01, grads)
+    deq, ef1 = ef_compress_tree(grads, ef0)
+    lhs = jax.tree_util.tree_map(lambda d, e: d + e, deq, ef1)
+    rhs = jax.tree_util.tree_map(lambda g, e: g + e, grads, ef0)
+    for a, b in zip(jax.tree_util.tree_leaves(lhs), jax.tree_util.tree_leaves(rhs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_bucketed_flatten_roundtrip():
+    rng = np.random.default_rng(2)
+    tree = {"x": jnp.array(rng.normal(size=(7, 3)), jnp.float32),
+            "y": [jnp.array(rng.normal(size=100), jnp.bfloat16),
+                  jnp.array([1, 2], jnp.float32)]}
+    buckets, spec = flatten_buckets(tree, bucket_bytes=256)
+    assert len(buckets) >= 2
+    out = unflatten_buckets(buckets, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-2)
+
+
+def test_psum_bucketed_under_shard_map():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+
+    def f(t):
+        return psum_bucketed(t, "data")
+
+    out = shard_map(f, mesh=mesh, in_specs=({"w": P()},), out_specs={"w": P()})(tree)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.arange(8))
+
+
+def test_checkpoint_roundtrip_and_pruning(tmp_path):
+    tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "step": jnp.array(7, jnp.int32)}
+    for step in (1, 2, 3, 4):
+        save_checkpoint(tmp_path, step, tree, extra={"data_state": {"step": step}},
+                        keep_last=2)
+    assert latest_checkpoint(tmp_path).name == "step_00000004"
+    # keep_last pruned old steps
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert "step_00000001" not in names
+    restored = restore_checkpoint(latest_checkpoint(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"w": jnp.ones(10)}
+    path = save_checkpoint(tmp_path, 1, tree)
+    shard = next(path.glob("shard_*.npz"))
+    data = bytearray(shard.read_bytes())
+    data[-1] ^= 0xFF
+    shard.write_bytes(bytes(data))
+    with pytest.raises(ValueError, match="corrupt"):
+        restore_checkpoint(path, tree)
+
+
+def test_checkpoint_shape_mismatch_refused(tmp_path):
+    path = save_checkpoint(tmp_path, 1, {"w": jnp.ones(10)})
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(path, {"w": jnp.ones(11)})
+
+
+def test_fleet_monitor_and_straggler(tmp_path):
+    hb1 = Heartbeat(tmp_path, "host0")
+    hb2 = Heartbeat(tmp_path, "host1")
+    hb3 = Heartbeat(tmp_path, "host2")
+    for step in range(3):
+        hb1.beat(step, step_time_s=1.0)
+        hb2.beat(step, step_time_s=1.1)
+        hb3.beat(step, step_time_s=9.0)  # straggler
+    mon = FleetMonitor(tmp_path, dead_after=60, straggler_factor=2.0)
+    st = mon.scan()
+    assert set(st.alive) == {"host0", "host1", "host2"}
+    assert st.stragglers == ["host2"]
+    # host death
+    st2 = mon.scan(now=__import__("time").time() + 120)
+    assert set(st2.dead) == {"host0", "host1", "host2"}
+    pol = RestartPolicy(max_failures=2)
+    assert pol.decide(st) == "continue"
+    assert pol.decide(st2) == "abort" or pol.decide(st2) == "restart_elastic"
+
+
+def test_restart_policy_elastic_then_abort(tmp_path):
+    from repro.dist.fault import FleetStatus
+
+    pol = RestartPolicy(max_failures=3)
+    dead1 = FleetStatus(alive=["a"], dead=["b"], stragglers=[], median_step_time=1.0)
+    assert pol.decide(dead1) == "restart_elastic"
+    dead3 = FleetStatus(alive=[], dead=["a", "b", "c"], stragglers=[], median_step_time=None)
+    assert pol.decide(dead3) == "abort"

@@ -1,0 +1,76 @@
+"""Unit + property tests for LoPace binary packing (paper §3.3.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+token_streams = st.lists(st.integers(0, 2**31 - 1), max_size=300)
+small_streams = st.lists(st.integers(0, 65535), max_size=300)
+
+
+@pytest.mark.parametrize("scheme", ["fixed", "varint", "delta-varint"])
+def test_roundtrip_basic(scheme):
+    for ids in ([], [0], [65535], [65536], [1, 2, 3, 70000, 5],
+                list(range(1000))):
+        out = packing.unpack_tokens(packing.pack_tokens(ids, scheme))
+        assert list(out) == ids
+
+
+@settings(max_examples=60, deadline=None)
+@given(ids=token_streams, scheme=st.sampled_from(["fixed", "varint", "delta-varint"]))
+def test_roundtrip_property(ids, scheme):
+    out = packing.unpack_tokens(packing.pack_tokens(ids, scheme))
+    assert list(out) == ids
+
+
+@settings(max_examples=40, deadline=None)
+@given(ids=small_streams)
+def test_uint16_decision(ids):
+    """Eq. 7: uint16 iff max <= 65535; total size 1 + 2n (paper §3.3.3)."""
+    payload = packing.pack_tokens(ids, "fixed")
+    assert payload[0] == packing.FMT_U16
+    assert len(payload) == 1 + 2 * len(ids)
+
+
+def test_uint32_escalation():
+    ids = [1, 2, 65536]
+    payload = packing.pack_tokens(ids, "fixed")
+    assert payload[0] == packing.FMT_U32
+    assert len(payload) == 1 + 4 * len(ids)
+
+
+def test_packed_nbytes_fixed_matches():
+    for ids in ([], [5], [70000], list(range(100))):
+        assert packing.packed_nbytes_fixed(ids) == len(packing.pack_tokens(ids, "fixed"))
+
+
+def test_self_describing_format_byte():
+    """The format byte alone selects the decoder (paper §3.1)."""
+    p16 = packing.pack_tokens([1, 2], "fixed")
+    p32 = packing.pack_tokens([1, 2, 99999], "fixed")
+    pv = packing.pack_tokens([1, 2], "varint")
+    pd = packing.pack_tokens([1, 2], "delta-varint")
+    assert {p16[0], p32[0], pv[0], pd[0]} == {0x00, 0x01, 0x02, 0x03}
+
+
+def test_unknown_format_rejected():
+    with pytest.raises(ValueError):
+        packing.unpack_tokens(bytes([0x7F, 1, 2]))
+    with pytest.raises(ValueError):
+        packing.unpack_tokens(b"")
+
+
+def test_delta_varint_compact_for_sorted():
+    ids = list(range(10_000, 12_000))
+    assert len(packing.pack_tokens(ids, "delta-varint")) < len(
+        packing.pack_tokens(ids, "fixed"))
+
+
+def test_out_of_range_rejected():
+    with pytest.raises(ValueError):
+        packing.pack_tokens([-1])
+    with pytest.raises(ValueError):
+        packing.pack_tokens([2**32])

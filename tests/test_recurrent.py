@@ -1,0 +1,103 @@
+"""Recurrent-mixer math: linear-scan custom VJP, mLSTM chunkwise ==
+recurrent decode, RG-LRU decode == parallel scan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models.recurrent import (apply_mlstm, apply_rglru, init_mlstm,
+                                    init_mlstm_cache, init_rglru,
+                                    init_rglru_cache, linear_scan)
+
+CONFIGS = all_configs()
+
+
+def test_linear_scan_matches_sequential():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (2, 64, 8)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 64, 8)), jnp.float32)
+    h = np.zeros((2, 8))
+    seq = []
+    for t in range(64):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        seq.append(h.copy())
+    ref = np.stack(seq, axis=1)
+    # associative (tree) reduction reassociates f32 products: tolerance
+    # reflects reassociation error, not a logic difference
+    np.testing.assert_allclose(np.asarray(linear_scan(a, b)), ref,
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_linear_scan_vjp_matches_autodiff():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(0.3, 0.95, (1, 32, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, 32, 4)), jnp.float32)
+
+    def naive(a, b):
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return (h ** 3).sum()
+
+    def ours(a, b):
+        return (linear_scan(a, b) ** 3).sum()
+
+    g1 = jax.grad(naive, argnums=(0, 1))(a, b)
+    g2 = jax.grad(ours, argnums=(0, 1))(a, b)
+    for x, y in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_decode_matches_parallel():
+    cfg = CONFIGS["recurrentgemma_2b"].smoke()
+    params = init_rglru(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.1, jnp.float32)
+    y_par, _ = apply_rglru(params, cfg, x, cache=None)
+    cache = init_rglru_cache(cfg, 2)
+    outs = []
+    for t in range(16):
+        y_t, cache = apply_rglru(params, cfg, x[:, t:t + 1], cache=cache)
+        outs.append(y_t)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                               np.asarray(y_seq, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_decode_matches_chunkwise():
+    cfg = CONFIGS["xlstm_1_3b"].smoke()
+    params = init_mlstm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    S = 256  # one chunk
+    x = jnp.asarray(rng.normal(size=(1, S, cfg.d_model)) * 0.1, jnp.float32)
+    y_par, _ = apply_mlstm(params, cfg, x, cache=None)
+    cache = init_mlstm_cache(cfg, 1)
+    outs = []
+    for t in range(S):
+        y_t, cache = apply_mlstm(params, cfg, x[:, t:t + 1], cache=cache)
+        outs.append(y_t)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                               np.asarray(y_seq, np.float32), rtol=5e-3, atol=5e-3)
+
+
+def test_mlstm_multi_chunk_consistency():
+    """Chunk boundaries are invisible: S=512 (2 chunks) == decode replay."""
+    cfg = CONFIGS["xlstm_1_3b"].smoke()
+    params = init_mlstm(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(1, 512, cfg.d_model)) * 0.1, jnp.float32)
+    y2, _ = apply_mlstm(params, cfg, x, cache=None)          # 2 chunks of 256
+    from repro.models import recurrent as rec
+    old = rec._MLSTM_CHUNK
+    rec._MLSTM_CHUNK = 512
+    try:
+        y1, _ = apply_mlstm(params, cfg, x, cache=None)      # single chunk
+    finally:
+        rec._MLSTM_CHUNK = old
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=3e-3, atol=3e-3)

@@ -1,0 +1,80 @@
+"""BPE tokenizer substrate: lossless roundtrip (the τ⁻¹(τ(T)) = T half of
+the paper's §3.5 proof), specials, serialization."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.tokenizer.bpe import SPECIAL_ID_BASE, BPETokenizer, train_bpe
+from repro.tokenizer.vocab import default_tokenizer, load_tokenizer, save_tokenizer
+
+TEXTS = [
+    "",
+    "hello world",
+    "def f(x: int) -> int:\n    return x * 2\n",
+    "UPPER lower 12345 !@#$%",
+    "tabs\tand\nnewlines\r\n",
+    "unicode: čišćenje 北京 🎉 ñandú",
+    "  leading and trailing  ",
+    "a" * 500,
+]
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.mark.parametrize("text", TEXTS)
+def test_roundtrip_fixed(tok, text):
+    assert tok.decode(tok.encode(text)) == text
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.text(max_size=300))
+def test_roundtrip_property(text):
+    tok = default_tokenizer()
+    assert tok.decode(tok.encode(text)) == text
+
+
+def test_special_tokens_above_uint16(tok):
+    ids = tok.encode("<|system|>\nhi\n<|endofprompt|>")
+    specials = [i for i in ids if i >= SPECIAL_ID_BASE]
+    assert len(specials) == 2
+    assert all(i > 65535 for i in specials)  # forces the uint32 path (§3.3.4)
+    assert tok.decode(ids) == "<|system|>\nhi\n<|endofprompt|>"
+
+
+def test_train_determinism():
+    docs = ["the cat sat on the mat " * 20, "def f(): return 1\n" * 30]
+    t1 = train_bpe(docs, vocab_size=300)
+    t2 = train_bpe(docs, vocab_size=300)
+    assert t1.merges == t2.merges
+    assert t1.fingerprint() == t2.fingerprint()
+
+
+def test_save_load_roundtrip(tmp_path, tok):
+    path = tmp_path / "tok.json"
+    save_tokenizer(tok, path)
+    tok2 = load_tokenizer(path)
+    assert tok2.fingerprint() == tok.fingerprint()
+    s = "some text with <|user|> special"
+    assert tok2.encode(s) == tok.encode(s)
+
+
+def test_fingerprint_detects_tampering(tmp_path, tok):
+    path = tmp_path / "tok.json"
+    save_tokenizer(tok, path)
+    doc = path.read_text().replace('"merges": [[', '"merges": [[9, 9], [', 1)
+    path.write_text(doc)
+    with pytest.raises(ValueError):
+        load_tokenizer(path)
+
+
+def test_compression_prior(tok):
+    """Tokenization maps ~3-5 chars to one id on in-domain text (§4.2.1)."""
+    from repro.data.corpus import generate_corpus
+
+    p = generate_corpus(3, seed=7)[1]
+    ids = tok.encode(p.text)
+    ratio = len(p.text) / len(ids)
+    assert 2.0 < ratio < 8.0
