@@ -11,7 +11,8 @@ from repro.core import packing
 from repro.core.adaptive import AdaptiveCompressor
 from repro.core.api import PromptCompressor, compress_hybrid
 from repro.core.rans import tokens_compress_device, tokens_decompress_device
-from repro.core.zstd_backend import BACKENDS, ZstdDictBackend, compress_bytes
+from repro.core.zstd_backend import (BACKENDS, HAVE_ZSTD, ZstdDictBackend,
+                                     compress_bytes)
 from repro.tokenizer.vocab import default_tokenizer
 
 _N = 48  # prompts per baseline (heavier codecs)
@@ -34,15 +35,19 @@ def run() -> list:
         rows.append(csv_row(f"baseline_{backend}", 1e6 * dt / len(texts),
                             f"CR={total/sum(sizes):.2f}x {total/1e6/dt:.1f}MB/s"))
 
-    # zstd dictionary training (paper §8.4.2 #2)
-    half = max(1, len(texts) // 2)
-    dict_be = ZstdDictBackend(texts[:half], dict_size=32768, level=15)
-    eval_set = texts[half:] or texts[:1]
-    sizes = [len(dict_be.compress(t.encode())) for t in eval_set]
-    plain = [len(compress_bytes(t.encode(), level=15)) for t in eval_set]
-    held = sum(len(t.encode()) for t in eval_set)
-    rows.append(csv_row("baseline_zstd_dict", 0,
-                        f"CR={held/sum(sizes):.2f}x vs_plain_zstd={sum(plain)/sum(sizes):.3f}x"))
+    # zstd dictionary training (paper §8.4.2 #2) — needs the real C library
+    if HAVE_ZSTD:
+        half = max(1, len(texts) // 2)
+        dict_be = ZstdDictBackend(texts[:half], dict_size=32768, level=15)
+        eval_set = texts[half:] or texts[:1]
+        sizes = [len(dict_be.compress(t.encode())) for t in eval_set]
+        plain = [len(compress_bytes(t.encode(), level=15)) for t in eval_set]
+        held = sum(len(t.encode()) for t in eval_set)
+        rows.append(csv_row("baseline_zstd_dict", 0,
+                            f"CR={held/sum(sizes):.2f}x vs_plain_zstd={sum(plain)/sum(sizes):.3f}x"))
+    else:
+        rows.append(csv_row("baseline_zstd_dict", 0,
+                            "SKIP:zstandard not installed (requirements-dev.txt)"))
 
     # packing schemes on hybrid (paper §8.4.2 #1/#13)
     for scheme in ("fixed", "varint", "delta-varint"):

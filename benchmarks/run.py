@@ -7,9 +7,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (baselines, compression_ratio, disk_sizes,
-                            entropy_efficiency, memory, robustness, scaling,
-                            space_savings, throughput)
+    from benchmarks import (baselines, batch_throughput, compression_ratio,
+                            disk_sizes, entropy_efficiency, memory, robustness,
+                            scaling, space_savings, throughput)
 
     modules = [
         ("table5_compression_ratio", compression_ratio),
@@ -21,6 +21,7 @@ def main() -> None:
         ("sec3.6_entropy", entropy_efficiency),
         ("sec5.3_disk", disk_sizes),
         ("beyond_paper_baselines", baselines),
+        ("store_batch_throughput", batch_throughput),
     ]
     print("name,us_per_call,derived")
     failed = False

@@ -16,13 +16,30 @@ from repro.core.api import (
     hybrid_tokens,
 )
 from repro.core.adaptive import AdaptiveCompressor
+from repro.core.codec import (
+    ByteCompressorCodec,
+    Codec,
+    PipelineCodec,
+    TokenPackCodec,
+    get_codec,
+    method_pipeline,
+    register_codec,
+)
 from repro.core.packing import pack_tokens, unpack_tokens
-from repro.core.store import PromptStore
+from repro.core.store import PromptStore, ShardedPromptStore
 
 __all__ = [
     "PromptCompressor",
     "AdaptiveCompressor",
     "PromptStore",
+    "ShardedPromptStore",
+    "Codec",
+    "PipelineCodec",
+    "TokenPackCodec",
+    "ByteCompressorCodec",
+    "register_codec",
+    "get_codec",
+    "method_pipeline",
     "compress_zstd",
     "decompress_zstd",
     "compress_token",

@@ -19,11 +19,12 @@ from __future__ import annotations
 import hashlib
 import struct
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import packing
+from repro.core.codec import PipelineCodec, TokenPackCodec, method_pipeline
 from repro.core.zstd_backend import BACKENDS, DEFAULT_LEVEL, compress_bytes, decompress_bytes
 from repro.tokenizer.bpe import BPETokenizer
 
@@ -91,7 +92,9 @@ def hybrid_tokens(payload: bytes, backend: str = "zstd") -> np.ndarray:
 # Production frame
 # ---------------------------------------------------------------------------
 
-_HEADER = struct.Struct("<2sBBBBB8s")  # magic, ver, method, backend, level, scheme, tokfp
+# magic, ver, method, backend, level (signed: zstd accepts negative levels),
+# scheme, tokenizer fingerprint
+_HEADER = struct.Struct("<2sBBBbB8s")
 
 
 @dataclass(frozen=True)
@@ -116,6 +119,14 @@ def parse_frame(blob: bytes) -> FrameInfo:
     magic, ver, mid, bid, level, sid, fp = _HEADER.unpack_from(blob, 0)
     if ver != VERSION:
         raise ValueError(f"unsupported LoPace frame version {ver}")
+    # Corrupt or future frames must fail loudly as ValueError, not leak
+    # bare KeyError/IndexError from the id tables.
+    if mid >= len(METHODS):
+        raise ValueError(f"corrupt or future LoPace frame: unknown method id {mid}")
+    if bid not in _BACKEND_NAMES:
+        raise ValueError(f"corrupt or future LoPace frame: unknown backend id {bid}")
+    if sid not in _SCHEME_NAMES:
+        raise ValueError(f"corrupt or future LoPace frame: unknown scheme id {sid}")
     return FrameInfo(
         method=METHODS[mid],
         backend=_BACKEND_NAMES[bid],
@@ -149,6 +160,13 @@ class PromptCompressor:
             raise ValueError(f"unknown backend {backend!r}")
         if scheme not in _SCHEME_IDS:
             raise ValueError(f"unknown packing scheme {scheme!r}")
+        # Levels ride in the frame header as a signed byte; negative levels
+        # are valid for the zstd backend (fast mode), so reject anything a
+        # signed byte cannot round-trip instead of silently wrapping.
+        if not -128 <= level <= 127:
+            raise ValueError(
+                f"level {level} does not fit the frame's signed level byte "
+                "[-128, 127]")
         if method in ("token", "hybrid") and tokenizer is None:
             from repro.tokenizer.vocab import default_tokenizer
 
@@ -158,43 +176,60 @@ class PromptCompressor:
         self.level = level
         self.backend = backend
         self.scheme = scheme
+        self._pipelines: Dict[tuple, PipelineCodec] = {}
+
+    # -- codec pipelines ----------------------------------------------------
+
+    def pipeline(self, method: Optional[str] = None,
+                 backend: Optional[str] = None) -> PipelineCodec:
+        """The stage pipeline implementing `method` (cached per method/backend)."""
+        key = (method or self.method, backend or self.backend)
+        pipe = self._pipelines.get(key)
+        if pipe is None:
+            pipe = method_pipeline(key[0], tokenizer=self.tokenizer,
+                                   level=self.level, backend=key[1],
+                                   scheme=self.scheme)
+            self._pipelines[key] = pipe
+        return pipe
 
     # -- raw (paper-exact) ------------------------------------------------
 
     def compress_raw(self, text: str, method: Optional[str] = None) -> bytes:
-        method = method or self.method
-        if method == "zstd":
-            return compress_zstd(text, self.level, self.backend)
-        if method == "token":
-            return compress_token(text, self.tokenizer, self.scheme)
-        return compress_hybrid(text, self.tokenizer, self.level, self.backend, self.scheme)
+        return self.pipeline(method).encode_batch([text.encode("utf-8")])[0]
 
     def decompress_raw(self, payload: bytes, method: Optional[str] = None) -> str:
-        method = method or self.method
-        if method == "zstd":
-            return decompress_zstd(payload, self.backend)
-        if method == "token":
-            return decompress_token(payload, self.tokenizer)
-        return decompress_hybrid(payload, self.tokenizer, self.backend)
+        return self.pipeline(method).decode_batch([payload])[0].decode("utf-8")
 
     # -- framed (production) ------------------------------------------------
 
-    def compress(self, text: str, method: Optional[str] = None) -> bytes:
-        method = method or self.method
-        payload = self.compress_raw(text, method)
-        header = _HEADER.pack(
+    def _header(self, method: str) -> bytes:
+        return _HEADER.pack(
             MAGIC,
             VERSION,
             _METHOD_ID[method],
             _BACKEND_IDS[self.backend],
-            self.level & 0xFF,
+            self.level,
             _SCHEME_IDS[self.scheme],
             _tok_fp(self.tokenizer if method != "zstd" else None),
         )
-        return header + payload
 
-    def decompress(self, blob: bytes) -> str:
-        info = parse_frame(blob)
+    def compress(self, text: str, method: Optional[str] = None) -> bytes:
+        return self.compress_batch([text], method)[0]
+
+    def compress_batch(self, texts: Sequence[str],
+                       method: Optional[str] = None) -> List[bytes]:
+        """Batch-first compression: one pipeline pass over the whole batch
+        (batch BPE encode, one kernel launch per packing width on device),
+        bit-identical to calling `compress` per text."""
+        method = method or self.method
+        if method not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}")
+        payloads = self.pipeline(method).encode_batch(
+            [t.encode("utf-8") for t in texts])
+        header = self._header(method)
+        return [header + p for p in payloads]
+
+    def _check_frame(self, info: FrameInfo) -> None:
         if info.method != "zstd":
             if self.tokenizer is None:
                 raise ValueError("frame needs a tokenizer but none configured")
@@ -203,21 +238,57 @@ class PromptCompressor:
                     "tokenizer fingerprint mismatch: payload was compressed with a "
                     "different vocabulary (paper §8.4.1 versioning safeguard)"
                 )
-        if info.method == "zstd":
-            return decompress_zstd(info.payload, info.backend)
-        if info.method == "token":
-            return decompress_token(info.payload, self.tokenizer)
-        return decompress_hybrid(info.payload, self.tokenizer, info.backend)
+
+    def decompress(self, blob: bytes) -> str:
+        return self.decompress_batch([blob])[0]
+
+    def decompress_batch(self, blobs: Sequence[bytes]) -> List[str]:
+        """Decode a batch of frames; frames are grouped by (method, backend)
+        so each pipeline decodes its group in one batched pass."""
+        infos = [parse_frame(b) for b in blobs]
+        out: List[Optional[str]] = [None] * len(blobs)
+        groups: Dict[tuple, List[int]] = {}
+        for i, info in enumerate(infos):
+            self._check_frame(info)
+            groups.setdefault((info.method, info.backend), []).append(i)
+        for (method, backend), members in groups.items():
+            decoded = self.pipeline(method, backend).decode_batch(
+                [infos[i].payload for i in members])
+            for i, raw in zip(members, decoded):
+                out[i] = raw.decode("utf-8")
+        return out  # type: ignore[return-value]
 
     def tokens(self, blob: bytes) -> np.ndarray:
         """Token-stream mode on a framed blob (no detokenization)."""
-        info = parse_frame(blob)
-        if info.method == "zstd":
-            return np.asarray(self.tokenizer.encode(decompress_zstd(info.payload, info.backend)),
-                              dtype=np.uint32)
-        if info.method == "token":
-            return packing.unpack_tokens(info.payload)
-        return hybrid_tokens(info.payload, info.backend)
+        return self.tokens_batch([blob])[0]
+
+    def tokens_batch(self, blobs: Sequence[bytes]) -> List[np.ndarray]:
+        infos = [parse_frame(b) for b in blobs]
+        out: List[Optional[np.ndarray]] = [None] * len(blobs)
+        groups: Dict[tuple, List[int]] = {}
+        for i, info in enumerate(infos):
+            if info.method == "zstd" and self.tokenizer is None:
+                # same guard as decompress(): a zstd frame stores text, so
+                # producing token ids requires a configured tokenizer
+                raise ValueError("frame needs a tokenizer but none configured")
+            self._check_frame(info)
+            groups.setdefault((info.method, info.backend), []).append(i)
+        for (method, backend), members in groups.items():
+            payloads = [infos[i].payload for i in members]
+            if method == "zstd":
+                ids = [np.asarray(self.tokenizer.encode(
+                    decompress_bytes(p, backend=backend).decode("utf-8")),
+                    dtype=np.uint32) for p in payloads]
+            else:
+                if method == "hybrid":
+                    payloads = [decompress_bytes(p, backend=backend)
+                                for p in payloads]
+                pack_stage = self.pipeline(method, backend).stages[0]
+                assert isinstance(pack_stage, TokenPackCodec)
+                ids = pack_stage.decode_ids_batch(payloads)
+            for i, arr in zip(members, ids):
+                out[i] = arr
+        return out  # type: ignore[return-value]
 
     # -- verification (§3.5.2) ---------------------------------------------
 

@@ -1,0 +1,207 @@
+"""Layered codec pipelines: the paper's three methods as composable stages.
+
+The paper's hybrid method (§3.4, Algorithm 1) *is* a two-stage pipeline —
+pack the token ids, then byte-compress the packed stream — and CompactPrompt
+/ LLMLingua-style systems generalize exactly this shape: a chain of
+bijective stages, each mapping a batch of byte payloads to a batch of byte
+payloads.  This module makes that structure explicit:
+
+    Codec              protocol: encode_batch / decode_batch over payloads
+    TokenPackCodec     text bytes  <-> packed token ids (τ then P)
+    ByteCompressorCodec payload    <-> C_backend(payload)  (any BACKENDS entry)
+    PipelineCodec      ordered stage composition (decode runs in reverse)
+
+and re-expresses the paper's methods as pipelines:
+
+    zstd   = [ByteCompressorCodec]
+    token  = [TokenPackCodec]
+    hybrid = [TokenPackCodec, ByteCompressorCodec]
+
+Byte-exactness contract: for every method, the pipeline's single-element
+encode output is bit-identical to the paper-exact functions in
+``repro.core.api`` (``compress_zstd`` / ``compress_token`` /
+``compress_hybrid``), and batched encode is bit-identical to sequential
+encode.  Both identities are asserted by tests/test_codec.py, so benchmark
+byte sizes are unchanged by this layering.
+
+Device routing: the fixed-width pack stage is pure byte movement, so on an
+accelerator the batch path concatenates streams and runs the Pallas
+byte-split kernel in one launch per width group
+(``repro.kernels.token_pack.pack_fixed_batch_device``); on CPU hosts the
+pure-NumPy ``packing.pack_fixed`` path is used per stream.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core import packing
+from repro.core.zstd_backend import BACKENDS, DEFAULT_LEVEL, compress_bytes, decompress_bytes
+from repro.tokenizer.bpe import BPETokenizer
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """A bijective batch transform over byte payloads."""
+
+    name: str
+
+    def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]: ...
+
+    def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]: ...
+
+
+# ---------------------------------------------------------------------------
+# Stage codecs
+# ---------------------------------------------------------------------------
+
+
+def _device_packing_available() -> bool:
+    """Use the Pallas batch path only when a non-CPU backend is attached;
+    on CPU the interpret-mode kernel loses to vectorized NumPy."""
+    try:
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover - jax is a hard dep of this repo
+        return False
+
+
+class TokenPackCodec:
+    """τ then P: UTF-8 text bytes <-> self-describing packed token stream.
+
+    ``use_device=None`` auto-routes: Pallas kernel batch path on
+    accelerators, per-stream NumPy on CPU.  Both paths are bit-identical
+    (kernel parity tests in tests/test_kernels.py).
+    """
+
+    name = "token-pack"
+
+    def __init__(self, tokenizer: BPETokenizer, scheme: str = "fixed",
+                 use_device: Optional[bool] = None) -> None:
+        if tokenizer is None:
+            raise ValueError("TokenPackCodec requires a tokenizer")
+        if scheme not in packing.PACKERS:
+            raise ValueError(f"unknown packing scheme {scheme!r}")
+        self.tokenizer = tokenizer
+        self.scheme = scheme
+        self.use_device = use_device
+
+    # -- token-level entry points (used by the token-stream storage mode) --
+
+    def encode_ids_batch(self, ids_list: Sequence[np.ndarray]) -> List[bytes]:
+        if self.scheme == "fixed":
+            use_device = (self.use_device if self.use_device is not None
+                          else _device_packing_available())
+            if use_device:
+                import jax
+
+                from repro.kernels.token_pack import pack_fixed_batch_device
+
+                # compiled kernel on real accelerators; interpret mode only
+                # when the device path is forced on a CPU host (tests)
+                return pack_fixed_batch_device(
+                    ids_list, interpret=jax.default_backend() == "cpu")
+        return [packing.pack_tokens(ids, self.scheme) for ids in ids_list]
+
+    def decode_ids_batch(self, payloads: Sequence[bytes]) -> List[np.ndarray]:
+        return [packing.unpack_tokens(p) for p in payloads]
+
+    # -- Codec protocol ----------------------------------------------------
+
+    def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        ids_list = self.tokenizer.encode_batch([p.decode("utf-8") for p in payloads])
+        return self.encode_ids_batch([np.asarray(ids, np.uint32) for ids in ids_list])
+
+    def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        return [self.tokenizer.decode_bytes(ids) for ids in self.decode_ids_batch(payloads)]
+
+
+class ByteCompressorCodec:
+    """C_backend stage over any registered byte backend (zstd by default)."""
+
+    name = "byte-compressor"
+
+    def __init__(self, level: int = DEFAULT_LEVEL, backend: str = "zstd") -> None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}")
+        self.level = level
+        self.backend = backend
+
+    def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        return [compress_bytes(p, level=self.level, backend=self.backend)
+                for p in payloads]
+
+    def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        return [decompress_bytes(p, backend=self.backend) for p in payloads]
+
+
+class PipelineCodec:
+    """Ordered composition of stages; decode applies the inverses in reverse."""
+
+    def __init__(self, stages: Sequence[Codec], name: str = "pipeline") -> None:
+        if not stages:
+            raise ValueError("pipeline needs at least one stage")
+        self.stages = list(stages)
+        self.name = name
+
+    def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        out = list(payloads)
+        for stage in self.stages:
+            out = stage.encode_batch(out)
+        return out
+
+    def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        out = list(payloads)
+        for stage in reversed(self.stages):
+            out = stage.decode_batch(out)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+CODEC_REGISTRY: Dict[str, Callable[..., Codec]] = {}
+
+
+def register_codec(name: str, factory: Callable[..., Codec]) -> None:
+    if name in CODEC_REGISTRY:
+        raise ValueError(f"codec {name!r} already registered")
+    CODEC_REGISTRY[name] = factory
+
+
+def get_codec(name: str, **kwargs) -> Codec:
+    try:
+        factory = CODEC_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; have {sorted(CODEC_REGISTRY)}") from None
+    return factory(**kwargs)
+
+
+register_codec("token-pack", TokenPackCodec)
+register_codec("byte-compressor", ByteCompressorCodec)
+
+
+def method_pipeline(
+    method: str,
+    tokenizer: Optional[BPETokenizer] = None,
+    level: int = DEFAULT_LEVEL,
+    backend: str = "zstd",
+    scheme: str = "fixed",
+    use_device: Optional[bool] = None,
+) -> PipelineCodec:
+    """The paper's three methods as stage pipelines (§3.2-§3.4)."""
+    if method == "zstd":
+        stages: List[Codec] = [ByteCompressorCodec(level, backend)]
+    elif method == "token":
+        stages = [TokenPackCodec(tokenizer, scheme, use_device)]
+    elif method == "hybrid":
+        stages = [TokenPackCodec(tokenizer, scheme, use_device),
+                  ByteCompressorCodec(level, backend)]
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return PipelineCodec(stages, name=method)

@@ -13,6 +13,12 @@ Classic 32-bit-state rANS with 16-bit renormalization; python ints make
 the arithmetic exact, numpy handles tables.  Streaming convention: encoder
 walks the symbols in reverse and appends 16-bit words; the serialized
 stream stores those words reversed so the decoder reads forward.
+
+Blob format note: the header's `asize` field distinguishes a dense
+256-entry frequency table (asize == 256, the original layout) from the
+sparse (symbol, freq)-pair table added for small/low-alphabet inputs
+(asize in 1..255).  This reader accepts both; readers predating the
+sparse layout cannot parse sparse blobs.
 """
 
 from __future__ import annotations
@@ -124,8 +130,18 @@ def rans_compress_bytes(data: bytes, prob_bits: int = PROB_BITS_DEFAULT) -> byte
     counts = np.bincount(symbols, minlength=256)
     freqs = normalize_freqs(counts, prob_bits)
     words, state = rans_encode(symbols, freqs, prob_bits)
-    header = struct.pack("<IBH", symbols.size, prob_bits, 256)
-    table = freqs.astype("<u2").tobytes()
+    # Header `asize` field: 256 = dense 256-entry table; 1..255 = sparse
+    # table of (symbol u8, freq u2) pairs.  Sparse wins on small or
+    # low-alphabet inputs, where a 512-byte dense table would dominate
+    # the blob (3 bytes/symbol vs 2 bytes/slot -> sparse iff k < 171).
+    nonzero = np.flatnonzero(freqs)
+    if nonzero.size < 171:
+        header = struct.pack("<IBH", symbols.size, prob_bits, nonzero.size)
+        table = (nonzero.astype("<u1").tobytes()
+                 + freqs[nonzero].astype("<u2").tobytes())
+    else:
+        header = struct.pack("<IBH", symbols.size, prob_bits, 256)
+        table = freqs.astype("<u2").tobytes()
     tail = struct.pack("<II", state, words.size) + words[::-1].astype("<u2").tobytes()
     return header + table + tail
 
@@ -135,8 +151,16 @@ def rans_decompress_bytes(blob: bytes) -> bytes:
     off = 7
     if n == 0:
         return b""
-    freqs = np.frombuffer(blob, dtype="<u2", count=asize, offset=off).astype(np.uint32)
-    off += 2 * asize
+    if asize < 256:  # sparse (symbol, freq) pairs
+        syms = np.frombuffer(blob, dtype="<u1", count=asize, offset=off)
+        off += asize
+        vals = np.frombuffer(blob, dtype="<u2", count=asize, offset=off)
+        off += 2 * asize
+        freqs = np.zeros(256, dtype=np.uint32)
+        freqs[syms] = vals
+    else:
+        freqs = np.frombuffer(blob, dtype="<u2", count=asize, offset=off).astype(np.uint32)
+        off += 2 * asize
     state, n_words = struct.unpack_from("<II", blob, off)
     off += 8
     words = np.frombuffer(blob, dtype="<u2", count=n_words, offset=off)[::-1]

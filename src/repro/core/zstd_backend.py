@@ -1,7 +1,9 @@
 """Byte-compression backends.
 
-``zstd``      the paper's backend (zstandard C library, level 1-22,
-              default 15 per §4.5) — paper-faithful path.
+``zstd``      the paper's backend (zstandard C library, level -131072..22,
+              default 15 per §4.5) — paper-faithful path.  When the C
+              library is not installed, this name transparently falls
+              back to ``repro-lzr`` (see ZSTD_IS_FALLBACK).
 ``zstd-dict`` zstd with a trained dictionary (paper §8.4.2 #2 future work).
 ``repro-lz``  our own LZ77 (LZ4-style block) — from-scratch substrate.
 ``repro-lzr`` our LZ77 + our rANS entropy stage — the paper's own
@@ -26,9 +28,16 @@ try:
     import zstandard as _zstd
 
     HAVE_ZSTD = True
-except ImportError:  # pragma: no cover - zstandard is present in this env
+except ImportError:
     _zstd = None
     HAVE_ZSTD = False
+
+# When the zstandard C library is absent the "zstd" name transparently
+# routes to the from-scratch repro-lzr stack (rANS(LZ77(T)) — the paper's
+# own structural model of Zstd, §3.2.2).  Frames written under the
+# fallback are only readable by the fallback; ZSTD_IS_FALLBACK lets
+# callers and benchmarks report which implementation produced the bytes.
+ZSTD_IS_FALLBACK = not HAVE_ZSTD
 
 DEFAULT_LEVEL = 15  # paper §4.5
 
@@ -36,14 +45,27 @@ DEFAULT_LEVEL = 15  # paper §4.5
 # -- zstd ---------------------------------------------------------------
 
 
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"  # RFC 8878 frame magic, little-endian
+
+
 def _zstd_compress(data: bytes, level: int = DEFAULT_LEVEL) -> bytes:
     if not HAVE_ZSTD:
-        raise RuntimeError("zstandard not available; use backend='repro-lzr'")
+        return _repro_lzr_compress(data, level)
     return _zstd.ZstdCompressor(level=level).compress(data)
 
 
 def _zstd_decompress(data: bytes) -> bytes:
-    return _zstd.ZstdDecompressor().decompress(data)
+    # Sniff the zstd frame magic so stores stay portable across hosts:
+    # fallback-written payloads decode even after zstandard gets installed,
+    # and real-zstd payloads fail with a pointed error instead of garbage
+    # when it is missing.
+    if data[:4] == _ZSTD_MAGIC:
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "payload was written by the real zstd library; install "
+                "zstandard (requirements-dev.txt) to read it")
+        return _zstd.ZstdDecompressor().decompress(data)
+    return _repro_lzr_decompress(data)
 
 
 class ZstdDictBackend:

@@ -20,7 +20,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.core.store import PromptStore
+from repro.core.store import PromptStore, ShardedPromptStore
 from repro.models.transformer import IGNORE_INDEX
 
 
@@ -35,7 +35,7 @@ class PipelineConfig:
 
 
 class TokenPipeline:
-    def __init__(self, store: PromptStore, cfg: PipelineConfig):
+    def __init__(self, store: ShardedPromptStore, cfg: PipelineConfig):
         assert cfg.global_batch % cfg.num_shards == 0
         self.cfg = cfg
         # Concatenate every stored prompt's token stream (decompressed via
@@ -102,12 +102,17 @@ class TokenPipeline:
 
 
 def build_store_from_corpus(root, n_prompts: int = 64, seed: int = 0,
-                            method: str = "hybrid") -> PromptStore:
-    """Helper used by examples/tests: synthesize corpus -> compress -> store."""
+                            method: str = "hybrid",
+                            n_shards: int = 4) -> ShardedPromptStore:
+    """Helper used by examples/tests: synthesize corpus -> compress -> store.
+
+    Writes are batch-first: one `put_many` group commit over the whole
+    corpus (one fsync per shard, not per prompt)."""
     from repro.core.api import PromptCompressor
     from repro.data.corpus import generate_corpus
     from repro.tokenizer.vocab import default_tokenizer
 
-    store = PromptStore(root, PromptCompressor(default_tokenizer(), method=method))
+    store = ShardedPromptStore(root, PromptCompressor(default_tokenizer(), method=method),
+                               n_shards=n_shards)
     store.put_many([p.text for p in generate_corpus(n_prompts, seed=seed)])
     return store

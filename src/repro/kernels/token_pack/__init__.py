@@ -1,4 +1,7 @@
-from repro.kernels.token_pack.ops import delta_zigzag_device, pack_tokens_device
+from repro.kernels.token_pack.ops import (delta_zigzag_device,
+                                          pack_fixed_batch_device,
+                                          pack_tokens_device)
 from repro.kernels.token_pack.ref import delta_zigzag_ref, pack_ref
 
-__all__ = ["pack_tokens_device", "delta_zigzag_device", "pack_ref", "delta_zigzag_ref"]
+__all__ = ["pack_tokens_device", "pack_fixed_batch_device",
+           "delta_zigzag_device", "pack_ref", "delta_zigzag_ref"]

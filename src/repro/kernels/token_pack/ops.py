@@ -8,7 +8,7 @@ bit-identical to repro.core.packing.pack_fixed, validated in tests.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,38 @@ def pack_tokens_device(ids, interpret: bool = True) -> Tuple[int, bytes]:
     width = 2 if int(ids.max()) <= 0xFFFF else 4
     out = _pack_padded(jnp.asarray(ids, jnp.int32), width, interpret)
     return (0x00 if width == 2 else 0x01), np.asarray(out)[: ids.size].tobytes()
+
+
+def pack_fixed_batch_device(ids_list, interpret: bool = True) -> List[bytes]:
+    """Batch fixed-width packing: the vectorized device path of the codec layer.
+
+    Streams are grouped by packing width (Eq. 7 decides per stream), each
+    group is concatenated into one [N] id vector, streamed through the
+    Pallas byte-split kernel in a single launch, and the [N, k] byte plane
+    is sliced back per stream.  Bit-identical to
+    ``repro.core.packing.pack_fixed`` applied per stream (format byte
+    included), which the kernel parity tests assert.
+    """
+    arrs = [np.asarray(ids, dtype=np.uint32) for ids in ids_list]
+    out: List[bytes] = [b""] * len(arrs)
+    groups: dict = {2: [], 4: []}
+    for i, a in enumerate(arrs):
+        if a.size == 0:
+            out[i] = bytes([0x00])  # empty stream: u16 header, no body
+            continue
+        groups[2 if int(a.max()) <= 0xFFFF else 4].append(i)
+    for width, members in groups.items():
+        if not members:
+            continue
+        fmt = 0x00 if width == 2 else 0x01
+        concat = np.concatenate([arrs[i] for i in members])
+        plane = np.asarray(
+            _pack_padded(jnp.asarray(concat, jnp.int32), width, interpret)
+        )[: concat.size]
+        offsets = np.cumsum([0] + [arrs[i].size for i in members])
+        for j, i in enumerate(members):
+            out[i] = bytes([fmt]) + plane[offsets[j]:offsets[j + 1]].tobytes()
+    return out
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -23,6 +23,8 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--shards", type=int, default=4,
+                    help="PromptStore segment count (group-commit batch writes)")
     args = ap.parse_args()
 
     from repro.configs.lopace import CONFIG
@@ -30,13 +32,16 @@ def main() -> None:
     cfg = CONFIG.smoke()
     params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
     with tempfile.TemporaryDirectory() as tmp:
-        store = build_store_from_corpus(tmp, n_prompts=max(8, args.requests), seed=4)
+        store = build_store_from_corpus(tmp, n_prompts=max(8, args.requests), seed=4,
+                                        n_shards=args.shards)
+        st = store.stats()
+        print(f"[serve] store: {st['n_prompts']} prompts across "
+              f"{st['n_shards']} shards, {st['space_savings_pct']:.1f}% saved")
         server = BatchServer(params, cfg, batch_slots=args.slots,
                              max_len=args.max_len)
         keys = store.keys()[: args.requests]
         t0 = time.perf_counter()
-        reqs = [server.submit_text(store, k, max_new_tokens=args.max_new)
-                for k in keys]
+        reqs = server.submit_text_many(store, keys, max_new_tokens=args.max_new)
         server.run()
         dt = time.perf_counter() - t0
         toks = sum(len(r.out_tokens) for r in reqs)

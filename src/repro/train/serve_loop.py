@@ -59,6 +59,13 @@ class BatchServer:
         toks = np.asarray(store.get_tokens(key), dtype=np.int64)
         return self.submit_tokens(toks, **kw)
 
+    def submit_text_many(self, store: PromptStore, keys: List[str],
+                         **kw) -> List[Request]:
+        """Batch admission: one batched token-stream decode over all keys
+        (grouped by method/backend inside the codec layer)."""
+        return [self.submit_tokens(np.asarray(toks, dtype=np.int64), **kw)
+                for toks in store.get_tokens_many(keys)]
+
     def submit_tokens(self, tokens: np.ndarray, max_new_tokens: int = 32) -> Request:
         req = Request(rid=len(self.queue), prompt_tokens=tokens,
                       max_new_tokens=max_new_tokens)

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.dist.collectives import ef_compress_tree
 from repro.models.transformer import loss_fn
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 
@@ -27,7 +26,7 @@ def make_train_step(
     *,
     remat: str = "dots",
     grad_accum: int = 1,
-    compress_grads: bool = False,
+    compress_grads: bool = False,  # requires repro.dist.collectives
     unroll: bool = False,
 ) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
@@ -63,6 +62,10 @@ def make_train_step(
         if compress_grads:
             # int8 error-feedback: quantization residual is re-added next
             # step via the opt_state["ef"] carry (1-bit-Adam/EF-SGD style).
+            # Imported lazily: repro.dist is optional until the distributed
+            # layer lands (ROADMAP open items), and only this branch needs it.
+            from repro.dist.collectives import ef_compress_tree
+
             grads, ef = ef_compress_tree(grads, opt_state.get("ef"))
         new_params, new_opt, metrics = adamw_update(opt_cfg, grads, opt_state, params)
         if compress_grads:

@@ -1,0 +1,124 @@
+"""Hypothesis shim: real hypothesis when installed, otherwise a seeded
+fallback property runner so the suite still exercises every property test.
+
+Install the real thing with ``pip install -r requirements-dev.txt``.  The
+fallback implements just the strategy surface this repo's tests use
+(integers / lists / text / characters / sampled_from / binary) and runs
+each ``@given`` test over ``max_examples`` deterministic samples, so a
+missing dev dependency degrades shrinking quality, not coverage.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import random
+    import string
+    from functools import wraps
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: "random.Random"):
+            return self._sample(rng)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=2**63 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 20
+
+            def sample(rng):
+                n = rng.randint(min_size, hi)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def characters(codec=None, **_kw):
+            def sample(rng):
+                # mostly printable ASCII, occasionally the full BMP+ range
+                if rng.random() < 0.7:
+                    return rng.choice(string.printable)
+                cp = rng.randint(0, 0x10FFFF)
+                while 0xD800 <= cp <= 0xDFFF:  # surrogates not encodable
+                    cp = rng.randint(0, 0x10FFFF)
+                return chr(cp)
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def text(alphabet=None, min_size=0, max_size=None):
+            alphabet = alphabet or st.characters()
+            hi = max_size if max_size is not None else min_size + 50
+
+            def sample(rng):
+                n = rng.randint(min_size, hi)
+                return "".join(alphabet.example(rng) for _ in range(n))
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def binary(min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 100
+
+            def sample(rng):
+                return bytes(rng.randrange(256)
+                             for _ in range(rng.randint(min_size, hi)))
+
+            return _Strategy(sample)
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            # like hypothesis, strip strategy-bound parameters from the
+            # signature pytest sees, so the rest resolve as fixtures;
+            # positional strategies bind the rightmost unbound parameters
+            sig = inspect.signature(fn)
+            unbound = [p for p in sig.parameters if p not in kw_strategies]
+            n_pos = len(arg_strategies)
+            pos_names = unbound[len(unbound) - n_pos:] if n_pos else []
+            fixture_names = [p for p in unbound if p not in pos_names]
+
+            @wraps(fn)
+            def wrapper(**fixture_kwargs):
+                rng = random.Random(fn.__name__)  # deterministic per test
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    call = dict(fixture_kwargs)
+                    for name, s in zip(pos_names, arg_strategies):
+                        call[name] = s.example(rng)
+                    for name, s in kw_strategies.items():
+                        call[name] = s.example(rng)
+                    fn(**call)
+
+            wrapper.__signature__ = sig.replace(
+                parameters=[sig.parameters[p] for p in fixture_names])
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

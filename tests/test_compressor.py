@@ -4,13 +4,14 @@ ordering (§5.1), backends, frames, adaptive selection, entropy accounting."""
 import hashlib
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (AdaptiveCompressor, PromptCompressor, compress_hybrid,
                         compress_token, compress_zstd, decompress_hybrid,
                         decompress_token, decompress_zstd, hybrid_tokens)
 from repro.core.entropy import bits_per_char, efficiency, shannon_entropy, theoretical_cr
-from repro.core.zstd_backend import BACKENDS, compress_bytes, decompress_bytes
+from repro.core.zstd_backend import (BACKENDS, HAVE_ZSTD, compress_bytes,
+                                     decompress_bytes)
 from repro.data.corpus import generate_corpus
 from repro.tokenizer.vocab import default_tokenizer
 
@@ -122,6 +123,7 @@ def test_zstd_levels_tradeoff():
     assert s19 <= s1
 
 
+@pytest.mark.skipif(not HAVE_ZSTD, reason="dictionary training needs the zstandard C library")
 def test_zstd_dict_backend(prompts):
     from repro.core.zstd_backend import ZstdDictBackend
 

@@ -5,13 +5,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.packing import pack_tokens
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.histogram import histogram_ref, token_histogram
 from repro.kernels.token_pack import (delta_zigzag_device, delta_zigzag_ref,
-                                      pack_ref, pack_tokens_device)
+                                      pack_fixed_batch_device, pack_ref,
+                                      pack_tokens_device)
 
 RNG = np.random.default_rng(0)
 
@@ -78,6 +79,29 @@ def test_pack_kernel_property(ids):
     arr = np.asarray(ids, np.uint32)
     fb, data = pack_tokens_device(arr)
     assert bytes([fb]) + data == pack_tokens(arr, "fixed")
+
+
+def test_pack_batch_kernel_matches_numpy():
+    """Pallas batch path (one launch per width group, interpret mode) is
+    bit-identical to per-stream pack_fixed — mixed widths, empty streams,
+    and non-block-multiple lengths in one batch."""
+    streams = [RNG.integers(0, 60000, 37),          # u16
+               RNG.integers(0, 2**31 - 1, 2048),    # u32, block-aligned
+               np.zeros(0, np.uint32),              # empty
+               RNG.integers(0, 100, 1),             # u16 single
+               RNG.integers(0, 100352, 555),        # u32 (special-token range)
+               RNG.integers(0, 65536, 4097)]        # u16, crosses a block boundary
+    got = pack_fixed_batch_device(streams, interpret=True)
+    want = [pack_tokens(ids, "fixed") for ids in streams]
+    assert got == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 2**31 - 1), max_size=100), max_size=8))
+def test_pack_batch_kernel_property(streams):
+    arrs = [np.asarray(s, np.uint32) for s in streams]
+    got = pack_fixed_batch_device(arrs, interpret=True)
+    assert got == [pack_tokens(a, "fixed") for a in arrs]
 
 
 def test_pack_ref_widths():

@@ -3,7 +3,7 @@ self-contained token-stream blob format."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.rans import (rans_decode_lanes, rans_encode_lanes,
                              tokens_compress_device, tokens_decompress_device,

@@ -6,8 +6,8 @@ import json
 import numpy as np
 import pytest
 
-from repro.core.api import PromptCompressor
-from repro.core.store import PromptStore
+from repro.core.api import PromptCompressor, parse_frame
+from repro.core.store import PromptStore, ShardedPromptStore
 from repro.data.corpus import corpus_stats, generate_corpus
 from repro.data.pipeline import PipelineConfig, TokenPipeline, build_store_from_corpus
 from repro.tokenizer.vocab import default_tokenizer
@@ -50,6 +50,139 @@ def test_store_survives_torn_index(tmp_path, tok):
     store2 = PromptStore(tmp_path, PromptCompressor(tok, method="zstd"))
     assert set(store2.keys()) == set(keys)
     assert store2.get(keys[0]).startswith("alpha")
+
+
+def test_corrupt_frame_headers_raise_valueerror(tok):
+    """parse_frame must fail loudly (ValueError, not bare KeyError/IndexError)
+    on unknown method/backend/scheme ids from corrupt or future frames."""
+    blob = bytearray(PromptCompressor(tok, method="hybrid").compress("x" * 64))
+    for offset, what in ((3, "method"), (4, "backend"), (6, "scheme")):
+        bad = bytearray(blob)
+        bad[offset] = 0xEE
+        with pytest.raises(ValueError, match=f"unknown {what} id"):
+            parse_frame(bytes(bad))
+    with pytest.raises(ValueError, match="not a LoPace frame"):
+        parse_frame(b"XX" + bytes(blob[2:]))
+    with pytest.raises(ValueError, match="not a LoPace frame"):
+        parse_frame(blob[:4])  # shorter than the header
+
+
+def test_store_rejects_corrupt_blob(tmp_path, tok):
+    """A record whose frame header got scribbled on fails get() cleanly and
+    is counted by verify_all, without touching other records."""
+    store = PromptStore(tmp_path, PromptCompressor(tok, method="hybrid"))
+    keys = store.put_many(["intact " * 40, "corrupted " * 40])
+    rec = store._index[keys[1]]
+    with open(tmp_path / "data.bin", "r+b") as f:
+        f.seek(rec["offset"] + 3)  # method id byte
+        f.write(b"\xee")
+    store2 = PromptStore(tmp_path, PromptCompressor(tok, method="hybrid"))
+    assert store2.get(keys[0]).startswith("intact")
+    with pytest.raises(ValueError, match="unknown method id"):
+        store2.get(keys[1])
+    assert store2.verify_all() == {"success": 1, "failure": 1, "total": 2}
+
+
+# -- sharded store -----------------------------------------------------------
+
+
+def test_sharded_group_commit_matches_per_put(tmp_path, tok):
+    """put_many's group commit lays out every shard byte-identically to a
+    sequence of per-record puts — only the fsync count differs."""
+    texts = [f"shard me {i} " * 30 for i in range(12)]
+    a = ShardedPromptStore(tmp_path / "a", PromptCompressor(tok, method="token"),
+                           n_shards=4)
+    b = ShardedPromptStore(tmp_path / "b", PromptCompressor(tok, method="token"),
+                           n_shards=4)
+    keys = a.put_many(texts)
+    assert [b.put(t) for t in texts] == keys
+    for i in range(4):
+        name = f"shard-{i:03d}.bin"
+        assert (tmp_path / "a" / name).read_bytes() == \
+            (tmp_path / "b" / name).read_bytes()
+    assert a.put_many(texts) == keys  # idempotent re-ingest
+    assert sum(a.stats()["prompts_per_shard"]) == len(set(keys))
+
+
+def test_sharded_torn_tail_isolated_to_one_shard(tmp_path, tok):
+    """Crash recovery per segment: a torn index tail in one shard drops only
+    that shard's unpublished record; every other shard stays readable."""
+    store = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"),
+                               n_shards=4)
+    texts = [f"durable record {i} " * 20 for i in range(16)]
+    keys = store.put_many(texts)
+    victim = store._shard_of(keys[0])
+    # simulate a crash mid-publish in the victim shard: a fully published
+    # record whose data never hit disk (index ahead of data), then a
+    # truncated json line
+    with open(tmp_path / f"shard-{victim:03d}.idx.jsonl", "a") as f:
+        f.write(json.dumps({"key": "deadbeef", "seq": 999, "offset": 10 ** 9,
+                            "length": 64, "method": "zstd", "n_chars": 1}) + "\n")
+        f.write('{"key": "feedface", "offset": 999')
+    store2 = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"))
+    assert store2.n_shards == 4
+    assert set(store2.keys()) == set(keys)
+    for k, t in zip(keys, texts):
+        assert store2.get(k) == t
+
+
+def test_sharded_data_truncation_drops_only_tail_record(tmp_path, tok):
+    """Index published but data truncated (torn data tail): the affected
+    shard drops records past the truncation point on open."""
+    store = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"),
+                               n_shards=2)
+    texts = [f"payload {i} " * 25 for i in range(8)]
+    keys = store.put_many(texts)
+    victim = 0
+    data_path = tmp_path / f"shard-{victim:03d}.bin"
+    in_victim = [k for k in keys if store._shard_of(k) == victim]
+    assert len(in_victim) >= 2
+    last = max(in_victim, key=lambda k: store._index[k]["offset"])
+    with open(data_path, "r+b") as f:
+        f.truncate(store._index[last]["offset"] + 1)
+    store2 = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"))
+    assert set(store2.keys()) == set(keys) - {last}
+    survivors = [k for k in keys if k != last]
+    assert store2.verify_all() == {"success": len(survivors), "failure": 0,
+                                   "total": len(survivors)}
+
+
+def test_legacy_single_file_layout_reopens(tmp_path, tok):
+    """A 1-shard store keeps the flat data.bin/index.jsonl layout, and a
+    ShardedPromptStore handed that root respects the existing layout."""
+    store = PromptStore(tmp_path, PromptCompressor(tok, method="zstd"))
+    key = store.put("legacy layout " * 10)
+    assert (tmp_path / "data.bin").exists()
+    assert (tmp_path / "index.jsonl").exists()
+    reopened = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"),
+                                  n_shards=8)  # request ignored: layout wins
+    assert reopened.n_shards == 1
+    assert reopened.get(key) == "legacy layout " * 10
+
+
+def test_sharded_reopen_preserves_put_order(tmp_path, tok):
+    """Iteration order is put order, stable across reopen — TokenPipeline's
+    restart-safe resume concatenates streams in this order."""
+    texts = [f"ordering matters {i} " * 10 for i in range(20)]
+    store = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="token"),
+                               n_shards=4)
+    keys = store.put_many(texts)
+    assert store.keys() == keys
+    reopened = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="token"))
+    assert reopened.keys() == keys
+    # appends after reopen continue the sequence
+    more = reopened.put_many(["appended later " * 10])
+    assert reopened.keys() == keys + more
+
+
+def test_get_many_and_tokens_many(tmp_path, tok):
+    store = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="hybrid"),
+                               n_shards=4)
+    texts = [p.text[:1500] for p in generate_corpus(6, seed=7)]
+    keys = store.put_many(texts)
+    assert store.get_many(keys) == texts
+    for t, ids in zip(texts, store.get_tokens_many(keys)):
+        assert tok.decode(ids) == t
 
 
 def test_pipeline_determinism_and_resume(tmp_path):

@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist", reason="repro.dist not built yet (see ROADMAP open items)")
+
 from repro.configs.lopace import CONFIG as LOPACE_CONFIG
 from repro.data.pipeline import PipelineConfig, TokenPipeline, build_store_from_corpus
 from repro.dist.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint

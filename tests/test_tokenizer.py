@@ -2,7 +2,7 @@
 the paper's §3.5 proof), specials, serialization."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.tokenizer.bpe import SPECIAL_ID_BASE, BPETokenizer, train_bpe
 from repro.tokenizer.vocab import default_tokenizer, load_tokenizer, save_tokenizer
