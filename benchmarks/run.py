@@ -8,8 +8,9 @@ import time
 
 def main() -> None:
     from benchmarks import (baselines, batch_throughput, compression_ratio,
-                            disk_sizes, entropy_efficiency, memory, robustness,
-                            scaling, space_savings, throughput)
+                            disk_sizes, entropy_efficiency, grad_compress,
+                            memory, robustness, scaling, space_savings,
+                            throughput)
 
     modules = [
         ("table5_compression_ratio", compression_ratio),
@@ -22,6 +23,7 @@ def main() -> None:
         ("sec5.3_disk", disk_sizes),
         ("beyond_paper_baselines", baselines),
         ("store_batch_throughput", batch_throughput),
+        ("dist_grad_compress", grad_compress),
     ]
     print("name,us_per_call,derived")
     failed = False

@@ -57,10 +57,23 @@ class TokenPipeline:
     # -- determinism / resume -------------------------------------------------
 
     def state(self) -> Dict[str, int]:
-        return {"step": self._step, "seed": self.cfg.seed}
+        return {"step": self._step, "seed": self.cfg.seed,
+                "seq_len": self.cfg.seq_len,
+                "global_batch": self.cfg.global_batch,
+                "n_windows": self.n_windows}
 
     def restore(self, state: Dict[str, int]) -> None:
         assert state["seed"] == self.cfg.seed, "resume with a different seed"
+        # resuming with different batch geometry or against a different
+        # corpus silently changes the data order — refuse instead
+        # (n_windows is the corpus fingerprint the permutation ranges over)
+        for key, have in (("seq_len", self.cfg.seq_len),
+                          ("global_batch", self.cfg.global_batch),
+                          ("n_windows", self.n_windows)):
+            if key in state and int(state[key]) != have:
+                raise ValueError(
+                    f"pipeline resume mismatch: checkpoint {key}="
+                    f"{state[key]}, this pipeline has {key}={have}")
         self._step = int(state["step"])
 
     def _order_for_epoch(self, epoch: int) -> np.ndarray:

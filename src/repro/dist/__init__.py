@@ -1,0 +1,24 @@
+"""Distributed layer: sharding rules, sharded checkpoints, compressed
+collectives, and fleet fault tolerance.
+
+The four modules are deliberately independent of each other so the
+launchers can compose them:
+
+* `sharding`    — PartitionSpec rules for params / optimizer (ZeRO-1) /
+                  batches / decode caches on the production meshes
+                  (16x16 single pod, 2x16x16 multi-pod).
+* `checkpoint`  — sharded `.npz` save/restore with per-shard checksums,
+                  atomic directory commit, `keep_last` pruning, and an
+                  `extra` dict for data-pipeline resume state.
+* `collectives` — bucketed psum + int8 error-feedback gradient
+                  compression (the paper's lossless-first philosophy on
+                  the DP axis: compress on the wire, reconstruct exactly
+                  via the carried residual).
+* `fault`       — heartbeat files, fleet scan (dead / straggler
+                  detection), restart policy (continue / restart_elastic
+                  / abort).
+"""
+
+from repro.dist import checkpoint, collectives, fault, sharding
+
+__all__ = ["sharding", "checkpoint", "collectives", "fault"]

@@ -1,0 +1,19 @@
+"""Shared internals for the dist modules."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+
+def path_names(path) -> Tuple[str, ...]:
+    """jax tree path -> tuple of key strings (DictKey / SequenceKey /
+    GetAttrKey all normalize to their name or index)."""
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)

@@ -1,0 +1,141 @@
+"""Bucketed collectives and int8 error-feedback gradient compression.
+
+The DP-axis analogue of the paper's lossless-first storage philosophy:
+gradients cross the wire int8-quantized (4x fewer bytes than f32), and
+the quantization residual is carried in the optimizer state and re-added
+to the next step's gradient — so nothing is ever lost, only deferred
+(EF-SGD / 1-bit-Adam style error feedback).  The invariant the tests pin:
+
+    dequantized + new_residual == gradient + old_residual   (exactly)
+
+Bucketing: psum'ing thousands of small leaves issues thousands of
+collectives; `flatten_buckets` packs same-dtype leaves into ~bucket_bytes
+flat buffers so `psum_bucketed` launches O(total_bytes / bucket_bytes)
+all-reduces instead of O(n_leaves).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_BYTES = 4 << 20  # 4 MB per all-reduce launch
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization + error feedback
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8: returns (q int8, scale f32 scalar) with
+    x ~= q * scale and |x - q*scale| <= scale/2."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_compress_tree(grads: Any, ef: Optional[Any]
+                     ) -> Tuple[Any, Any]:
+    """Error-feedback int8 round-trip over a gradient tree.
+
+    Each leaf g is compensated (t = g + residual), quantized to int8 —
+    the form that would cross the DP axis — dequantized, and the new
+    residual t - deq is returned for the caller to carry into the next
+    step.  Returns (dequantized_tree, new_residual_tree)."""
+    if ef is None:
+        ef = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        t = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, s = quantize_int8(t)
+        d = dequantize_int8(q, s)
+        return d.astype(g.dtype), (t - d)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    new_ef = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return deq, new_ef
+
+
+# ---------------------------------------------------------------------------
+# Bucketed flatten / psum
+# ---------------------------------------------------------------------------
+
+
+class _BucketEntry(NamedTuple):
+    leaf_index: int
+    shape: Tuple[int, ...]
+    size: int
+
+
+class BucketSpec(NamedTuple):
+    treedef: Any
+    n_leaves: int
+    entries: Tuple[Tuple[_BucketEntry, ...], ...]  # per bucket
+
+
+def flatten_buckets(tree: Any, bucket_bytes: int = DEFAULT_BUCKET_BYTES
+                    ) -> Tuple[List[jnp.ndarray], BucketSpec]:
+    """Pack the tree's leaves into flat same-dtype buffers of at most
+    `bucket_bytes` each (a leaf bigger than the budget gets its own
+    bucket; leaves are never split).  Returns (buckets, spec)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    by_dtype: dict = {}
+    for i, leaf in enumerate(leaves):
+        by_dtype.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+
+    buckets: List[jnp.ndarray] = []
+    entries: List[Tuple[_BucketEntry, ...]] = []
+    for dt in sorted(by_dtype, key=str):
+        group: List[_BucketEntry] = []
+        group_bytes = 0
+
+        def flush():
+            nonlocal group, group_bytes
+            if group:
+                buckets.append(jnp.concatenate(
+                    [leaves[e.leaf_index].reshape(-1) for e in group]))
+                entries.append(tuple(group))
+                group, group_bytes = [], 0
+
+        for i in by_dtype[dt]:
+            leaf = leaves[i]
+            nbytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
+            if group_bytes and group_bytes + nbytes > bucket_bytes:
+                flush()
+            group.append(_BucketEntry(i, tuple(leaf.shape), int(leaf.size)))
+            group_bytes += nbytes
+        flush()
+    return buckets, BucketSpec(treedef, len(leaves), tuple(entries))
+
+
+def unflatten_buckets(buckets: Sequence[jnp.ndarray], spec: BucketSpec) -> Any:
+    """Inverse of flatten_buckets (dtype- and shape-exact)."""
+    leaves: List[Optional[jnp.ndarray]] = [None] * spec.n_leaves
+    for buf, group in zip(buckets, spec.entries):
+        off = 0
+        for e in group:
+            leaves[e.leaf_index] = buf[off:off + e.size].reshape(e.shape)
+            off += e.size
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def psum_bucketed(tree: Any, axis_name: str,
+                  bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Any:
+    """`lax.psum` over the tree via flat buckets — one collective per
+    bucket instead of one per leaf.  Use inside shard_map/pmap."""
+    buckets, spec = flatten_buckets(tree, bucket_bytes)
+    summed = [jax.lax.psum(b, axis_name) for b in buckets]
+    return unflatten_buckets(summed, spec)

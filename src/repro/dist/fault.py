@@ -1,0 +1,131 @@
+"""Fleet fault tolerance: heartbeat files, dead/straggler detection, and
+the restart state machine.
+
+Hosts publish heartbeats as atomically-renamed JSON files in a shared
+directory (works on any POSIX filesystem — no coordinator service).  A
+monitor (any host, or an external supervisor) scans the directory and
+classifies the fleet; `RestartPolicy` turns a `FleetStatus` into one of
+three decisions:
+
+    continue         — everyone alive (stragglers are reported, not fatal)
+    restart_elastic  — some hosts dead but quorum remains: reload the
+                       latest checkpoint on the surviving hosts with a
+                       re-carved data-parallel sharding
+    abort            — too many failures (or no survivors): stop and page
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+class Heartbeat:
+    """One host's heartbeat publisher: `beat(step, step_time_s=...)` after
+    every training step."""
+
+    def __init__(self, root, host_id: str):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.host_id = str(host_id)
+        self._path = self.root / f"{self.host_id}.json"
+
+    def beat(self, step: int, *, step_time_s: Optional[float] = None,
+             now: Optional[float] = None) -> None:
+        doc = {"host": self.host_id, "step": int(step),
+               "step_time_s": step_time_s,
+               "time": time.time() if now is None else now}
+        tmp = self._path.with_suffix(f".tmp{os.getpid()}")
+        tmp.write_text(json.dumps(doc))
+        os.replace(tmp, self._path)  # readers never see a torn beat
+
+
+@dataclass(frozen=True)
+class FleetStatus:
+    alive: List[str]
+    dead: List[str]
+    stragglers: List[str]
+    median_step_time: Optional[float]
+
+
+class FleetMonitor:
+    """Scans a heartbeat directory and classifies hosts.
+
+    dead: no beat within `dead_after` seconds of `now`.
+    straggler: alive but step_time > straggler_factor * fleet median."""
+
+    def __init__(self, root, *, dead_after: float = 60.0,
+                 straggler_factor: float = 2.0):
+        self.root = Path(root)
+        self.dead_after = float(dead_after)
+        self.straggler_factor = float(straggler_factor)
+
+    def _read_beats(self) -> Dict[str, dict]:
+        beats = {}
+        if not self.root.is_dir():
+            return beats
+        for p in sorted(self.root.glob("*.json")):
+            try:
+                doc = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue  # torn/just-replaced file: treat as missing beat
+            beats[doc.get("host", p.stem)] = doc
+        return beats
+
+    def scan(self, now: Optional[float] = None) -> FleetStatus:
+        now = time.time() if now is None else float(now)
+        beats = self._read_beats()
+        alive, dead = [], []
+        for host, doc in sorted(beats.items()):
+            age = now - float(doc.get("time", 0.0))
+            (alive if age <= self.dead_after else dead).append(host)
+
+        times = {h: beats[h].get("step_time_s") for h in alive
+                 if beats[h].get("step_time_s") is not None}
+        median = statistics.median(times.values()) if times else None
+        stragglers = []
+        if median is not None and median > 0:
+            stragglers = sorted(
+                h for h, t in times.items()
+                if t > self.straggler_factor * median)
+        return FleetStatus(alive=alive, dead=dead, stragglers=stragglers,
+                           median_step_time=median)
+
+
+@dataclass
+class RestartPolicy:
+    """continue / restart_elastic / abort from a FleetStatus.
+
+    `max_failures` is the abort threshold on *distinct* dead hosts over
+    the run — a host already accounted for (e.g. a stale heartbeat file
+    from a previous launch) is not re-counted on every scan, so one stale
+    file can never drain the budget and abort a healthy run.
+    `total_restarts` bounds elastic restarts across the run (a fleet that
+    keeps losing hosts should page a human, not thrash)."""
+
+    max_failures: int = 2
+    total_restarts: int = 8
+    restarts_taken: int = field(default=0)
+    _seen_dead: set = field(default_factory=set)
+
+    def decide(self, status: FleetStatus) -> str:
+        # a host that came back is no longer "accounted for": if it dies
+        # again it must trigger a fresh elastic restart
+        self._seen_dead -= set(status.alive)
+        if not status.dead:
+            return "continue"
+        newly_dead = set(status.dead) - self._seen_dead
+        self._seen_dead |= newly_dead
+        if not status.alive or len(self._seen_dead) >= self.max_failures:
+            return "abort"
+        if not newly_dead:
+            return "continue"  # degraded but already accounted for
+        if self.restarts_taken >= self.total_restarts:
+            return "abort"
+        self.restarts_taken += 1
+        return "restart_elastic"

@@ -1,0 +1,263 @@
+"""PartitionSpec rules for the production meshes.
+
+Single pod: (data=16, model=16); multi-pod: (pod=2, data=16, model=16).
+Every rule is duck-typed over `mesh.shape` / `mesh.axis_names` only (the
+unit tests drive them with a FakeMesh; the dry-run with a real 256/512-way
+host mesh) and divisibility-guarded: an axis is only ever sharded when the
+dimension divides the mesh-axis product, otherwise that dimension is
+replicated.  This is what lets one rule set cover every architecture in
+the pool — dbrx's 8 KV heads replicate on a 16-way model axis while its
+48 query heads shard; minicpm3's 73448-entry vocabulary falls back from
+vocab-parallel to hidden-parallel embeddings; and so on.
+
+Layout conventions (matching repro.models):
+
+* params under ``blocks`` are stacked over the scan-of-layers axis
+  (leading ``n_per`` dim, never sharded); ``rem_blocks`` / ``embed`` /
+  ``head`` are unstacked.
+* attention projections shard the *head* axis (tensor parallelism) and
+  replicate when the head count does not divide the model axis — those
+  archs run sequence-parallel attention instead (launch.dryrun
+  `_seq_shard_specs`).
+* MoE expert tensors shard the expert axis (expert parallelism).
+* embeddings are vocab-parallel (``table``: vocab dim, ``head.w``: output
+  dim) with a hidden-dim fallback.
+* ZeRO-1: optimizer moments additionally shard their first replicated,
+  divisible dimension over ``data``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist._util import path_names as _path_names
+
+Mesh = Any  # duck-typed: needs .shape (dict-like) and .axis_names
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return int(dict(mesh.shape).get(name, 1))
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes; the pod axis composes with data when present."""
+    return ("pod", "data") if "pod" in tuple(mesh.axis_names) else ("data",)
+
+
+def _dp_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= _axis_size(mesh, a)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+_HEAD_PROJ = {"wq", "wk", "wv"}           # [d, n_heads, head_dim]
+_LATENT_PROJ = {"wuq", "wuk", "wuv"}      # [rank, n_heads, head_dim]
+_BLOCKDIAG = {"w_q", "w_k", "w_v",        # [n_heads, hd, hd] per-head mats
+              "r_z", "r_i", "r_f", "r_o"}
+
+
+def _param_axes(names: Tuple[str, ...], shape: Tuple[int, ...],
+                model: int) -> Tuple[Any, ...]:
+    """Model-parallel spec for one UNSTACKED param leaf, full rank."""
+    spec = [None] * len(shape)
+    if len(shape) < 2:
+        return tuple(spec)  # norms, biases, gates: replicate
+
+    def ok(dim: int) -> bool:
+        return shape[dim] % model == 0
+
+    name = names[-1]
+    if name in _HEAD_PROJ and len(shape) == 3:
+        # head-parallel or fully replicated (KV heads of GQA archs whose
+        # head count does not divide the model axis stay replicated; the
+        # launcher shards the sequence instead)
+        if ok(1):
+            spec[1] = "model"
+    elif name == "wo" and len(shape) == 3:      # [n_heads, hd, d]
+        if ok(0):
+            spec[0] = "model"
+        elif ok(2):
+            spec[2] = "model"
+    elif name in _LATENT_PROJ and len(shape) == 3:   # [rank, n, hd]
+        if ok(1):
+            spec[1] = "model"
+        elif ok(0):
+            spec[0] = "model"
+    elif name in _BLOCKDIAG and len(shape) == 3:     # [n, hd, hd]
+        if ok(0):
+            spec[0] = "model"
+        elif ok(2):
+            spec[2] = "model"
+    elif len(shape) == 3:                       # MoE expert mats [E, ., .]
+        if ok(0):
+            spec[0] = "model"
+    elif name == "table" and "embed" in names:  # [vocab, d]: vocab-parallel
+        if ok(0):
+            spec[0] = "model"
+        elif ok(1):
+            spec[1] = "model"
+    elif len(shape) == 2:
+        # generic matmul weight [in, out]: column-parallel, row fallback
+        if ok(1):
+            spec[1] = "model"
+        elif ok(0):
+            spec[0] = "model"
+    return tuple(spec)
+
+
+def _param_spec(path, leaf, model: int) -> Tuple[Any, ...]:
+    names = _path_names(path)
+    shape = tuple(leaf.shape)
+    if names and names[0] == "blocks":
+        # stacked over the layer-scan axis: rule applies to shape[1:]
+        return (None,) + _param_axes(names, shape[1:], model)
+    return _param_axes(names, shape, model)
+
+
+def param_pspecs(params: Any, cfg: Any, mesh: Mesh) -> Any:
+    """Tensor-parallel PartitionSpecs for a param tree (replicated over
+    data; see `fsdp_pspecs` / `zero1_pspecs` for data-sharded variants)."""
+    model = _axis_size(mesh, "model")
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: P(*_param_spec(path, leaf, model)), params)
+
+
+def _with_data_axis(spec: Tuple[Any, ...], shape: Tuple[int, ...],
+                    mesh: Mesh) -> P:
+    """Add a data-parallel axis on the first replicated, divisible dim."""
+    dp = _dp_axes(mesh)
+    out = list(spec)
+    for axes in (dp, ("data",)) if len(dp) > 1 else (dp,):
+        k = _dp_size(mesh, axes)
+        for d in range(len(shape)):
+            if out[d] is None and shape[d] % k == 0 and shape[d] >= k:
+                out[d] = axes if len(axes) > 1 else axes[0]
+                return P(*out)
+    return P(*out)
+
+
+def fsdp_pspecs(params: Any, cfg: Any, mesh: Mesh) -> Any:
+    """param_pspecs + shard each leaf's first free dim over data (FSDP-
+    style weight sharding for archs whose TP-only footprint blows HBM)."""
+    model = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        spec = _param_spec(path, leaf, model)
+        return _with_data_axis(spec, tuple(leaf.shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+
+def zero1_pspecs(opt_state: Any, cfg: Any, mesh: Mesh) -> Any:
+    """Optimizer-state specs: moments (and the error-feedback carry)
+    mirror the param specs plus a data shard on the first free divisible
+    dim (ZeRO-1: each DP rank owns a slice of m/v); scalars replicate."""
+    model = _axis_size(mesh, "model")
+
+    def moment_rule(path, leaf):
+        spec = _param_spec(path, leaf, model)
+        return _with_data_axis(spec, tuple(leaf.shape), mesh)
+
+    out = {}
+    for key, sub in opt_state.items():
+        if key in ("m", "v", "ef"):
+            out[key] = jax.tree_util.tree_map_with_path(moment_rule, sub)
+        else:
+            out[key] = jax.tree_util.tree_map(lambda _: P(), sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch: Any, mesh: Mesh, *, accum: bool = False) -> Any:
+    """Shard the (micro)batch dim over all data-parallel axes.
+
+    Leading dims [B, ...] or [accum, micro_B, ...]: pass ``accum=True``
+    when the leaves carry a leading grad-accumulation dim — dim 1 (the
+    microbatch) is then the batch dim and the scanned accum dim always
+    stays on-host.  Without it, dim 0 is the batch dim, with a dim-1
+    fallback only when dim 0 is a plausible accum count (> 1) — so a
+    B=1 probe replicates instead of sharding its sequence dim.
+    Non-divisible leaves replicate."""
+    dp = _dp_axes(mesh)
+    dp_size = _dp_size(mesh, dp)
+    axis = dp if len(dp) > 1 else dp[0]
+
+    def rule(_, leaf):
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if accum and len(shape) >= 3:
+            candidates = (1,)
+        elif len(shape) >= 3 and shape[0] > 1:
+            candidates = (0, 1)
+        else:
+            candidates = (0,)
+        for d in candidates:
+            if shape[d] % dp_size == 0 and shape[d] >= dp_size:
+                spec[d] = axis
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_pspecs(cache: Any, cfg: Any, mesh: Mesh) -> Any:
+    """Decode/prefill cache specs: batch dim over data, KV-head dim over
+    model where divisible.  Cache trees are {"scanned": ..., "rem": ...}
+    (repro.models.transformer.init_cache); scanned leaves carry a leading
+    layer-stack dim.  `key_pos` index vectors replicate."""
+    dp = _dp_axes(mesh)
+    dp_size = _dp_size(mesh, dp)
+    model = _axis_size(mesh, "model")
+    dp_axis = dp if len(dp) > 1 else dp[0]
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if names[-1] == "key_pos":
+            return P(*spec)
+        b = 1 if names[0] == "scanned" else 0  # skip the layer-stack dim
+        if b < len(shape) and shape[b] % dp_size == 0 and shape[b] >= dp_size:
+            spec[b] = dp_axis
+        if (names[-1] in ("k", "v", "k_scale", "v_scale")
+                and len(shape) - b == 4 and shape[b + 2] % model == 0):
+            spec[b + 2] = "model"  # KV heads (GQA caches) over model
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+# ---------------------------------------------------------------------------
+# NamedSharding adapter
+# ---------------------------------------------------------------------------
+
+
+def named(specs: Any, mesh) -> Any:
+    """PartitionSpec tree -> NamedSharding tree (requires a real Mesh)."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

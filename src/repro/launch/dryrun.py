@@ -163,7 +163,8 @@ def _build_compiled(cfg, spec, mesh, remat, unroll, grad_accum=1):
     spec_fn = shd.fsdp_pspecs if _use_fsdp(cfg, spec, chips) else shd.param_pspecs
     p_specs = shd.named(spec_fn(params_sds, cfg, mesh), mesh)
     batch_sds = input_specs(cfg, spec, grad_accum if spec.step == "train" else 1)
-    b_specs = shd.named(shd.batch_pspecs(batch_sds, mesh), mesh)
+    b_specs = shd.named(shd.batch_pspecs(
+        batch_sds, mesh, accum=(spec.step == "train" and grad_accum > 1)), mesh)
 
     with mesh:
         if spec.step == "train":

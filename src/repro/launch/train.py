@@ -7,6 +7,11 @@ fleet the same entry point shards over the production mesh (the dry-run
 proves those shardings compile for every assigned arch).
 
     PYTHONPATH=src python -m repro.launch.train --arch lopace --steps 100
+
+Trains the reduced smoke config by default; pass ``--full`` (or
+``--no-smoke``) for the real one.  Relaunching with the same
+``--ckpt-dir`` resumes from the latest checkpoint, including the exact
+`TokenPipeline` position.
 """
 
 from __future__ import annotations
@@ -14,6 +19,7 @@ from __future__ import annotations
 import argparse
 import tempfile
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -28,21 +34,70 @@ from repro.train.optimizer import AdamWConfig
 from repro.train.train_loop import init_train_state, make_train_step
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="lopace")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="train the reduced smoke config (default on; "
+                         "--no-smoke or --full selects the real config)")
+    ap.add_argument("--full", action="store_true",
+                    help="train the full config (alias for --no-smoke)")
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--remat", default="none")
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="persistent checkpoint dir (required for resume "
+                         "across launches; default: run-scoped temp dir)")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep-last", type=int, default=3)
+    ap.add_argument("--store-dir", default=None,
+                    help="PromptStore location; an already-populated store "
+                         "is reopened, not rebuilt (default: temp dir)")
+    ap.add_argument("--n-prompts", type=int, default=64,
+                    help="corpus size when building a fresh store")
+    ap.add_argument("--hb-dir", default=None,
+                    help="shared heartbeat dir for fleet monitoring "
+                         "(default: run-scoped temp dir)")
     ap.add_argument("--host-id", default="host0")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    args.smoke = args.smoke and not args.full
+    return args
 
+
+_STORE_MARKER = "CORPUS_COMPLETE"
+
+
+def _open_store(store_dir: Path, n_prompts: int):
+    marker = store_dir / _STORE_MARKER
+    if marker.exists():  # fully built by a previous launch: reopen
+        from repro.core.api import PromptCompressor
+        from repro.core.store import ShardedPromptStore
+        from repro.tokenizer.vocab import default_tokenizer
+
+        built = marker.read_text().strip()
+        if built != f"n_prompts={n_prompts}":
+            print(f"[launch] WARNING: reopening existing store at "
+                  f"{store_dir} ({built}); --n-prompts {n_prompts} ignored "
+                  f"(delete the dir to rebuild)")
+        return ShardedPromptStore(
+            store_dir, PromptCompressor(default_tokenizer(), method="hybrid"))
+    if any(store_dir.glob("*.bin")):
+        # a build that died mid-ingest left a partial store: training on a
+        # truncated corpus would silently change the data — start over
+        print(f"[launch] incomplete store at {store_dir}; rebuilding")
+        import shutil
+
+        shutil.rmtree(store_dir)
+    store = build_store_from_corpus(store_dir, n_prompts=n_prompts, seed=0)
+    marker.write_text(f"n_prompts={n_prompts}\n")
+    return store
+
+
+def run(args: argparse.Namespace, scratch: Path) -> None:
     if args.arch == "lopace":
         from repro.configs.lopace import CONFIG as cfg_full
     else:
@@ -51,13 +106,14 @@ def main() -> None:
     print(f"[launch] {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
           f"on {len(jax.devices())} device(s)")
 
-    tmp = tempfile.mkdtemp(prefix="repro_train_")
-    ckpt_dir = args.ckpt_dir or tmp + "/ckpt"
-    hb = Heartbeat(tmp + "/hb", args.host_id)
-    monitor = FleetMonitor(tmp + "/hb")
+    ckpt_dir = Path(args.ckpt_dir) if args.ckpt_dir else scratch / "ckpt"
+    hb_dir = Path(args.hb_dir) if args.hb_dir else scratch / "hb"
+    store_dir = Path(args.store_dir) if args.store_dir else scratch / "store"
+    hb = Heartbeat(hb_dir, args.host_id)
+    monitor = FleetMonitor(hb_dir)
     policy = RestartPolicy()
 
-    store = build_store_from_corpus(tmp + "/store", n_prompts=64, seed=0)
+    store = _open_store(store_dir, args.n_prompts)
     pipe = TokenPipeline(store, PipelineConfig(
         seq_len=args.seq_len, global_batch=args.batch, seed=0))
     opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
@@ -84,17 +140,40 @@ def main() -> None:
         params, opt_state, m = step_fn(params, opt_state, batch)
         dt = time.perf_counter() - t0
         hb.beat(step, step_time_s=dt)
-        status = monitor.scan()
-        if policy.decide(status) == "abort":
-            raise SystemExit("[launch] too many failures; aborting")
+        if step % 10 == 0:
+            # fleet state changes on the dead_after timescale — don't
+            # re-read every heartbeat file on every step
+            status = monitor.scan()
+            decision = policy.decide(status)
+            if decision == "abort":
+                raise SystemExit("[launch] too many failures; aborting")
+            if decision == "restart_elastic":
+                # single-host launcher: a real fleet supervisor would
+                # re-carve the DP sharding here; we log and keep training
+                print(f"[launch] fleet degraded (dead={status.dead}); "
+                      f"continuing")
+            if status.stragglers:
+                print(f"[launch] stragglers: {status.stragglers} "
+                      f"(median {status.median_step_time:.2f}s)")
         if (step + 1) % 10 == 0:
             print(f"step {step+1:5d} loss={float(m['loss']):.3f} "
+                  f"ce={float(m['ce']):.3f} "
                   f"gnorm={float(m['grad_norm']):.2f} {dt*1e3:.0f}ms")
         if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
             save_checkpoint(ckpt_dir, step + 1,
                             {"params": params, "opt": opt_state},
-                            extra={"data": pipe.state()})
+                            extra={"data": pipe.state()},
+                            keep_last=args.keep_last)
     print("[launch] done")
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
+    # everything not explicitly pointed at a persistent path lives in one
+    # run-scoped scratch dir and is removed on exit (the old mkdtemp
+    # fallbacks leaked a store + heartbeat dir per launch)
+    with tempfile.TemporaryDirectory(prefix="repro_train_") as scratch:
+        run(args, Path(scratch))
 
 
 if __name__ == "__main__":

@@ -49,13 +49,16 @@ def make_train_step(
                 loss, parts, grads = grads_of(params, mb)
                 acc = jax.tree_util.tree_map(
                     lambda a, g: a + g.astype(jnp.float32), acc, grads)
-                return (acc, loss_acc + loss), None
+                return (acc, loss_acc + loss), parts
 
             zero = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (gsum, loss_sum), _ = jax.lax.scan(micro, (zero, 0.0), batch)
+            (gsum, loss_sum), parts_stack = jax.lax.scan(micro, (zero, 0.0), batch)
             grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
             loss = loss_sum / grad_accum
+            # per-part losses averaged over microbatches so the metrics
+            # dict matches the grad_accum == 1 path key-for-key
+            parts = jax.tree_util.tree_map(lambda p: p.mean(0), parts_stack)
         else:
             loss, parts, grads = grads_of(params, batch)
 
@@ -71,6 +74,7 @@ def make_train_step(
         if compress_grads:
             new_opt["ef"] = ef
         metrics["loss"] = loss
+        metrics.update(parts)  # ce / aux / z_loss breakdown, both paths
         return new_params, new_opt, metrics
 
     return train_step

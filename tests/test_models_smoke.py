@@ -37,7 +37,16 @@ def seq_for(cfg):
     return 256 if "mlstm" in cfg.block_pattern else 32
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# heaviest smoke params (sequential scans / MoE dispatch): 10-60 s each
+_SLOW_ARCHS = {"xlstm_1_3b", "deepseek_moe_16b", "minicpm3_4b"}
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS else a
+            for a in archs]
+
+
+@pytest.mark.parametrize("arch", _arch_params(ARCH_IDS))
 def test_smoke_train_step(arch):
     cfg = CONFIGS[arch].smoke()
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -52,7 +61,7 @@ def test_smoke_train_step(arch):
     assert 0.5 * np.log(cfg.vocab_size) < float(parts["ce"]) < 2.5 * np.log(cfg.vocab_size)
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(ARCH_IDS))
 def test_smoke_decode_step(arch):
     cfg = CONFIGS[arch].smoke()
     params = init_params(jax.random.PRNGKey(1), cfg)
@@ -67,8 +76,8 @@ def test_smoke_decode_step(arch):
     assert np.isfinite(np.asarray(lg, np.float32)).all(), arch
 
 
-@pytest.mark.parametrize("arch", ["internlm2_20b", "recurrentgemma_2b",
-                                  "xlstm_1_3b", "minicpm3_4b"])
+@pytest.mark.parametrize("arch", _arch_params(
+    ["internlm2_20b", "recurrentgemma_2b", "xlstm_1_3b", "minicpm3_4b"]))
 def test_decode_consistent_with_forward(arch):
     """Prefill+decode must reproduce the teacher-forced forward logits —
     validates every cache layout (KV, ring, latent, recurrent state)."""

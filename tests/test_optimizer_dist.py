@@ -8,8 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist", reason="repro.dist not built yet (see ROADMAP open items)")
-
 from repro.dist.checkpoint import (latest_checkpoint, restore_checkpoint,
                                    save_checkpoint)
 from repro.dist.collectives import (dequantize_int8, ef_compress_tree,
@@ -123,6 +121,53 @@ def test_checkpoint_shape_mismatch_refused(tmp_path):
     path = save_checkpoint(tmp_path, 1, {"w": jnp.ones(10)})
     with pytest.raises(ValueError, match="shape"):
         restore_checkpoint(path, {"w": jnp.ones(11)})
+
+
+def test_checkpoint_dtype_mismatch_refused(tmp_path):
+    path = save_checkpoint(tmp_path, 1, {"w": jnp.ones(10, jnp.float32)})
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(path, {"w": jnp.ones(10, jnp.bfloat16)})
+
+
+def test_restart_policy_recovered_host_counts_fresh():
+    """A host that recovers and later dies again is a new failure, not an
+    already-accounted one."""
+    from repro.dist.fault import FleetStatus, RestartPolicy
+
+    pol = RestartPolicy(max_failures=3)
+    dead_b = FleetStatus(alive=["a"], dead=["b"], stragglers=[],
+                         median_step_time=1.0)
+    healthy = FleetStatus(alive=["a", "b"], dead=[], stragglers=[],
+                          median_step_time=1.0)
+    assert pol.decide(dead_b) == "restart_elastic"
+    assert pol.decide(healthy) == "continue"
+    assert pol.decide(dead_b) == "restart_elastic"
+
+
+def test_checkpoint_sweeps_orphaned_tmp_dirs(tmp_path):
+    orphan = tmp_path / ".tmp_step_00000001_99999"
+    orphan.mkdir(parents=True)
+    (orphan / "shard_00000.npz").write_bytes(b"junk from a killed writer")
+    save_checkpoint(tmp_path, 2, {"w": jnp.ones(4)})
+    assert not list(tmp_path.glob(".tmp_step_*"))
+    assert latest_checkpoint(tmp_path).name == "step_00000002"
+
+
+def test_restart_policy_does_not_recount_stale_dead(tmp_path):
+    """A stale heartbeat (dead on every scan) must not drain the failure
+    budget and abort a healthy run."""
+    from repro.dist.fault import FleetStatus, RestartPolicy
+
+    pol = RestartPolicy(max_failures=2)
+    degraded = FleetStatus(alive=["a", "b"], dead=["stale"], stragglers=[],
+                           median_step_time=1.0)
+    assert pol.decide(degraded) == "restart_elastic"
+    for _ in range(20):  # same stale host on every subsequent scan
+        assert pol.decide(degraded) == "continue"
+    # a SECOND distinct dead host still trips max_failures
+    worse = FleetStatus(alive=["a"], dead=["stale", "b"], stragglers=[],
+                        median_step_time=1.0)
+    assert pol.decide(worse) == "abort"
 
 
 def test_fleet_monitor_and_straggler(tmp_path):

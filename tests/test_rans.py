@@ -69,6 +69,7 @@ def test_device_blob_roundtrip(lanes):
         assert np.array_equal(out.astype(np.int64), np.asarray(ids, np.int64))
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.integers(0, 100_256), max_size=400))
 def test_device_blob_property(ids):

@@ -30,6 +30,7 @@ def test_linear_scan_matches_sequential():
                                rtol=2e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_linear_scan_vjp_matches_autodiff():
     rng = np.random.default_rng(1)
     a = jnp.asarray(rng.uniform(0.3, 0.95, (1, 32, 4)), jnp.float32)
@@ -68,6 +69,7 @@ def test_rglru_decode_matches_parallel():
                                np.asarray(y_seq, np.float32), rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_mlstm_decode_matches_chunkwise():
     cfg = CONFIGS["xlstm_1_3b"].smoke()
     params = init_mlstm(jax.random.PRNGKey(0), cfg)

@@ -5,8 +5,6 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-pytest.importorskip("repro.dist", reason="repro.dist not built yet (see ROADMAP open items)")
-
 from repro.configs import ARCH_IDS, all_configs
 from repro.dist.sharding import batch_pspecs, cache_pspecs, param_pspecs, zero1_pspecs
 from repro.models.transformer import init_cache, init_params
@@ -120,6 +118,13 @@ def test_batch_specs(mesh):
     assert specs["tokens"][0] is not None
     assert specs["accum"][1] is not None and specs["accum"][0] is None
     assert all(a is None for a in tuple(specs["tiny"]))
+    # a B=1 probe must replicate, never shard its sequence dim over data
+    probe = {"embeds": jax.ShapeDtypeStruct((1, 4096, 64), jnp.float32)}
+    assert all(a is None for a in tuple(batch_pspecs(probe, mesh)["embeds"]))
+    # explicit accum: microbatch dim shards even when accum count divides dp
+    acc = {"tokens": jax.ShapeDtypeStruct((32, 32, 128), jnp.int32)}
+    spec = batch_pspecs(acc, mesh, accum=True)["tokens"]
+    assert spec[0] is None and spec[1] is not None
 
 
 @pytest.mark.parametrize("arch", ["internlm2_20b", "minicpm3_4b",
