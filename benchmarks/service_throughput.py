@@ -1,0 +1,175 @@
+"""Service-tier throughput: async ingest vs synchronous `put_many`, and
+cached vs uncached serve-path admission.
+
+Ingest: the same corpus flows into identical sharded stores (a) via
+synchronous `put_many` group commits and (b) via the ingest queue —
+dispatcher planning overlapped with per-shard writer threads fsyncing in
+parallel.  Two async numbers matter: *submit* throughput (what a producer
+in the request path observes — no fsync on its critical path) and
+*end-to-end* throughput (submit + drain, everything durable).
+
+Admission: repeat `get_tokens_many` rounds over a fixed key set, straight
+from the store (codec decode every round) vs through the PromptService
+token cache (decode only on round 1).
+
+Skips gracefully (SKIP row, no failure) when the store root is
+read-only — set REPRO_BENCH_STORE_ROOT to move it off the default temp
+dir.  Writes `benchmarks/BENCH_service_throughput.json` so the perf
+trajectory file set tracks the serve path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+_OUT = Path(__file__).resolve().parent / "BENCH_service_throughput.json"
+
+N_PROMPTS = 256
+N_SHARDS = 8
+BATCH = 32
+REPS = 3           # best-of, sync/async alternating (fsync cost is noisy)
+ADMIT_KEYS = 48
+ADMIT_ROUNDS = 6
+
+
+def _store_root() -> str:
+    return os.environ.get("REPRO_BENCH_STORE_ROOT", tempfile.gettempdir())
+
+
+def _writable(root: str) -> bool:
+    try:
+        with tempfile.TemporaryDirectory(dir=root):
+            return True
+    except OSError:
+        return False
+
+
+def _texts() -> list:
+    return [f"user {i}: summarize incident ticket #{i % 17}; "
+            f"attach the runbook diff and escalate. " * 4
+            for i in range(N_PROMPTS)]
+
+
+def run() -> list:
+    root = _store_root()
+    if not _writable(root):
+        # e.g. a read-only container mount: report, don't fail the suite
+        return [csv_row("service_throughput", 0,
+                        f"SKIP:store_root_read_only:{root}")]
+
+    from repro.core.api import PromptCompressor
+    from repro.core.store import ShardedPromptStore
+    from repro.service import PromptService
+    from repro.service.ingest import IngestQueue
+    from repro.tokenizer.vocab import default_tokenizer
+
+    tok = default_tokenizer()
+    texts = _texts()
+    rows = []
+
+    def _sync_once() -> float:
+        with tempfile.TemporaryDirectory(dir=root) as tmp:
+            store = ShardedPromptStore(tmp, PromptCompressor(tok, method="token"),
+                                       n_shards=N_SHARDS)
+            t0 = time.perf_counter()
+            for i in range(0, len(texts), BATCH):
+                store.put_many(texts[i:i + BATCH])
+            dt = time.perf_counter() - t0
+            assert len(store) == len(set(texts))
+            return dt
+
+    def _async_once() -> tuple:
+        with tempfile.TemporaryDirectory(dir=root) as tmp:
+            store = ShardedPromptStore(tmp, PromptCompressor(tok, method="token"),
+                                       n_shards=N_SHARDS)
+            with IngestQueue(store, flush_batch=BATCH,
+                             max_pending=4 * BATCH) as q:
+                t0 = time.perf_counter()
+                tickets = [q.submit(texts[i:i + BATCH])
+                           for i in range(0, len(texts), BATCH)]
+                t_submit = time.perf_counter() - t0
+                q.drain()
+                t_e2e = time.perf_counter() - t0
+            for t in tickets:
+                t.wait(0)
+            assert len(store) == len(set(texts))
+            return t_submit, t_e2e
+
+    # -- ingest: sync put_many vs async queue, best-of-REPS alternating ------
+    _sync_once()  # warm FS + tokenizer word cache
+    t_sync = min(_sync_once() for _ in range(REPS))
+    async_times = [_async_once() for _ in range(REPS)]
+    t_submit = min(t for t, _ in async_times)
+    t_async = min(t for _, t in async_times)
+    pps_sync = len(texts) / t_sync
+    pps_submit = len(texts) / t_submit
+    pps_async = len(texts) / t_async
+
+    rows.append(csv_row("service_ingest_sync_put_many",
+                        1e6 * t_sync / len(texts), f"{pps_sync:.0f}prompts/s"))
+    rows.append(csv_row("service_ingest_async_e2e",
+                        1e6 * t_async / len(texts),
+                        f"{pps_async:.0f}prompts/s "
+                        f"speedup={pps_async / pps_sync:.2f}x"))
+    rows.append(csv_row("service_ingest_async_submit",
+                        1e6 * t_submit / len(texts),
+                        f"{pps_submit:.0f}prompts/s "
+                        f"producer_speedup={pps_submit / pps_sync:.2f}x"))
+
+    # -- admission: cached vs uncached get_tokens ----------------------------
+    with tempfile.TemporaryDirectory(dir=root) as tmp:
+        store = ShardedPromptStore(tmp, PromptCompressor(tok, method="hybrid"),
+                                   n_shards=N_SHARDS)
+        store.put_many(texts[:ADMIT_KEYS])
+        keys = store.keys()
+        n_admits = ADMIT_ROUNDS * len(keys)
+
+        t0 = time.perf_counter()
+        for _ in range(ADMIT_ROUNDS):
+            store.get_tokens_many(keys)
+        t_uncached = time.perf_counter() - t0
+
+        service = PromptService(store, cache_bytes=64 << 20, ingest_async=False)
+        with service:
+            t0 = time.perf_counter()
+            for _ in range(ADMIT_ROUNDS):
+                service.get_tokens_many(keys)
+            t_cached = time.perf_counter() - t0
+            hit_rate = service.cache.stats()["hit_rate"]
+
+    rows.append(csv_row("service_admit_uncached",
+                        1e6 * t_uncached / n_admits, "per_get_tokens"))
+    rows.append(csv_row("service_admit_cached",
+                        1e6 * t_cached / n_admits,
+                        f"speedup={t_uncached / t_cached:.2f}x "
+                        f"hit_rate={hit_rate:.2f}"))
+
+    doc = {
+        "benchmark": "service_throughput",
+        "n_prompts": len(texts),
+        "n_shards": N_SHARDS,
+        "batch": BATCH,
+        "ingest_sync_prompts_per_s": pps_sync,
+        "ingest_async_e2e_prompts_per_s": pps_async,
+        "ingest_async_submit_prompts_per_s": pps_submit,
+        "ingest_async_e2e_speedup": pps_async / pps_sync,
+        "ingest_async_submit_speedup": pps_submit / pps_sync,
+        "admit_keys": ADMIT_KEYS,
+        "admit_rounds": ADMIT_ROUNDS,
+        "admit_uncached_us": 1e6 * t_uncached / n_admits,
+        "admit_cached_us": 1e6 * t_cached / n_admits,
+        "admit_cached_speedup": t_uncached / t_cached,
+        "admit_cache_hit_rate": hit_rate,
+    }
+    try:
+        _OUT.write_text(json.dumps(doc, indent=1) + "\n")
+    except OSError:
+        pass  # benchmarks dir itself read-only: keep the csv rows
+
+    return rows

@@ -3,14 +3,17 @@ scaled out as a sharded, batch-first segment store.
 
 Layout (``n_shards`` segment files, shard chosen by content-key prefix):
 
-    <root>/store.json          {"version": 1, "n_shards": N}
-    <root>/shard-000.bin       concatenated frames (segment 0)
+    <root>/store.json          {"version": 1, "n_shards": N, "gens": [...]}
+    <root>/shard-000.bin       concatenated frames (segment 0, generation 0)
     <root>/shard-000.idx.jsonl one record per frame: key (sha256 of the
                                text), offset, length, method, n_chars
     ...
 
 A 1-shard store uses the legacy flat names ``data.bin`` / ``index.jsonl``
-so stores written by earlier versions open unchanged.
+so stores written by earlier versions open unchanged.  Compacted shards
+live at a bumped *generation* (``shard-000.g0001.bin``); the meta file is
+the atomic commit point, so a crash mid-compaction always reopens a fully
+intact generation (see `swap_shard`).
 
 Properties the paper calls for, preserved per shard:
 * application-level compression before storage (§2.4),
@@ -26,6 +29,25 @@ codec pipeline (one batched BPE/pack pass), groups records by shard, and
 group-commits — one data fsync and one index fsync per *shard touched per
 batch* instead of two fsyncs per record, which is where the put_many
 throughput win comes from (benchmarks/batch_throughput.py).
+
+Concurrency (the contract the `repro.service` tier builds on):
+* one lock per shard *slot* (stable across compaction generations)
+  serializes appends, reads, and the compaction swap for that shard;
+  different shards commit in parallel — the ingest queue's per-shard
+  writer threads fsync concurrently;
+* a store-wide index lock guards the in-memory key map and the `seq`
+  counter; lock order is always shard lock -> index lock, never reversed;
+* `put_many` splits into `plan_batch` (compress + reserve seqs; no I/O
+  locks held during compression) and `commit_batch` (per-shard durable
+  commit), so a dispatcher thread can plan while writer threads commit;
+* racing planners may write the same content key twice (both blobs decode
+  to the same text; the higher `seq` wins the index) — the duplicate's
+  bytes become dead space that `repro.service.compaction` reclaims;
+* `keys()` orders by `seq`, so iteration order is put order and
+  reopen-stable even when shard commits complete out of order.
+
+One process owns a store root at a time; cross-process coordination is
+out of scope for this tier.
 """
 
 from __future__ import annotations
@@ -33,8 +55,9 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 from pathlib import Path
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,8 +71,16 @@ def _sha(text: str) -> str:
     return hashlib.sha256(text.encode("utf-8")).hexdigest()
 
 
+def content_key(text: str) -> str:
+    """The store's content address for `text` (sha256 hex) — computable
+    without compressing, which is how ingest tickets know their keys at
+    submit time."""
+    return _sha(text)
+
+
 class _Shard:
-    """One append-only segment file plus its jsonl index."""
+    """One append-only segment file plus its jsonl index (a single
+    generation; the store swaps in a fresh `_Shard` on compaction)."""
 
     def __init__(self, data_path: Path, index_path: Path) -> None:
         self.data_path = data_path
@@ -102,6 +133,9 @@ class _Shard:
             f.seek(offset)
             return f.read(length)
 
+    def data_size(self) -> int:
+        return self.data_path.stat().st_size if self.data_path.exists() else 0
+
 
 class ShardedPromptStore:
     DEFAULT_SHARDS = 8
@@ -112,33 +146,96 @@ class ShardedPromptStore:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.compressor = compressor or PromptCompressor()
-        self.n_shards = self._resolve_n_shards(n_shards)
-        self._shards = [self._make_shard(i) for i in range(self.n_shards)]
+        self._meta_lock = threading.Lock()
+        self.n_shards, self._gens = self._resolve_layout(n_shards)
+        self._shard_locks = [threading.RLock() for _ in range(self.n_shards)]
+        self._compact_locks = [threading.Lock() for _ in range(self.n_shards)]
+        self._shards = [_Shard(*self._shard_paths(i, self._gens[i]))
+                        for i in range(self.n_shards)]
+        self._gc_stale_generations()
+        self._index_lock = threading.RLock()
         self._index: Dict[str, dict] = {}
         self._next_seq = 0
         self._load_index()
 
     # -- layout ---------------------------------------------------------------
 
-    def _resolve_n_shards(self, requested: Optional[int]) -> int:
-        """Existing layout always wins; `n_shards` only shapes new stores."""
+    def _resolve_layout(self, requested: Optional[int]) -> Tuple[int, List[int]]:
+        """Existing layout always wins; `n_shards` only shapes new stores.
+        Returns (n_shards, per-shard compaction generations)."""
         meta_path = self.root / _META_NAME
         if meta_path.exists():
             meta = json.loads(meta_path.read_text())
-            return int(meta["n_shards"])
+            n = int(meta["n_shards"])
+            gens = [int(g) for g in meta.get("gens", [0] * n)]
+            if len(gens) != n:
+                raise ValueError(f"corrupt store meta: {len(gens)} gens for {n} shards")
+            return n, gens
         if (self.root / "data.bin").exists():
-            return 1  # legacy single-file store
+            return 1, [0]  # legacy single-file store, predates store.json
         n = self.DEFAULT_SHARDS if requested is None else int(requested)
         if n < 1:
             raise ValueError("n_shards must be >= 1")
-        meta_path.write_text(json.dumps({"version": 1, "n_shards": n}) + "\n")
-        return n
+        meta_path.write_text(
+            json.dumps({"version": 1, "n_shards": n, "gens": [0] * n}) + "\n")
+        return n, [0] * n
 
-    def _make_shard(self, i: int) -> _Shard:
+    def _write_meta(self) -> None:
+        """Atomic meta publish (temp file + os.replace): the commit point
+        of a compaction swap.  Caller holds the shard lock of the swapped
+        shard; `_meta_lock` serializes swaps of different shards."""
+        with self._meta_lock:
+            doc = {"version": 1, "n_shards": self.n_shards, "gens": list(self._gens)}
+            tmp = self.root / (".{}.tmp".format(_META_NAME))
+            with open(tmp, "w") as f:
+                f.write(json.dumps(doc) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.root / _META_NAME)
+
+    def _shard_paths(self, i: int, gen: int) -> Tuple[Path, Path]:
         if self.n_shards == 1:
-            return _Shard(self.root / "data.bin", self.root / "index.jsonl")
-        return _Shard(self.root / f"shard-{i:03d}.bin",
-                      self.root / f"shard-{i:03d}.idx.jsonl")
+            if gen == 0:
+                return self.root / "data.bin", self.root / "index.jsonl"
+            return (self.root / f"data.g{gen:04d}.bin",
+                    self.root / f"index.g{gen:04d}.jsonl")
+        if gen == 0:
+            return (self.root / f"shard-{i:03d}.bin",
+                    self.root / f"shard-{i:03d}.idx.jsonl")
+        return (self.root / f"shard-{i:03d}.g{gen:04d}.bin",
+                self.root / f"shard-{i:03d}.g{gen:04d}.idx.jsonl")
+
+    def _gc_stale_generations(self) -> None:
+        """Drop shard files that are not the meta-committed generation:
+        leftovers of a compaction that crashed either before its meta
+        commit (orphaned higher gen) or after it (stale lower gen).
+        Either way the committed generation is fully intact, so this is
+        pure garbage collection."""
+        for i in range(self.n_shards):
+            current = set(self._shard_paths(i, self._gens[i]))
+            if self.n_shards == 1:
+                patterns = ("data.bin", "data.g*.bin",
+                            "index.jsonl", "index.g*.jsonl")
+            else:
+                # exact stem + explicit ".g*" generation patterns: a bare
+                # "shard-{i:03d}*" prefix would swallow 4-digit shard names
+                # (shard-100* matches shard-1000.bin) once n_shards > 1000
+                patterns = (f"shard-{i:03d}.bin", f"shard-{i:03d}.g*.bin",
+                            f"shard-{i:03d}.idx.jsonl",
+                            f"shard-{i:03d}.g*.idx.jsonl")
+            for pat in patterns:
+                for path in self.root.glob(pat):
+                    if path not in current:
+                        try:
+                            path.unlink()
+                        except OSError:  # pragma: no cover - best effort
+                            pass
+        tmp = self.root / (".{}.tmp".format(_META_NAME))
+        if tmp.exists():
+            try:
+                tmp.unlink()
+            except OSError:  # pragma: no cover
+                pass
 
     def _shard_of(self, key: str) -> int:
         return int(key[:4], 16) % self.n_shards
@@ -164,13 +261,17 @@ class ShardedPromptStore:
     # -- bookkeeping ----------------------------------------------------------
 
     def __len__(self) -> int:
-        return len(self._index)
+        with self._index_lock:
+            return len(self._index)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._index
+        with self._index_lock:
+            return key in self._index
 
     def keys(self) -> List[str]:
-        return list(self._index)
+        with self._index_lock:
+            recs = sorted(self._index.values(), key=lambda r: r["seq"])
+        return [r["key"] for r in recs]
 
     # -- writes ---------------------------------------------------------------
 
@@ -186,53 +287,97 @@ class ShardedPromptStore:
         publish + fsync.  Byte-identical to per-record `put` (same frames,
         same offsets within each shard) — only the fsync count changes.
         """
+        keys, plan = self.plan_batch(texts, method)
+        for shard_id in sorted(plan):
+            self.commit_batch(shard_id, plan[shard_id])
+        return keys
+
+    def plan_batch(self, texts: Sequence[str], method: Optional[str] = None
+                   ) -> Tuple[List[str], Dict[int, List[dict]]]:
+        """Stage 1 of a group commit: dedupe against the index, compress
+        the new texts in one batched pipeline pass, reserve their `seq`
+        range, and group the planned entries by shard.  No file I/O — the
+        heavy compression runs with no lock held, so an ingest dispatcher
+        can plan the next flush while writer threads fsync the last one.
+
+        Returns (keys for every input text, {shard_id: [entry...]}); each
+        entry carries key/seq/method/n_chars/blob and commits via
+        `commit_batch`.
+        """
         keys = [_sha(t) for t in texts]
         # first occurrence of each not-yet-stored key, in batch order
         new_keys: List[str] = []
         new_texts: List[str] = []
         seen: set = set()
-        for key, text in zip(keys, texts):
-            if key in self._index or key in seen:
-                continue
-            seen.add(key)
-            new_keys.append(key)
-            new_texts.append(text)
+        with self._index_lock:
+            for key, text in zip(keys, texts):
+                if key in self._index or key in seen:
+                    continue
+                seen.add(key)
+                new_keys.append(key)
+                new_texts.append(text)
         if not new_texts:
-            return keys
+            return keys, {}
         blobs = self.compressor.compress_batch(new_texts, method)
-        by_shard: Dict[int, List[int]] = {}
+        with self._index_lock:
+            base_seq = self._next_seq
+            self._next_seq += len(new_keys)
+        plan: Dict[int, List[dict]] = {}
         for i, key in enumerate(new_keys):
-            by_shard.setdefault(self._shard_of(key), []).append(i)
-        committed: List[dict] = []
-        for shard_id, members in by_shard.items():
+            plan.setdefault(self._shard_of(key), []).append({
+                "key": key,
+                "seq": base_seq + i,  # global put order, reopen-stable
+                "method": method or self.compressor.method,
+                "n_chars": len(new_texts[i]),
+                "blob": blobs[i],
+            })
+        return keys, plan
+
+    def commit_batch(self, shard_id: int, entries: Sequence[dict]) -> List[dict]:
+        """Stage 2 of a group commit: durably append one shard's planned
+        entries (data fsync, then index publish fsync) and publish them to
+        the in-memory index.  Thread-safe; different shards commit in
+        parallel under their own locks."""
+        if not entries:
+            return []
+        with self._shard_locks[shard_id]:
             shard = self._shards[shard_id]
-            offsets = shard.append([blobs[i] for i in members])
+            offsets = shard.append([e["blob"] for e in entries])
             records = [
                 {
-                    "key": new_keys[i],
-                    "seq": self._next_seq + i,  # global put order, reopen-stable
+                    "key": e["key"],
+                    "seq": e["seq"],
                     "offset": off,
-                    "length": len(blobs[i]),
-                    "method": method or self.compressor.method,
-                    "n_chars": len(new_texts[i]),
+                    "length": len(e["blob"]),
+                    "method": e["method"],
+                    "n_chars": e["n_chars"],
                 }
-                for i, off in zip(members, offsets)
+                for e, off in zip(entries, offsets)
             ]
             shard.publish(records)
-            committed.extend(records)
-        # publish to the in-memory index in put order, matching what a
-        # reopen reconstructs from the seq field
-        committed.sort(key=lambda r: r["seq"])
-        for rec in committed:
-            self._index[rec["key"]] = rec
-        self._next_seq += len(new_keys)
-        return keys
+            self._publish_index(records)
+        return records
+
+    def _publish_index(self, records: Sequence[dict]) -> None:
+        """Install committed records in the in-memory index.  A racing
+        duplicate keeps whichever record has the higher seq — the same
+        winner `_load_index` picks on reopen."""
+        with self._index_lock:
+            for rec in records:
+                prev = self._index.get(rec["key"])
+                if prev is None or prev["seq"] <= rec["seq"]:
+                    self._index[rec["key"]] = rec
 
     # -- reads ----------------------------------------------------------------
 
     def _read_blob(self, key: str) -> bytes:
-        rec = self._index[key]
-        return self._shards[self._shard_of(key)].read(rec["offset"], rec["length"])
+        sid = self._shard_of(key)
+        # record lookup and file read are atomic w.r.t. a compaction swap
+        # (which retargets offsets and the backing file together)
+        with self._shard_locks[sid]:
+            with self._index_lock:
+                rec = self._index[key]
+            return self._shards[sid].read(rec["offset"], rec["length"])
 
     def get(self, key: str, verify: bool = True) -> str:
         text = self.compressor.decompress(self._read_blob(key))
@@ -261,27 +406,189 @@ class ShardedPromptStore:
         for i in range(0, len(keys), _ITER_BATCH):
             yield from self.get_tokens_many(keys[i:i + _ITER_BATCH])
 
+    # -- compaction hooks (used by repro.service.compaction) ------------------
+
+    def compaction_lock(self, shard_id: int) -> threading.Lock:
+        """Mutex a compactor must hold while rebuilding `shard_id` (only
+        one rebuild per shard at a time; writers/readers are *not* blocked
+        by it — they synchronize on the shard lock during the swap)."""
+        return self._compact_locks[shard_id]
+
+    def shard_records(self, shard_id: int) -> List[dict]:
+        """Snapshot of the live records routed to `shard_id`, seq order."""
+        with self._index_lock:
+            recs = [dict(r) for r in self._index.values()
+                    if self._shard_of(r["key"]) == shard_id]
+        recs.sort(key=lambda r: r["seq"])
+        return recs
+
+    def read_records(self, shard_id: int, recs: Sequence[dict]) -> List[bytes]:
+        """Read the blobs for a `shard_records` snapshot."""
+        with self._shard_locks[shard_id]:
+            shard = self._shards[shard_id]
+            return [shard.read(r["offset"], r["length"]) for r in recs]
+
+    def shard_stats(self, shard_id: int) -> dict:
+        """Live/dead byte accounting for one shard (compaction trigger)."""
+        with self._shard_locks[shard_id]:
+            file_bytes = self._shards[shard_id].data_size()
+            gen = self._gens[shard_id]
+        with self._index_lock:
+            live = [r["length"] for r in self._index.values()
+                    if self._shard_of(r["key"]) == shard_id]
+        live_bytes = sum(live)
+        return {
+            "shard_id": shard_id,
+            "gen": gen,
+            "n_records": len(live),
+            "file_bytes": file_bytes,
+            "live_bytes": live_bytes,
+            "dead_bytes": max(file_bytes - live_bytes, 0),
+        }
+
+    def all_shard_stats(self) -> List[dict]:
+        """`shard_stats` for every shard in ONE index pass — the
+        background compactor's scan loop; per-shard calls would revisit
+        the whole index n_shards times."""
+        n_records = [0] * self.n_shards
+        live_bytes = [0] * self.n_shards
+        with self._index_lock:
+            for r in self._index.values():
+                sid = self._shard_of(r["key"])
+                n_records[sid] += 1
+                live_bytes[sid] += r["length"]
+        out = []
+        for i in range(self.n_shards):
+            with self._shard_locks[i]:
+                file_bytes = self._shards[i].data_size()
+                gen = self._gens[i]
+            out.append({
+                "shard_id": i,
+                "gen": gen,
+                "n_records": n_records[i],
+                "file_bytes": file_bytes,
+                "live_bytes": live_bytes[i],
+                "dead_bytes": max(file_bytes - live_bytes[i], 0),
+            })
+        return out
+
+    def swap_shard(self, shard_id: int, entries: List[dict]) -> dict:
+        """Atomically replace a shard's contents with `entries` (the
+        compactor's rebuilt record set: key/seq/method/n_chars/blob).
+        Caller holds `compaction_lock(shard_id)`, which is what makes the
+        unlocked generation bump in phase 1 safe.
+
+        Protocol (reuses the append-then-publish discipline):
+        1. WITHOUT the shard lock — readers and writers keep going against
+           the live generation — the new generation's data file is written
+           + fsynced, then its index published + fsynced, at fresh
+           filenames (`shard-XXX.gNNNN.*`);
+        2. under the shard lock, catch up: any record committed after the
+           compactor's snapshot is read from the live generation and
+           appended to the rebuild (same append/publish discipline), so
+           concurrent ingest is never lost;
+        3. the meta file's `gens` entry is replaced atomically
+           (`os.replace`) — THE commit point: a crash on either side of it
+           reopens one fully intact generation, and `_gc_stale_generations`
+           sweeps the loser's files on the next open;
+        4. the in-memory shard object and record offsets swap in, and the
+           old generation's files are unlinked.
+
+        Returns {bytes_before, bytes_after, n_records, n_caught_up}.
+        """
+        def _records_for(new_entries: Sequence[dict],
+                         offsets: Sequence[int]) -> List[dict]:
+            return [
+                {
+                    "key": e["key"],
+                    "seq": e["seq"],
+                    "offset": off,
+                    "length": len(e["blob"]),
+                    "method": e["method"],
+                    "n_chars": e["n_chars"],
+                }
+                for e, off in zip(new_entries, offsets)
+            ]
+
+        entries = sorted(entries, key=lambda e: e["seq"])
+        planned_seqs = {e["seq"] for e in entries}
+        # phase 1: bulk rewrite, shard stays fully live
+        gen = self._gens[shard_id] + 1
+        new_shard = _Shard(*self._shard_paths(shard_id, gen))
+        for path in (new_shard.data_path, new_shard.index_path):
+            if path.exists():  # leftover from a crashed compaction
+                path.unlink()
+        records = _records_for(
+            entries, new_shard.append([e["blob"] for e in entries]))
+        new_shard.publish(records)
+        # phases 2-4: the only window readers/writers wait on
+        with self._shard_locks[shard_id]:
+            old_shard = self._shards[shard_id]
+            bytes_before = old_shard.data_size()
+            with self._index_lock:
+                current = [dict(r) for r in self._index.values()
+                           if self._shard_of(r["key"]) == shard_id]
+            tail = sorted((r for r in current if r["seq"] not in planned_seqs),
+                          key=lambda r: r["seq"])
+            if tail:
+                tail_entries = [
+                    {
+                        "key": r["key"],
+                        "seq": r["seq"],
+                        "method": r["method"],
+                        "n_chars": r["n_chars"],
+                        "blob": old_shard.read(r["offset"], r["length"]),
+                    }
+                    for r in tail
+                ]
+                records += _records_for(
+                    tail_entries,
+                    new_shard.append([e["blob"] for e in tail_entries]))
+                new_shard.publish(records[-len(tail_entries):])
+            self._gens[shard_id] = gen
+            self._write_meta()  # atomic commit point
+            self._shards[shard_id] = new_shard
+            self._publish_index(records)
+            bytes_after = new_shard.data_size()
+            for path in (old_shard.data_path, old_shard.index_path):
+                if path != new_shard.data_path and path != new_shard.index_path:
+                    try:
+                        path.unlink()
+                    except OSError:  # pragma: no cover - best effort
+                        pass
+        return {"bytes_before": bytes_before, "bytes_after": bytes_after,
+                "n_records": len(records), "n_caught_up": len(tail)}
+
     # -- ops ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        stored = sum(r["length"] for r in self._index.values())
-        original = sum(r["n_chars"] for r in self._index.values())
+        with self._index_lock:
+            recs = list(self._index.values())
+        stored = sum(r["length"] for r in recs)
+        original = sum(r["n_chars"] for r in recs)
         per_shard = [0] * self.n_shards
-        for key in self._index:
-            per_shard[self._shard_of(key)] += 1
+        for r in recs:
+            per_shard[self._shard_of(r["key"])] += 1
+        file_bytes = 0
+        for i in range(self.n_shards):
+            with self._shard_locks[i]:
+                file_bytes += self._shards[i].data_size()
         return {
-            "n_prompts": len(self._index),
+            "n_prompts": len(recs),
             "n_shards": self.n_shards,
             "prompts_per_shard": per_shard,
             "stored_bytes": stored,
             "original_chars": original,
             "space_savings_pct": 100.0 * (1 - stored / original) if original else 0.0,
+            "file_bytes": file_bytes,
+            "dead_bytes": max(file_bytes - stored, 0),
+            "gens": list(self._gens),
         }
 
     def verify_all(self) -> dict:
         """SHA-256 sweep over every record (paper §5.10 robustness check)."""
         ok = bad = 0
-        for key in self._index:
+        for key in self.keys():
             try:
                 self.get(key, verify=True)
                 ok += 1

@@ -116,16 +116,32 @@ class TokenPipeline:
 
 def build_store_from_corpus(root, n_prompts: int = 64, seed: int = 0,
                             method: str = "hybrid",
-                            n_shards: int = 4) -> ShardedPromptStore:
+                            n_shards: int = 4,
+                            async_ingest: bool = False,
+                            ingest_batch: int = 32) -> ShardedPromptStore:
     """Helper used by examples/tests: synthesize corpus -> compress -> store.
 
     Writes are batch-first: one `put_many` group commit over the whole
-    corpus (one fsync per shard, not per prompt)."""
+    corpus (one fsync per shard, not per prompt).  With `async_ingest`
+    the corpus flows through the service tier's ingest queue instead —
+    `ingest_batch`-sized submissions, per-shard writer threads committing
+    in parallel — and the store is drained before it is returned."""
     from repro.core.api import PromptCompressor
     from repro.data.corpus import generate_corpus
     from repro.tokenizer.vocab import default_tokenizer
 
     store = ShardedPromptStore(root, PromptCompressor(default_tokenizer(), method=method),
                                n_shards=n_shards)
-    store.put_many([p.text for p in generate_corpus(n_prompts, seed=seed)])
+    texts = [p.text for p in generate_corpus(n_prompts, seed=seed)]
+    if async_ingest:
+        from repro.service.ingest import IngestQueue
+
+        with IngestQueue(store, flush_batch=ingest_batch) as q:
+            tickets = [q.submit(texts[i:i + ingest_batch])
+                       for i in range(0, len(texts), ingest_batch)]
+            q.drain()
+        for t in tickets:
+            t.wait(0)  # surface any commit error
+    else:
+        store.put_many(texts)
     return store

@@ -1,7 +1,14 @@
 #!/usr/bin/env python
-"""Serving launcher: LoPace PromptStore admission + slot-batched decode.
+"""Serving launcher: LoPace PromptStore admission + slot-batched decode,
+optionally fronted by the repro.service tier.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --cache-mb 32 --compact \
+        --ingest-async
+
+`--cache-mb` admits prompts through the serve-path token cache,
+`--ingest-async` builds the corpus store through the async ingest queue,
+and `--compact` runs a stage-reselecting compaction pass before serving.
 """
 
 from __future__ import annotations
@@ -17,7 +24,7 @@ from repro.train.serve_loop import BatchServer
 from repro.train.train_loop import init_train_state
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
@@ -25,28 +32,68 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--shards", type=int, default=4,
                     help="PromptStore segment count (group-commit batch writes)")
-    args = ap.parse_args()
+    ap.add_argument("--cache-mb", type=float, default=0.0,
+                    help="serve-path token cache budget in MB (0 = no cache)")
+    ap.add_argument("--ingest-async", action="store_true",
+                    help="ingest the corpus through the async ingest queue "
+                         "(per-shard parallel group commits)")
+    ap.add_argument("--compact", action="store_true",
+                    help="run a stage-reselecting compaction pass over every "
+                         "shard before serving")
+    args = ap.parse_args(argv)
+    # an oversized --max-new would otherwise silently truncate the prompt
+    # to an empty or negative slice in BatchServer._fill_slots
+    # (prompt_tokens[:max_len - max_new - 1]) — refuse at parse time;
+    # max_len - 2 is the largest budget leaving >= 1 prompt token
+    if args.max_new > args.max_len - 2:
+        ap.error(f"--max-new ({args.max_new}) must be <= --max-len - 2 "
+                 f"({args.max_len - 2}): the decode budget has to leave "
+                 "room for at least one prompt token")
+    return args
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
 
     from repro.configs.lopace import CONFIG
+    from repro.service import PromptService
 
     cfg = CONFIG.smoke()
     params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
     with tempfile.TemporaryDirectory() as tmp:
         store = build_store_from_corpus(tmp, n_prompts=max(8, args.requests), seed=4,
-                                        n_shards=args.shards)
+                                        n_shards=args.shards,
+                                        async_ingest=args.ingest_async)
         st = store.stats()
         print(f"[serve] store: {st['n_prompts']} prompts across "
-              f"{st['n_shards']} shards, {st['space_savings_pct']:.1f}% saved")
-        server = BatchServer(params, cfg, batch_slots=args.slots,
-                             max_len=args.max_len)
-        keys = store.keys()[: args.requests]
-        t0 = time.perf_counter()
-        reqs = server.submit_text_many(store, keys, max_new_tokens=args.max_new)
-        server.run()
-        dt = time.perf_counter() - t0
-        toks = sum(len(r.out_tokens) for r in reqs)
-        print(f"[serve] {sum(r.done for r in reqs)}/{len(reqs)} requests, "
-              f"{toks} tokens in {dt:.1f}s ({toks/dt:.1f} tok/s)")
+              f"{st['n_shards']} shards, {st['space_savings_pct']:.1f}% saved"
+              + (" (async ingest)" if args.ingest_async else ""))
+        service = PromptService(store, cache_bytes=int(args.cache_mb * 2 ** 20),
+                                ingest_async=False)
+        with service:
+            if args.compact:
+                for res in service.compact():
+                    print(f"[serve] compacted shard {res.shard_id}: "
+                          f"{res.bytes_before} -> {res.bytes_after} B"
+                          + (f" (re-encoded {res.method})" if res.reencoded
+                             else ""))
+            server = BatchServer(params, cfg, batch_slots=args.slots,
+                                 max_len=args.max_len)
+            keys = service.keys()[: args.requests]
+            # admission goes through the service: cache hits skip the
+            # codec decode on repeat keys
+            t0 = time.perf_counter()
+            reqs = server.submit_text_many(service, keys,
+                                           max_new_tokens=args.max_new)
+            server.run()
+            dt = time.perf_counter() - t0
+            toks = sum(len(r.out_tokens) for r in reqs)
+            print(f"[serve] {sum(r.done for r in reqs)}/{len(reqs)} requests, "
+                  f"{toks} tokens in {dt:.1f}s ({toks/dt:.1f} tok/s)")
+            if service.cache is not None:
+                cs = service.cache.stats()
+                print(f"[serve] token cache: {cs['hits']} hits / "
+                      f"{cs['misses']} misses, {cs['bytes']} B cached")
 
 
 if __name__ == "__main__":

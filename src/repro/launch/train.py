@@ -69,31 +69,51 @@ def parse_args(argv=None) -> argparse.Namespace:
 
 
 _STORE_MARKER = "CORPUS_COMPLETE"
+_STORE_BUILDING = "CORPUS_BUILDING"
+
+
+def _reopen_store(store_dir: Path):
+    from repro.core.api import PromptCompressor
+    from repro.core.store import ShardedPromptStore
+    from repro.tokenizer.vocab import default_tokenizer
+
+    return ShardedPromptStore(
+        store_dir, PromptCompressor(default_tokenizer(), method="hybrid"))
 
 
 def _open_store(store_dir: Path, n_prompts: int):
     marker = store_dir / _STORE_MARKER
+    building = store_dir / _STORE_BUILDING
     if marker.exists():  # fully built by a previous launch: reopen
-        from repro.core.api import PromptCompressor
-        from repro.core.store import ShardedPromptStore
-        from repro.tokenizer.vocab import default_tokenizer
-
         built = marker.read_text().strip()
         if built != f"n_prompts={n_prompts}":
             print(f"[launch] WARNING: reopening existing store at "
                   f"{store_dir} ({built}); --n-prompts {n_prompts} ignored "
                   f"(delete the dir to rebuild)")
-        return ShardedPromptStore(
-            store_dir, PromptCompressor(default_tokenizer(), method="hybrid"))
+        return _reopen_store(store_dir)
     if any(store_dir.glob("*.bin")):
-        # a build that died mid-ingest left a partial store: training on a
-        # truncated corpus would silently change the data — start over
-        print(f"[launch] incomplete store at {store_dir}; rebuilding")
-        import shutil
+        if building.exists():
+            # OUR build died mid-ingest: training on a truncated corpus
+            # would silently change the data — start over
+            print(f"[launch] incomplete store at {store_dir}; rebuilding")
+            import shutil
 
-        shutil.rmtree(store_dir)
+            shutil.rmtree(store_dir)
+        else:
+            # populated by something else (no marker of ours either way):
+            # never delete data we didn't write — reopen as-is.  NOTE this
+            # also catches partial builds from pre-sentinel launchers; the
+            # operator decides, instead of us silently rmtree-ing.
+            print(f"[launch] WARNING: reopening store at {store_dir} not "
+                  f"built by this launcher; --n-prompts {n_prompts} ignored "
+                  "(if this is a suspected partial build, delete the dir "
+                  "to rebuild)")
+            return _reopen_store(store_dir)
+    store_dir.mkdir(parents=True, exist_ok=True)
+    building.write_text("")  # sentinel: a *.bin without this is not ours
     store = build_store_from_corpus(store_dir, n_prompts=n_prompts, seed=0)
     marker.write_text(f"n_prompts={n_prompts}\n")
+    building.unlink()
     return store
 
 

@@ -1,0 +1,25 @@
+"""repro.service — the concurrent PromptStore service tier.
+
+Turns the passive store library into a long-running service: async
+ingest with group commit (`ingest`), background per-shard compaction
+with codec stage reselection (`compaction`), a byte-budgeted serve-path
+token cache (`cache`), and the composed lifecycle (`service`).
+See ARCHITECTURE.md "Service tier".
+"""
+
+from repro.service.cache import TokenCache
+from repro.service.compaction import (BackgroundCompactor, CompactionResult,
+                                      compact_shard, compact_store)
+from repro.service.ingest import IngestQueue, IngestTicket
+from repro.service.service import PromptService
+
+__all__ = [
+    "BackgroundCompactor",
+    "CompactionResult",
+    "IngestQueue",
+    "IngestTicket",
+    "PromptService",
+    "TokenCache",
+    "compact_shard",
+    "compact_store",
+]

@@ -1,0 +1,136 @@
+"""Serve-path token cache: a byte-budgeted LRU over decompressed token
+arrays.
+
+Every `get_tokens` admission in the serving loop otherwise re-reads the
+frame from disk and re-runs the codec pipeline's decode stages; for the
+hot prompts of a production workload (system prompts, few-shot prefixes,
+retried requests) that work is identical every time.  The cache keys on
+the store's content address (sha256 of the text), so entries can never go
+stale: a re-`put` of the same key stores the same text, and compaction
+preserves content per key even when it re-encodes a shard with a
+different codec pipeline — no invalidation protocol is needed.
+
+Sizing is by payload bytes (`np.ndarray.nbytes`), not entry count, since
+prompt token streams span ~30 to ~200k ids (paper §4.1).  Cached arrays
+are shared, not copied — treat them as read-only.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+class TokenCache:
+    """Thread-safe byte-budgeted LRU: content key -> token id array."""
+
+    def __init__(self, capacity_bytes: int) -> None:
+        if capacity_bytes < 0:
+            raise ValueError("capacity_bytes must be >= 0")
+        self.capacity_bytes = int(capacity_bytes)
+        self._entries: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._oversize_rejects = 0
+
+    # -- core ----------------------------------------------------------------
+
+    def get(self, key: str) -> Optional[np.ndarray]:
+        with self._lock:
+            arr = self._entries.get(key)
+            if arr is None:
+                self._misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self._hits += 1
+            return arr
+
+    def put(self, key: str, tokens: np.ndarray) -> None:
+        arr = np.asarray(tokens)
+        with self._lock:
+            if arr.nbytes > self.capacity_bytes:
+                # would evict the entire cache and still not fit
+                self._oversize_rejects += 1
+                return
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= old.nbytes
+            self._entries[key] = arr
+            self._bytes += arr.nbytes
+            while self._bytes > self.capacity_bytes and self._entries:
+                _, victim = self._entries.popitem(last=False)
+                self._bytes -= victim.nbytes
+                self._evictions += 1
+
+    # -- loader composition ---------------------------------------------------
+
+    def get_or_load(self, key: str,
+                    loader: Callable[[str], np.ndarray]) -> np.ndarray:
+        arr = self.get(key)
+        if arr is None:
+            arr = np.asarray(loader(key))
+            self.put(key, arr)
+        return arr
+
+    def get_or_load_many(
+        self, keys: Sequence[str],
+        loader_many: Callable[[List[str]], List[np.ndarray]],
+    ) -> List[np.ndarray]:
+        """Batch lookup: misses are fetched in ONE `loader_many` call (so
+        the store's batched token-stream decode still groups by pipeline)
+        and populate the cache."""
+        out: List[Optional[np.ndarray]] = [self.get(k) for k in keys]
+        miss_pos = [i for i, arr in enumerate(out) if arr is None]
+        if miss_pos:
+            # dedupe: repeated miss keys decode once
+            miss_keys: List[str] = []
+            pos_of: dict = {}
+            for i in miss_pos:
+                if keys[i] not in pos_of:
+                    pos_of[keys[i]] = len(miss_keys)
+                    miss_keys.append(keys[i])
+            loaded = [np.asarray(a) for a in loader_many(miss_keys)]
+            for k, arr in zip(miss_keys, loaded):
+                self.put(k, arr)
+            for i in miss_pos:
+                out[i] = loaded[pos_of[keys[i]]]
+        return out  # type: ignore[return-value]
+
+    # -- ops ------------------------------------------------------------------
+
+    def invalidate(self, key: str) -> bool:
+        with self._lock:
+            arr = self._entries.pop(key, None)
+            if arr is None:
+                return False
+            self._bytes -= arr.nbytes
+            return True
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self._hits + self._misses
+            return {
+                "capacity_bytes": self.capacity_bytes,
+                "bytes": self._bytes,
+                "entries": len(self._entries),
+                "hits": self._hits,
+                "misses": self._misses,
+                "evictions": self._evictions,
+                "oversize_rejects": self._oversize_rejects,
+                "hit_rate": self._hits / total if total else 0.0,
+            }

@@ -1,0 +1,225 @@
+"""Per-shard background compaction: reclaim dead bytes and re-run codec
+stage selection on each shard's actual content mix.
+
+Dead bytes accumulate from racing duplicate ingests (the async queue's
+documented dup window) and from records dropped at recovery time (torn
+tails); the append-only segment files never shrink on their own.  And the
+codec pipeline that was best at ingest time is not necessarily best for
+the shard's final content mix — the paper's own results (§5) show the
+winner flipping between zstd/token/hybrid with prompt size and content
+type, so compaction re-evaluates ALL available method pipelines over the
+shard's decompressed texts and re-encodes iff a different pipeline wins.
+
+A rebuild is crash-safe end to end: blobs are read from a snapshot, the
+new generation is written to fresh filenames, records committed during
+the rebuild are caught up under the shard lock, and the atomic meta
+replace in `ShardedPromptStore.swap_shard` is the single commit point
+(either generation reopens intact; see the store's docstring).
+
+Losslessness: compaction only ever rewrites a record's *encoding* — each
+text is decompressed and its sha256 is checked against the content key
+before any re-encode is considered; a shard with even one integrity
+failure is compacted without re-encoding (the bad blob is preserved
+bit-for-bit for forensics rather than laundered through a codec).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.core.store import ShardedPromptStore, content_key
+
+
+@dataclass
+class CompactionResult:
+    shard_id: int
+    n_records: int
+    n_caught_up: int
+    bytes_before: int
+    bytes_after: int
+    method: Optional[str]       # pipeline the shard was re-encoded with
+    reencoded: bool
+    wall_s: float
+
+    @property
+    def bytes_reclaimed(self) -> int:
+        return max(self.bytes_before - self.bytes_after, 0)
+
+
+def _candidate_methods(store: ShardedPromptStore) -> List[str]:
+    from repro.core.api import METHODS
+
+    if store.compressor.tokenizer is None:
+        return ["zstd"]
+    return list(METHODS)
+
+
+def compact_shard(store: ShardedPromptStore, shard_id: int,
+                  reselect: bool = True) -> Optional[CompactionResult]:
+    """Rebuild one shard; returns None if another compactor holds it.
+
+    Phases (heavy work happens with no store lock held):
+    1. snapshot the live records + blobs;
+    2. integrity-check every text against its content key;
+    3. if `reselect` and the shard is clean: encode the texts through every
+       candidate method pipeline, pick the smallest total, and keep the
+       re-encoded blobs only on a strict win;
+    4. `swap_shard` — catch-up + new generation + atomic meta commit.
+    """
+    lock = store.compaction_lock(shard_id)
+    if not lock.acquire(blocking=False):
+        return None
+    try:
+        t0 = time.perf_counter()
+        recs = store.shard_records(shard_id)
+        blobs = store.read_records(shard_id, recs)
+        entries = [
+            {"key": r["key"], "seq": r["seq"], "method": r["method"],
+             "n_chars": r["n_chars"], "blob": b}
+            for r, b in zip(recs, blobs)
+        ]
+        chosen: Optional[str] = None
+        reencoded = False
+        if reselect and entries:
+            try:
+                texts = store.compressor.decompress_batch(blobs)
+                clean = all(content_key(t) == r["key"]
+                            for t, r in zip(texts, recs))
+            except Exception:
+                clean = False
+            if clean:
+                current_total = sum(len(b) for b in blobs)
+                best_total = current_total
+                best_blobs: Optional[List[bytes]] = None
+                for method in _candidate_methods(store):
+                    new_blobs = store.compressor.compress_batch(texts, method)
+                    total = sum(len(b) for b in new_blobs)
+                    if total < best_total:
+                        best_total, best_blobs, chosen = total, new_blobs, method
+                if best_blobs is not None:
+                    reencoded = True
+                    for e, b in zip(entries, best_blobs):
+                        e["blob"] = b
+                        e["method"] = chosen
+        swap = store.swap_shard(shard_id, entries)
+        return CompactionResult(
+            shard_id=shard_id,
+            n_records=swap["n_records"],
+            n_caught_up=swap["n_caught_up"],
+            bytes_before=swap["bytes_before"],
+            bytes_after=swap["bytes_after"],
+            method=chosen,
+            reencoded=reencoded,
+            wall_s=time.perf_counter() - t0,
+        )
+    finally:
+        lock.release()
+
+
+def compact_store(store: ShardedPromptStore,
+                  reselect: bool = True) -> List[CompactionResult]:
+    """Compact every shard (skipping any a background compactor holds)."""
+    out = []
+    for shard_id in range(store.n_shards):
+        res = compact_shard(store, shard_id, reselect=reselect)
+        if res is not None:
+            out.append(res)
+    return out
+
+
+class BackgroundCompactor:
+    """Periodic scan-and-compact thread.
+
+    Every `interval_s` it reads each shard's live/dead byte accounting
+    (`store.shard_stats`) and rebuilds shards whose dead ratio exceeds
+    `trigger_dead_ratio` (with at least `min_dead_bytes` reclaimable, so
+    tiny stores don't churn).  `force_reselect_every` full passes, clean
+    shards are compacted too, to pick up stage-selection wins that dead
+    bytes alone would never trigger (0 disables that sweep).
+    """
+
+    def __init__(self, store: ShardedPromptStore, interval_s: float = 5.0,
+                 trigger_dead_ratio: float = 0.25, min_dead_bytes: int = 4096,
+                 reselect: bool = True, force_reselect_every: int = 0) -> None:
+        self._store = store
+        self.interval_s = float(interval_s)
+        self.trigger_dead_ratio = float(trigger_dead_ratio)
+        self.min_dead_bytes = int(min_dead_bytes)
+        self.reselect = reselect
+        self.force_reselect_every = int(force_reselect_every)
+        self._stop_event = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._passes = 0
+        self._compactions = 0
+        self._bytes_reclaimed = 0
+        self._errors = 0
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def start(self) -> "BackgroundCompactor":
+        if self._thread is not None:
+            raise RuntimeError("compactor already started")
+        self._thread = threading.Thread(target=self._loop,
+                                        name="shard-compactor", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Idempotent: finish the in-flight shard (never torn — the swap
+        is atomic regardless) and join."""
+        self._stop_event.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- scan loop -------------------------------------------------------------
+
+    def _loop(self) -> None:
+        while not self._stop_event.wait(self.interval_s):
+            self.run_pass()
+
+    def run_pass(self) -> List[CompactionResult]:
+        """One scan over all shards (also callable synchronously)."""
+        with self._lock:
+            self._passes += 1
+            sweep = (self.force_reselect_every > 0
+                     and self._passes % self.force_reselect_every == 0)
+        results: List[CompactionResult] = []
+        all_stats = self._store.all_shard_stats()  # one index pass
+        for shard_id in range(self._store.n_shards):
+            if self._stop_event.is_set() and not sweep:
+                break
+            try:
+                st = all_stats[shard_id]
+                dead, size = st["dead_bytes"], max(st["file_bytes"], 1)
+                due = (dead >= self.min_dead_bytes
+                       and dead / size >= self.trigger_dead_ratio)
+                if not due and not (sweep and st["n_records"]):
+                    continue
+                res = compact_shard(self._store, shard_id, reselect=self.reselect)
+            except Exception:
+                with self._lock:
+                    self._errors += 1
+                continue
+            if res is not None:
+                results.append(res)
+                with self._lock:
+                    self._compactions += 1
+                    self._bytes_reclaimed += res.bytes_reclaimed
+        return results
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "passes": self._passes,
+                "compactions": self._compactions,
+                "bytes_reclaimed": self._bytes_reclaimed,
+                "errors": self._errors,
+                "interval_s": self.interval_s,
+                "trigger_dead_ratio": self.trigger_dead_ratio,
+                "min_dead_bytes": self.min_dead_bytes,
+            }

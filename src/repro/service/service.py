@@ -1,0 +1,176 @@
+"""PromptService: the long-running service tier over a PromptStore.
+
+Composes the three service components around one `ShardedPromptStore`:
+
+    PromptService
+    ├── IngestQueue            async write path (put_async; group commit,
+    │                          per-shard parallel fsync, backpressure)
+    ├── BackgroundCompactor    dead-byte reclaim + codec stage reselection
+    └── TokenCache             serve-path get_tokens LRU (byte budget)
+
+Read/write API is a superset of the store's (`put/put_many/get/get_many/
+get_tokens/get_tokens_many/keys/stats/verify_all` all work), so anything
+that takes a store — `BatchServer` admission, `TokenPipeline` — can take
+a `PromptService` instead and transparently gain the cache.
+
+Lifecycle: `start()` → serve → `drain()`/`stop()`.  `stop()` is the
+crash-safe shutdown: the ingest queue flushes and fsyncs everything
+acknowledged, the compactor finishes its in-flight shard (its swap is
+atomic anyway, so even a SIGKILL mid-compaction reopens intact — see
+`swap_shard`), and both joins are idempotent.  Use as a context manager
+to get that on any exit path.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.store import ShardedPromptStore
+from repro.service.cache import TokenCache
+from repro.service.compaction import (BackgroundCompactor, CompactionResult,
+                                      compact_shard, compact_store)
+from repro.service.ingest import IngestQueue, IngestTicket
+
+
+class PromptService:
+    def __init__(
+        self,
+        store: ShardedPromptStore,
+        cache_bytes: int = 64 << 20,
+        ingest_async: bool = True,
+        flush_batch: int = 64,
+        flush_interval_s: float = 0.05,
+        max_pending: int = 1024,
+        compact_interval_s: Optional[float] = None,
+        compact_trigger_dead_ratio: float = 0.25,
+        compact_min_dead_bytes: int = 4096,
+        compact_reselect: bool = True,
+    ) -> None:
+        self.store = store
+        self.cache = TokenCache(cache_bytes) if cache_bytes > 0 else None
+        self.ingest = (IngestQueue(store, flush_batch=flush_batch,
+                                   flush_interval_s=flush_interval_s,
+                                   max_pending=max_pending)
+                       if ingest_async else None)
+        self.compactor = (BackgroundCompactor(
+            store, interval_s=compact_interval_s,
+            trigger_dead_ratio=compact_trigger_dead_ratio,
+            min_dead_bytes=compact_min_dead_bytes,
+            reselect=compact_reselect)
+            if compact_interval_s is not None else None)
+        self._started = False
+        self._stopped = False
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def start(self) -> "PromptService":
+        if self._started:
+            raise RuntimeError("service already started")
+        self._started = True
+        if self.ingest is not None:
+            self.ingest.start()
+        if self.compactor is not None:
+            self.compactor.start()
+        return self
+
+    def drain(self) -> None:
+        """Block until every async ingest acknowledged so far is durable."""
+        if self.ingest is not None:
+            self.ingest.drain()
+
+    def stop(self) -> None:
+        """Crash-safe shutdown (idempotent): drain + commit the ingest
+        queue, stop the compactor, release the threads."""
+        if self._stopped:
+            return
+        self._stopped = True
+        if self.ingest is not None:
+            self.ingest.stop()
+        if self.compactor is not None:
+            self.compactor.stop()
+
+    def __enter__(self) -> "PromptService":
+        return self.start() if not self._started else self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- write path ------------------------------------------------------------
+
+    def put_async(self, texts: Sequence[str],
+                  method: Optional[str] = None) -> IngestTicket:
+        """Queue texts for ingest; never blocks on fsync (only on
+        backpressure).  Degrades to a synchronous, already-durable ticket
+        when the service was built with `ingest_async=False`."""
+        if self.ingest is not None:
+            return self.ingest.submit(texts, method)
+        keys = self.store.put_many(texts, method)
+        ticket = IngestTicket(list(keys))
+        ticket._finish(None)
+        return ticket
+
+    def put(self, text: str, method: Optional[str] = None) -> str:
+        return self.store.put(text, method)
+
+    def put_many(self, texts: Sequence[str],
+                 method: Optional[str] = None) -> List[str]:
+        return self.store.put_many(texts, method)
+
+    # -- read path -------------------------------------------------------------
+
+    def get(self, key: str, verify: bool = True) -> str:
+        return self.store.get(key, verify=verify)
+
+    def get_many(self, keys: Sequence[str], verify: bool = True) -> List[str]:
+        return self.store.get_many(keys, verify=verify)
+
+    def get_tokens(self, key: str) -> np.ndarray:
+        """Serve-path admission: token ids via the LRU, decoding only on
+        a miss (cached arrays are shared — treat as read-only)."""
+        if self.cache is None:
+            return self.store.get_tokens(key)
+        return self.cache.get_or_load(key, self.store.get_tokens)
+
+    def get_tokens_many(self, keys: Sequence[str]) -> List[np.ndarray]:
+        if self.cache is None:
+            return self.store.get_tokens_many(keys)
+        return self.cache.get_or_load_many(keys, self.store.get_tokens_many)
+
+    def iter_tokens(self):
+        return self.store.iter_tokens()
+
+    # -- store passthrough -----------------------------------------------------
+
+    def keys(self) -> List[str]:
+        return self.store.keys()
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.store
+
+    def verify_all(self) -> dict:
+        return self.store.verify_all()
+
+    # -- maintenance -----------------------------------------------------------
+
+    def compact(self, shard_id: Optional[int] = None,
+                reselect: bool = True) -> List[CompactionResult]:
+        """Synchronous compaction (all shards, or one)."""
+        if shard_id is not None:
+            res = compact_shard(self.store, shard_id, reselect=reselect)
+            return [res] if res is not None else []
+        return compact_store(self.store, reselect=reselect)
+
+    def stats(self) -> dict:
+        """One snapshot across every component."""
+        return {
+            "store": self.store.stats(),
+            "cache": self.cache.stats() if self.cache is not None else None,
+            "ingest": self.ingest.stats() if self.ingest is not None else None,
+            "compaction": (self.compactor.stats()
+                           if self.compactor is not None else None),
+        }

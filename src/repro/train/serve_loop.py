@@ -49,10 +49,16 @@ class BatchServer:
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, dtype=np.int64)
         self.queue: List[Request] = []
+        self._next_rid = 0
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, c, {"tokens": t}, pos))
 
     # -- admission -----------------------------------------------------------
+    #
+    # `store` duck-types: a PromptStore/ShardedPromptStore reads straight
+    # from disk; a repro.service.PromptService routes the same calls
+    # through its serve-path token cache, so repeat admissions of hot
+    # prompts skip the codec decode entirely.
 
     def submit_text(self, store: PromptStore, key: str, **kw) -> Request:
         """Admit a stored prompt without detokenization."""
@@ -67,8 +73,11 @@ class BatchServer:
                 for toks in store.get_tokens_many(keys)]
 
     def submit_tokens(self, tokens: np.ndarray, max_new_tokens: int = 32) -> Request:
-        req = Request(rid=len(self.queue), prompt_tokens=tokens,
+        # rids are server-lifetime monotonic; queue length would recycle
+        # ids once the queue drains and alias distinct requests
+        req = Request(rid=self._next_rid, prompt_tokens=tokens,
                       max_new_tokens=max_new_tokens)
+        self._next_rid += 1
         self.queue.append(req)
         return req
 
