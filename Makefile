@@ -1,0 +1,20 @@
+# Test tiers (markers registered in pytest.ini; see ARCHITECTURE.md):
+#   make quick   not-slow tests + golden frame-layout pins (scripts/check.sh)
+#   make crash   crash-injection suite alone (fault points in fsync/replace)
+#   make test    full tier-1 (slow + concurrency included)
+#   make bench   the full benchmark sweep (writes BENCH_*.json)
+PY := PYTHONPATH=src python
+
+.PHONY: quick crash test bench
+
+quick:
+	bash scripts/check.sh
+
+crash:
+	$(PY) -m pytest -q -m crash
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src:. python benchmarks/run.py

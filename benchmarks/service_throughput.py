@@ -1,5 +1,6 @@
-"""Service-tier throughput: async ingest vs synchronous `put_many`, and
-cached vs uncached serve-path admission.
+"""Service-tier throughput: async ingest vs synchronous `put_many`,
+cached vs uncached serve-path admission, dictionary-trained compaction on
+a short-prompt corpus, and online shard rebalancing.
 
 Ingest: the same corpus flows into identical sharded stores (a) via
 synchronous `put_many` group commits and (b) via the ingest queue —
@@ -11,6 +12,16 @@ in the request path observes — no fsync on its critical path) and
 Admission: repeat `get_tokens_many` rounds over a fixed key set, straight
 from the store (codec decode every round) vs through the PromptService
 token cache (decode only on round 1).
+
+Dictionary compaction: a corpus of short templated prompts — where
+per-record compression is weakest because every record re-learns the
+shared structure — is ingested, then compacted with dictionary training
+enabled.  The row reports total store bytes before vs after WITH the
+sidecars charged; the reduction must be strict (the adoption rule's
+guarantee), so the row carries FAIL if it ever is not.
+
+Rebalance: the same store is re-partitioned online across a different
+shard count; the row reports wall time and fails if any key is lost.
 
 Skips gracefully (SKIP row, no failure) when the store root is
 read-only — set REPRO_BENCH_STORE_ROOT to move it off the default temp
@@ -36,6 +47,9 @@ BATCH = 32
 REPS = 3           # best-of, sync/async alternating (fsync cost is noisy)
 ADMIT_KEYS = 48
 ADMIT_ROUNDS = 6
+SHORT_N = 192      # dict-compaction corpus: short templated prompts
+DICT_SHARDS = 4    # its shard count (fewer shards -> more records/dict);
+                   # the rebalance row then re-partitions it to N_SHARDS
 
 
 def _store_root() -> str:
@@ -54,6 +68,11 @@ def _texts() -> list:
     return [f"user {i}: summarize incident ticket #{i % 17}; "
             f"attach the runbook diff and escalate. " * 4
             for i in range(N_PROMPTS)]
+
+
+def _short_texts() -> list:
+    return [f"q{i}: fetch the weather for city #{i % 31} and reply "
+            "tersely with units." for i in range(SHORT_N)]
 
 
 def run() -> list:
@@ -150,6 +169,44 @@ def run() -> list:
                         f"speedup={t_uncached / t_cached:.2f}x "
                         f"hit_rate={hit_rate:.2f}"))
 
+    # -- dictionary-trained compaction on the short-prompt corpus ------------
+    from repro.service.compaction import compact_store
+
+    short = _short_texts()
+    with tempfile.TemporaryDirectory(dir=root) as tmp:
+        store = ShardedPromptStore(tmp, PromptCompressor(tok, method="zstd"),
+                                   n_shards=DICT_SHARDS)
+        short_keys = store.put_many(short)
+        st0 = store.stats()
+        bytes_before = st0["file_bytes"] + st0["dict_bytes"]
+        t0 = time.perf_counter()
+        results = compact_store(store, reselect=True, train_dict=True)
+        t_dict = time.perf_counter() - t0
+        st1 = store.stats()
+        bytes_after = st1["file_bytes"] + st1["dict_bytes"]
+        n_dicts = sum(1 for r in results if r.used_dict)
+        lossless = store.verify_all()["failure"] == 0
+        strict_win = bytes_after < bytes_before
+        verdict = ("" if strict_win and lossless else
+                   " FAIL:lossless" if not lossless else " FAIL:not_strict_win")
+        rows.append(csv_row(
+            "service_dict_compaction", 1e6 * t_dict / len(short),
+            f"{bytes_before}B->{bytes_after}B "
+            f"(dicts={n_dicts}/{store.n_shards}, sidecars={st1['dict_bytes']}B) "
+            f"win={bytes_before / bytes_after:.2f}x" + verdict))
+
+        # -- online shard rebalance on the same (dict-bearing) store ---------
+        t0 = time.perf_counter()
+        reb = store.rebalance(N_SHARDS)
+        t_reb = time.perf_counter() - t0
+        intact = (store.keys() == short_keys
+                  and store.verify_all()["failure"] == 0)
+        rows.append(csv_row(
+            "service_rebalance", 1e6 * t_reb / len(short),
+            f"{reb['n_shards_before']}->{reb['n_shards_after']}shards "
+            f"{reb['n_records']}records reencoded={reb['n_reencoded']} "
+            f"{t_reb * 1e3:.0f}ms" + ("" if intact else " FAIL:keys_lost")))
+
     doc = {
         "benchmark": "service_throughput",
         "n_prompts": len(texts),
@@ -166,6 +223,16 @@ def run() -> list:
         "admit_cached_us": 1e6 * t_cached / n_admits,
         "admit_cached_speedup": t_uncached / t_cached,
         "admit_cache_hit_rate": hit_rate,
+        "dict_short_prompts": len(short),
+        "dict_bytes_before": bytes_before,
+        "dict_bytes_after": bytes_after,
+        "dict_sidecar_bytes": st1["dict_bytes"],
+        "dict_shards_adopted": n_dicts,
+        "dict_win": bytes_before / bytes_after,
+        "rebalance_from": reb["n_shards_before"],
+        "rebalance_to": reb["n_shards_after"],
+        "rebalance_records": reb["n_records"],
+        "rebalance_wall_s": t_reb,
     }
     try:
         _OUT.write_text(json.dumps(doc, indent=1) + "\n")

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Quick verification loop: the not-slow test tier plus an explicit run of
+# the golden-frame tests that pin on-disk byte layouts (v1 token payload,
+# v2 dict header).  Full tier-1 remains `PYTHONPATH=src python -m pytest
+# -x -q` (see ROADMAP.md); `pytest -m crash` selects the crash-injection
+# suite alone.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -q -m "not slow"
+python -m pytest -q tests/test_codec.py tests/test_dict_codec.py -k golden

@@ -8,10 +8,13 @@ measured sizes match the paper's definitions bit-for-bit):
     token  : [format_byte | packed(τ(T))]
     hybrid : C_zstd([format_byte | packed(τ(T))])
 
-Production frames wrap a payload with a 14-byte self-describing header
+Production frames wrap a payload with a 15-byte self-describing header
 (magic, version, method, backend, level, packing scheme, tokenizer
 fingerprint) so stored blobs can always be decoded — the tokenizer
-versioning safeguard of §8.4.1 #1.
+versioning safeguard of §8.4.1 #1.  Frames whose byte stage used a
+trained dictionary carry a second header version (2) with an extra
+8-byte dictionary fingerprint; version-1 frames are unchanged, so every
+pre-dictionary store stays decodable byte-for-byte.
 """
 
 from __future__ import annotations
@@ -25,11 +28,13 @@ import numpy as np
 
 from repro.core import packing
 from repro.core.codec import PipelineCodec, TokenPackCodec, method_pipeline
-from repro.core.zstd_backend import BACKENDS, DEFAULT_LEVEL, compress_bytes, decompress_bytes
+from repro.core.zstd_backend import (BACKENDS, DEFAULT_LEVEL, compress_bytes,
+                                     decompress_bytes, decompress_bytes_dict)
 from repro.tokenizer.bpe import BPETokenizer
 
 MAGIC = b"LP"
-VERSION = 1
+VERSION = 1        # plain frames — bit-identical to every earlier store
+DICT_VERSION = 2   # + 8-byte dictionary fingerprint after the v1 fields
 
 METHODS = ("zstd", "token", "hybrid")
 _METHOD_ID = {m: i for i, m in enumerate(METHODS)}
@@ -95,6 +100,15 @@ def hybrid_tokens(payload: bytes, backend: str = "zstd") -> np.ndarray:
 # magic, ver, method, backend, level (signed: zstd accepts negative levels),
 # scheme, tokenizer fingerprint
 _HEADER = struct.Struct("<2sBBBbB8s")
+# v2 appends the dictionary fingerprint (sha256(dict)[:8]) after the v1
+# fields, so a v2 header is a v1 header plus 8 bytes — old frames parse
+# unchanged and old stores stay byte-identical on disk
+_DICT_FP = struct.Struct("<8s")
+
+
+def dict_fingerprint(dictionary: bytes) -> bytes:
+    """The 8-byte content address a v2 frame stores for its dictionary."""
+    return hashlib.sha256(dictionary).digest()[:8]
 
 
 @dataclass(frozen=True)
@@ -105,6 +119,7 @@ class FrameInfo:
     scheme: str
     tokenizer_fp: bytes
     payload: bytes
+    dict_fp: Optional[bytes] = None  # None for v1 (dictionary-less) frames
 
 
 def _tok_fp(tokenizer: Optional[BPETokenizer]) -> bytes:
@@ -117,7 +132,7 @@ def parse_frame(blob: bytes) -> FrameInfo:
     if len(blob) < _HEADER.size or blob[:2] != MAGIC:
         raise ValueError("not a LoPace frame")
     magic, ver, mid, bid, level, sid, fp = _HEADER.unpack_from(blob, 0)
-    if ver != VERSION:
+    if ver not in (VERSION, DICT_VERSION):
         raise ValueError(f"unsupported LoPace frame version {ver}")
     # Corrupt or future frames must fail loudly as ValueError, not leak
     # bare KeyError/IndexError from the id tables.
@@ -127,13 +142,21 @@ def parse_frame(blob: bytes) -> FrameInfo:
         raise ValueError(f"corrupt or future LoPace frame: unknown backend id {bid}")
     if sid not in _SCHEME_NAMES:
         raise ValueError(f"corrupt or future LoPace frame: unknown scheme id {sid}")
+    dict_fp: Optional[bytes] = None
+    body = _HEADER.size
+    if ver == DICT_VERSION:
+        if len(blob) < _HEADER.size + _DICT_FP.size:
+            raise ValueError("corrupt LoPace frame: truncated dict header")
+        (dict_fp,) = _DICT_FP.unpack_from(blob, _HEADER.size)
+        body += _DICT_FP.size
     return FrameInfo(
         method=METHODS[mid],
         backend=_BACKEND_NAMES[bid],
         level=level,
         scheme=_SCHEME_NAMES[sid],
         tokenizer_fp=fp,
-        payload=blob[_HEADER.size:],
+        payload=blob[body:],
+        dict_fp=dict_fp,
     )
 
 
@@ -177,20 +200,68 @@ class PromptCompressor:
         self.backend = backend
         self.scheme = scheme
         self._pipelines: Dict[tuple, PipelineCodec] = {}
+        self._dicts: Dict[bytes, bytes] = {}  # fingerprint -> dictionary
+
+    # -- trained dictionaries -----------------------------------------------
+
+    def register_dictionary(self, dictionary: bytes) -> bytes:
+        """Make a trained dictionary available for encode/decode; returns
+        its 8-byte fingerprint (the id v2 frames carry).  Content-addressed
+        and idempotent — the store calls this for every sidecar it opens.
+
+        Registrations are never evicted: a reader may hold a frame fetched
+        before a generation swap and decode it after, so dropping a
+        superseded dictionary would turn that read into an error.  Growth
+        is bounded in practice — compaction only registers a *winning*
+        dictionary (candidates are scored on a scratch compressor), and
+        the strict-win adoption rule means a stable corpus converges on
+        its incumbent (same bytes ⇒ same fingerprint ⇒ no new entry).
+        Refcounted eviction keyed on live sidecars is a noted follow-on."""
+        if not dictionary:
+            raise ValueError("cannot register an empty dictionary")
+        fp = dict_fingerprint(dictionary)
+        self._dicts[fp] = bytes(dictionary)
+        return fp
+
+    def dictionary_for(self, fp: bytes) -> bytes:
+        try:
+            return self._dicts[fp]
+        except KeyError:
+            raise ValueError(
+                f"frame references dictionary {fp.hex()} but it is not "
+                "registered — the store's .dict sidecar is missing or was "
+                "not loaded") from None
 
     # -- codec pipelines ----------------------------------------------------
 
     def pipeline(self, method: Optional[str] = None,
-                 backend: Optional[str] = None) -> PipelineCodec:
-        """The stage pipeline implementing `method` (cached per method/backend)."""
-        key = (method or self.method, backend or self.backend)
+                 backend: Optional[str] = None,
+                 dict_fp: Optional[bytes] = None) -> PipelineCodec:
+        """The stage pipeline implementing `method` (cached per
+        method/backend/dictionary)."""
+        key = (method or self.method, backend or self.backend, dict_fp)
         pipe = self._pipelines.get(key)
         if pipe is None:
+            dictionary = self.dictionary_for(dict_fp) if dict_fp else None
             pipe = method_pipeline(key[0], tokenizer=self.tokenizer,
                                    level=self.level, backend=key[1],
-                                   scheme=self.scheme)
+                                   scheme=self.scheme, dictionary=dictionary)
             self._pipelines[key] = pipe
         return pipe
+
+    def byte_stage_payloads(self, texts: Sequence[str],
+                            method: Optional[str] = None) -> List[bytes]:
+        """The inputs the byte-compressor stage of `method` would see for
+        `texts` — what a dictionary for that (method, scheme) must be
+        trained on (utf-8 text for ``zstd``, packed token streams for
+        ``hybrid``)."""
+        method = method or self.method
+        if method == "token":
+            raise ValueError("method 'token' has no byte-compressor stage")
+        payloads = [t.encode("utf-8") for t in texts]
+        for stage in self.pipeline(method).stages[:-1]:
+            payloads = stage.encode_batch(payloads)
+        return payloads
 
     # -- raw (paper-exact) ------------------------------------------------
 
@@ -202,31 +273,41 @@ class PromptCompressor:
 
     # -- framed (production) ------------------------------------------------
 
-    def _header(self, method: str) -> bytes:
-        return _HEADER.pack(
+    def _header(self, method: str, dict_fp: Optional[bytes] = None) -> bytes:
+        head = _HEADER.pack(
             MAGIC,
-            VERSION,
+            DICT_VERSION if dict_fp else VERSION,
             _METHOD_ID[method],
             _BACKEND_IDS[self.backend],
             self.level,
             _SCHEME_IDS[self.scheme],
             _tok_fp(self.tokenizer if method != "zstd" else None),
         )
+        if dict_fp:
+            head += _DICT_FP.pack(dict_fp)
+        return head
 
     def compress(self, text: str, method: Optional[str] = None) -> bytes:
         return self.compress_batch([text], method)[0]
 
     def compress_batch(self, texts: Sequence[str],
-                       method: Optional[str] = None) -> List[bytes]:
+                       method: Optional[str] = None,
+                       dictionary: Optional[bytes] = None) -> List[bytes]:
         """Batch-first compression: one pipeline pass over the whole batch
         (batch BPE encode, one kernel launch per packing width on device),
-        bit-identical to calling `compress` per text."""
+        bit-identical to calling `compress` per text.
+
+        With ``dictionary``, the byte stage is primed with it and the
+        frames are emitted at header version 2 carrying its fingerprint;
+        without one, output is byte-identical to every earlier version.
+        """
         method = method or self.method
         if method not in METHODS:
             raise ValueError(f"method must be one of {METHODS}")
-        payloads = self.pipeline(method).encode_batch(
+        dict_fp = self.register_dictionary(dictionary) if dictionary else None
+        payloads = self.pipeline(method, dict_fp=dict_fp).encode_batch(
             [t.encode("utf-8") for t in texts])
-        header = self._header(method)
+        header = self._header(method, dict_fp)
         return [header + p for p in payloads]
 
     def _check_frame(self, info: FrameInfo) -> None:
@@ -243,16 +324,18 @@ class PromptCompressor:
         return self.decompress_batch([blob])[0]
 
     def decompress_batch(self, blobs: Sequence[bytes]) -> List[str]:
-        """Decode a batch of frames; frames are grouped by (method, backend)
-        so each pipeline decodes its group in one batched pass."""
+        """Decode a batch of frames; frames are grouped by (method,
+        backend, dict fingerprint) so each pipeline decodes its group in
+        one batched pass."""
         infos = [parse_frame(b) for b in blobs]
         out: List[Optional[str]] = [None] * len(blobs)
         groups: Dict[tuple, List[int]] = {}
         for i, info in enumerate(infos):
             self._check_frame(info)
-            groups.setdefault((info.method, info.backend), []).append(i)
-        for (method, backend), members in groups.items():
-            decoded = self.pipeline(method, backend).decode_batch(
+            groups.setdefault(
+                (info.method, info.backend, info.dict_fp), []).append(i)
+        for (method, backend, dict_fp), members in groups.items():
+            decoded = self.pipeline(method, backend, dict_fp).decode_batch(
                 [infos[i].payload for i in members])
             for i, raw in zip(members, decoded):
                 out[i] = raw.decode("utf-8")
@@ -272,17 +355,22 @@ class PromptCompressor:
                 # producing token ids requires a configured tokenizer
                 raise ValueError("frame needs a tokenizer but none configured")
             self._check_frame(info)
-            groups.setdefault((info.method, info.backend), []).append(i)
-        for (method, backend), members in groups.items():
+            groups.setdefault(
+                (info.method, info.backend, info.dict_fp), []).append(i)
+        for (method, backend, dict_fp), members in groups.items():
             payloads = [infos[i].payload for i in members]
-            if method == "zstd":
-                ids = [np.asarray(self.tokenizer.encode(
-                    decompress_bytes(p, backend=backend).decode("utf-8")),
-                    dtype=np.uint32) for p in payloads]
-            else:
-                if method == "hybrid":
+            if method in ("zstd", "hybrid"):  # undo the byte stage first
+                if dict_fp:
+                    d = self.dictionary_for(dict_fp)
+                    payloads = [decompress_bytes_dict(p, d, backend=backend)
+                                for p in payloads]
+                else:
                     payloads = [decompress_bytes(p, backend=backend)
                                 for p in payloads]
+            if method == "zstd":
+                ids = [np.asarray(self.tokenizer.encode(p.decode("utf-8")),
+                                  dtype=np.uint32) for p in payloads]
+            else:
                 pack_stage = self.pipeline(method, backend).stages[0]
                 assert isinstance(pack_stage, TokenPackCodec)
                 ids = pack_stage.decode_ids_batch(payloads)

@@ -38,7 +38,9 @@ from typing import Callable, Dict, List, Optional, Protocol, Sequence, runtime_c
 import numpy as np
 
 from repro.core import packing
-from repro.core.zstd_backend import BACKENDS, DEFAULT_LEVEL, compress_bytes, decompress_bytes
+from repro.core.zstd_backend import (BACKENDS, DEFAULT_LEVEL, DICT_BACKENDS,
+                                     compress_bytes, compress_bytes_dict,
+                                     decompress_bytes, decompress_bytes_dict)
 from repro.tokenizer.bpe import BPETokenizer
 
 
@@ -138,6 +140,40 @@ class ByteCompressorCodec:
         return [decompress_bytes(p, backend=self.backend) for p in payloads]
 
 
+class DictCodec:
+    """Dictionary-seeded byte-compressor stage (paper §8.4.2 #2).
+
+    Same position in a pipeline as :class:`ByteCompressorCodec`, but the
+    backend is primed with a trained dictionary, recovering cross-record
+    redundancy that per-record compression cannot see.  Encode and decode
+    must hold the identical dictionary bytes — the frame layer
+    (``repro.core.api``) threads a fingerprint through v2 frame headers
+    and the store persists the blob as a per-shard-generation sidecar.
+    """
+
+    name = "dict-compressor"
+
+    def __init__(self, dictionary: bytes, level: int = DEFAULT_LEVEL,
+                 backend: str = "zstd") -> None:
+        if backend not in DICT_BACKENDS:
+            raise ValueError(
+                f"backend {backend!r} has no dictionary mode; "
+                f"have {sorted(DICT_BACKENDS)}")
+        if not dictionary:
+            raise ValueError("DictCodec requires a non-empty dictionary")
+        self.dictionary = bytes(dictionary)
+        self.level = level
+        self.backend = backend
+
+    def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        return [compress_bytes_dict(p, self.dictionary, level=self.level,
+                                    backend=self.backend) for p in payloads]
+
+    def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        return [decompress_bytes_dict(p, self.dictionary, backend=self.backend)
+                for p in payloads]
+
+
 class PipelineCodec:
     """Ordered composition of stages; decode applies the inverses in reverse."""
 
@@ -184,6 +220,7 @@ def get_codec(name: str, **kwargs) -> Codec:
 
 register_codec("token-pack", TokenPackCodec)
 register_codec("byte-compressor", ByteCompressorCodec)
+register_codec("dict-compressor", DictCodec)
 
 
 def method_pipeline(
@@ -193,15 +230,27 @@ def method_pipeline(
     backend: str = "zstd",
     scheme: str = "fixed",
     use_device: Optional[bool] = None,
+    dictionary: Optional[bytes] = None,
 ) -> PipelineCodec:
-    """The paper's three methods as stage pipelines (§3.2-§3.4)."""
+    """The paper's three methods as stage pipelines (§3.2-§3.4).
+
+    With ``dictionary``, the byte-compressor stage is swapped for a
+    :class:`DictCodec` primed with it; ``token`` has no byte stage, so a
+    dictionary there is an error."""
+    if dictionary:
+        byte_stage: Codec = DictCodec(dictionary, level, backend)
+    else:
+        byte_stage = ByteCompressorCodec(level, backend)
     if method == "zstd":
-        stages: List[Codec] = [ByteCompressorCodec(level, backend)]
+        stages: List[Codec] = [byte_stage]
     elif method == "token":
+        if dictionary:
+            raise ValueError(
+                "method 'token' has no byte-compressor stage to apply a "
+                "dictionary to")
         stages = [TokenPackCodec(tokenizer, scheme, use_device)]
     elif method == "hybrid":
-        stages = [TokenPackCodec(tokenizer, scheme, use_device),
-                  ByteCompressorCodec(level, backend)]
+        stages = [TokenPackCodec(tokenizer, scheme, use_device), byte_stage]
     else:
         raise ValueError(f"unknown method {method!r}")
     return PipelineCodec(stages, name=method)

@@ -11,13 +11,49 @@ with a final literals-only sequence.  Pure Python + slice tricks; it exists
 so the framework owns a complete compression stack end-to-end (the
 ``zstandard`` C library remains the paper-faithful default backend, this is
 the from-scratch baseline and the feeder for the rANS entropy stage).
+
+Dictionary (prefix) mode: ``lz_compress(data, prefix=d)`` seeds the match
+window with ``d`` — matches may reach back into the dictionary, which is
+exactly how zstd's trained-dictionary mode recovers cross-record
+redundancy for payloads too short to build their own window.  The output
+covers only ``data``; ``lz_decompress(comp, prefix=d)`` must be handed the
+identical dictionary (the codec layer threads a fingerprint through frame
+headers to guarantee that).
 """
 
 from __future__ import annotations
 
+import threading
+
 _MIN_MATCH = 4
 _WINDOW = 0xFFFF  # 64 KiB - 1, max encodable offset
 _HASH_MASK = (1 << 20) - 1
+
+# Seeded match tables per dictionary: a dict-primed compress call would
+# otherwise re-hash every prefix position per record — per-record O(dict)
+# setup across a whole shard.  Small bounded memo; entries are copied per
+# call because compression mutates the table.  The lock matters: parallel
+# compactions (per-shard locks allow them) score dict candidates
+# concurrently, and unsynchronized eviction could double-pop.
+_PREFIX_TABLES: dict = {}
+_PREFIX_TABLES_MAX = 8
+_PREFIX_TABLES_LOCK = threading.Lock()
+
+
+def _seeded_table(prefix: bytes) -> dict:
+    """Match-table entries fully inside the prefix (data-independent, so
+    cacheable); the caller adds the few positions whose keys straddle the
+    prefix/payload boundary."""
+    with _PREFIX_TABLES_LOCK:
+        cached = _PREFIX_TABLES.get(prefix)
+        if cached is None:
+            cached = {}
+            for j in range(0, max(len(prefix) - _MIN_MATCH + 1, 0)):
+                cached[prefix[j : j + _MIN_MATCH]] = j
+            while len(_PREFIX_TABLES) >= _PREFIX_TABLES_MAX:
+                _PREFIX_TABLES.pop(next(iter(_PREFIX_TABLES)))
+            _PREFIX_TABLES[prefix] = cached
+        return dict(cached)
 
 
 def _ext_len(value: int) -> bytes:
@@ -41,23 +77,41 @@ def _match_len(data: bytes, a: int, b: int, n: int) -> int:
     return l
 
 
-def lz_compress(data: bytes) -> bytes:
-    """Greedy single-pass LZ77; returns self-contained block."""
-    n = len(data)
+def lz_compress(data: bytes, prefix: bytes = b"") -> bytes:
+    """Greedy single-pass LZ77; returns self-contained block.
+
+    ``prefix`` seeds the window without being emitted: matches may start
+    inside it (offsets reach at most ``_WINDOW`` back), so short payloads
+    that share structure with the dictionary compress to a few
+    dict-offset matches.  ``prefix=b""`` is byte-identical to the
+    historical no-dictionary behavior.
+    """
+    plen = len(prefix)
+    buf = prefix + data if plen else data
+    n = len(buf)
     out = bytearray()
-    if n == 0:
+    if n == plen:
         return bytes(out)
-    table: dict = {}
-    i = 0
-    lit_start = 0
-    # leave the last MIN_MATCH bytes as literals (simplifies the tail)
     limit = n - _MIN_MATCH
+    # seed the table with every dictionary position (last occurrence wins:
+    # closest candidate, shortest offsets); the fully-in-prefix entries
+    # come from a per-dictionary memo, only the boundary-straddling keys
+    # depend on the payload
+    if plen:
+        table = _seeded_table(prefix)
+        for j in range(max(plen - _MIN_MATCH + 1, 0), min(plen, limit + 1)):
+            table[buf[j : j + _MIN_MATCH]] = j
+    else:
+        table = {}
+    i = plen
+    lit_start = plen
+    # leave the last MIN_MATCH bytes as literals (simplifies the tail)
     while i <= limit:
-        key = data[i : i + _MIN_MATCH]
+        key = buf[i : i + _MIN_MATCH]
         cand = table.get(key)
         table[key] = i
         if cand is not None and i - cand <= _WINDOW:
-            mlen = _match_len(data, cand, i, n)
+            mlen = _match_len(buf, cand, i, n)
             if mlen >= _MIN_MATCH:
                 lit_len = i - lit_start
                 offset = i - cand
@@ -66,7 +120,7 @@ def lz_compress(data: bytes) -> bytes:
                 out.append((tok_lit << 4) | tok_match)
                 if tok_lit == 15:
                     out += _ext_len(lit_len - 15)
-                out += data[lit_start:i]
+                out += buf[lit_start:i]
                 out.append(offset & 0xFF)
                 out.append(offset >> 8)
                 if tok_match == 15:
@@ -74,7 +128,7 @@ def lz_compress(data: bytes) -> bytes:
                 # seed the table sparsely inside the match (speed/ratio balance)
                 end = i + mlen
                 for j in range(i + 1, min(end, limit), 7):
-                    table[data[j : j + _MIN_MATCH]] = j
+                    table[buf[j : j + _MIN_MATCH]] = j
                 i = end
                 lit_start = i
                 continue
@@ -85,12 +139,13 @@ def lz_compress(data: bytes) -> bytes:
     out.append(tok_lit << 4)
     if tok_lit == 15:
         out += _ext_len(lit_len - 15)
-    out += data[lit_start:n]
+    out += buf[lit_start:n]
     return bytes(out)
 
 
-def lz_decompress(comp: bytes) -> bytes:
-    out = bytearray()
+def lz_decompress(comp: bytes, prefix: bytes = b"") -> bytes:
+    out = bytearray(prefix)
+    plen = len(prefix)
     i, n = 0, len(comp)
     if n == 0:
         return b""
@@ -130,4 +185,4 @@ def lz_decompress(comp: bytes) -> bytes:
             seg = bytes(out[start:])
             reps = mlen // offset + 1
             out += (seg * reps)[:mlen]
-    return bytes(out)
+    return bytes(out[plen:])

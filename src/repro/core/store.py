@@ -13,7 +13,18 @@ A 1-shard store uses the legacy flat names ``data.bin`` / ``index.jsonl``
 so stores written by earlier versions open unchanged.  Compacted shards
 live at a bumped *generation* (``shard-000.g0001.bin``); the meta file is
 the atomic commit point, so a crash mid-compaction always reopens a fully
-intact generation (see `swap_shard`).
+intact generation (see `swap_shard`).  A shard generation whose frames
+were re-encoded with a trained dictionary carries the dictionary as a
+sidecar (``shard-000.g0001.dict``) whose sha256 is recorded in
+``store.json`` — the open path refuses a missing or corrupted sidecar,
+and sidecars of losing generations are garbage-collected with their
+``.bin``/``.idx.jsonl`` files.
+
+The shard *count* itself can change online: ``rebalance(n_shards)``
+re-partitions every key across a new layout through the same atomic
+``store.json`` commit point.  Readers are served throughout; writers that
+planned against the old layout re-route when they observe the swapped
+``_Layout`` (see `commit_batch`).
 
 Properties the paper calls for, preserved per shard:
 * application-level compression before storage (§2.4),
@@ -55,20 +66,64 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import threading
+import time
 from pathlib import Path
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.api import PromptCompressor
+from repro.core.api import PromptCompressor, parse_frame
 
 _META_NAME = "store.json"
 _ITER_BATCH = 64
 
+# Filenames this store has ever written, in their canonical spellings:
+# shard ids are {i:03d} (3+ digits, no excess zero-padding), generations
+# {g:04d}.  GC must recognize every one of these — including files of a
+# *different* shard count left by a crashed rebalance — while never
+# touching foreign files whose names merely look similar.
+_OWNED_FILE_RE = re.compile(
+    r"^(?:shard-(?P<sid>\d{3,})(?:\.g(?P<sgen>\d{4,}))?(?P<sext>\.bin|\.idx\.jsonl|\.dict)"
+    r"|data(?:\.g(?P<dgen>\d{4,}))?(?P<dext>\.bin|\.dict)"
+    r"|index(?:\.g(?P<igen>\d{4,}))?\.jsonl)$")
+
+
+def _canonical_owned(name: str) -> bool:
+    """True iff `name` is a file this store's naming scheme could have
+    produced.  `shard-0001.bin` is NOT ours (we write shard 1 as `001`),
+    so a GC sweep can never swallow a foreign file with a wider id."""
+    m = _OWNED_FILE_RE.match(name)
+    if not m:
+        return False
+    sid = m.group("sid")
+    if sid is not None and f"{int(sid):03d}" != sid:
+        return False
+    for gen in (m.group("sgen"), m.group("dgen"), m.group("igen")):
+        if gen is not None and f"{int(gen):04d}" != gen:
+            return False
+    return True
+
 
 def _sha(text: str) -> str:
     return hashlib.sha256(text.encode("utf-8")).hexdigest()
+
+
+def _index_records(entries: Sequence[dict], offsets: Sequence[int]) -> List[dict]:
+    """Index records for planned entries landed at `offsets` — the single
+    definition of the record schema every commit path publishes."""
+    return [
+        {
+            "key": e["key"],
+            "seq": e["seq"],
+            "offset": off,
+            "length": len(e["blob"]),
+            "method": e["method"],
+            "n_chars": e["n_chars"],
+        }
+        for e, off in zip(entries, offsets)
+    ]
 
 
 def content_key(text: str) -> str:
@@ -134,7 +189,34 @@ class _Shard:
             return f.read(length)
 
     def data_size(self) -> int:
-        return self.data_path.stat().st_size if self.data_path.exists() else 0
+        # tolerant of the file vanishing between exists() and stat(): a
+        # rebalance unlinks a superseded layout's files while stats
+        # threads may still hold the old _Layout
+        try:
+            return self.data_path.stat().st_size
+        except OSError:
+            return 0
+
+
+class _Layout:
+    """One shard-count configuration of the store: the live `_Shard`
+    objects, their locks, and per-shard compaction generations plus dict
+    sidecar hashes.  `rebalance` builds a complete replacement and swaps
+    it in with a single attribute assignment; readers/writers capture
+    ``store._layout`` once, and revalidate identity after acquiring a
+    shard lock (a mismatch means a rebalance won the race — re-route)."""
+
+    __slots__ = ("n_shards", "shards", "shard_locks", "compact_locks",
+                 "gens", "dict_shas")
+
+    def __init__(self, n_shards: int, shards: List[_Shard],
+                 gens: List[int], dict_shas: List[Optional[str]]) -> None:
+        self.n_shards = n_shards
+        self.shards = shards
+        self.gens = gens
+        self.dict_shas = dict_shas
+        self.shard_locks = [threading.RLock() for _ in range(n_shards)]
+        self.compact_locks = [threading.Lock() for _ in range(n_shards)]
 
 
 class ShardedPromptStore:
@@ -147,22 +229,34 @@ class ShardedPromptStore:
         self.root.mkdir(parents=True, exist_ok=True)
         self.compressor = compressor or PromptCompressor()
         self._meta_lock = threading.Lock()
-        self.n_shards, self._gens = self._resolve_layout(n_shards)
-        self._shard_locks = [threading.RLock() for _ in range(self.n_shards)]
-        self._compact_locks = [threading.Lock() for _ in range(self.n_shards)]
-        self._shards = [_Shard(*self._shard_paths(i, self._gens[i]))
-                        for i in range(self.n_shards)]
-        self._gc_stale_generations()
+        self._rebalance_lock = threading.Lock()
+        # files a committed rebalance still owes an unlink for (crash
+        # between its meta commit and its cleanup): carried in store.json
+        # as "sweep" so a reopen can finish the job — by-name intent
+        # beats guessing whether an old gen-0 file is ours or a backup
+        self._pending_sweep: List[str] = []
+        n, gens, dict_shas = self._resolve_layout(n_shards)
+        shards = [_Shard(*self._shard_paths(i, gens[i], n)) for i in range(n)]
+        self._layout = _Layout(n, shards, gens, dict_shas)
+        self._load_dict_sidecars()
+        self._gc_stale_files()
         self._index_lock = threading.RLock()
         self._index: Dict[str, dict] = {}
         self._next_seq = 0
         self._load_index()
 
+    @property
+    def n_shards(self) -> int:
+        return self._layout.n_shards
+
     # -- layout ---------------------------------------------------------------
 
-    def _resolve_layout(self, requested: Optional[int]) -> Tuple[int, List[int]]:
+    def _resolve_layout(
+            self, requested: Optional[int]
+    ) -> Tuple[int, List[int], List[Optional[str]]]:
         """Existing layout always wins; `n_shards` only shapes new stores.
-        Returns (n_shards, per-shard compaction generations)."""
+        Returns (n_shards, per-shard compaction generations, per-shard
+        dict sidecar sha256s)."""
         meta_path = self.root / _META_NAME
         if meta_path.exists():
             meta = json.loads(meta_path.read_text())
@@ -170,22 +264,33 @@ class ShardedPromptStore:
             gens = [int(g) for g in meta.get("gens", [0] * n)]
             if len(gens) != n:
                 raise ValueError(f"corrupt store meta: {len(gens)} gens for {n} shards")
-            return n, gens
+            dicts = list(meta.get("dicts", [None] * n))
+            if len(dicts) != n:
+                raise ValueError(f"corrupt store meta: {len(dicts)} dicts for {n} shards")
+            self._pending_sweep = [str(s) for s in meta.get("sweep", [])]
+            return n, gens, dicts
         if (self.root / "data.bin").exists():
-            return 1, [0]  # legacy single-file store, predates store.json
+            return 1, [0], [None]  # legacy single-file store, predates store.json
         n = self.DEFAULT_SHARDS if requested is None else int(requested)
         if n < 1:
             raise ValueError("n_shards must be >= 1")
         meta_path.write_text(
             json.dumps({"version": 1, "n_shards": n, "gens": [0] * n}) + "\n")
-        return n, [0] * n
+        return n, [0] * n, [None] * n
 
     def _write_meta(self) -> None:
         """Atomic meta publish (temp file + os.replace): the commit point
-        of a compaction swap.  Caller holds the shard lock of the swapped
-        shard; `_meta_lock` serializes swaps of different shards."""
+        of a compaction swap or a rebalance.  Caller holds the shard
+        lock(s) of the swapped shard(s); `_meta_lock` serializes swaps of
+        different shards."""
         with self._meta_lock:
-            doc = {"version": 1, "n_shards": self.n_shards, "gens": list(self._gens)}
+            lay = self._layout
+            doc = {"version": 1, "n_shards": lay.n_shards,
+                   "gens": list(lay.gens)}
+            if any(lay.dict_shas):
+                doc["dicts"] = list(lay.dict_shas)
+            if self._pending_sweep:
+                doc["sweep"] = list(self._pending_sweep)
             tmp = self.root / (".{}.tmp".format(_META_NAME))
             with open(tmp, "w") as f:
                 f.write(json.dumps(doc) + "\n")
@@ -193,8 +298,10 @@ class ShardedPromptStore:
                 os.fsync(f.fileno())
             os.replace(tmp, self.root / _META_NAME)
 
-    def _shard_paths(self, i: int, gen: int) -> Tuple[Path, Path]:
-        if self.n_shards == 1:
+    def _shard_paths(self, i: int, gen: int,
+                     n_shards: Optional[int] = None) -> Tuple[Path, Path]:
+        n = self._layout.n_shards if n_shards is None else n_shards
+        if n == 1:
             if gen == 0:
                 return self.root / "data.bin", self.root / "index.jsonl"
             return (self.root / f"data.g{gen:04d}.bin",
@@ -205,31 +312,95 @@ class ShardedPromptStore:
         return (self.root / f"shard-{i:03d}.g{gen:04d}.bin",
                 self.root / f"shard-{i:03d}.g{gen:04d}.idx.jsonl")
 
-    def _gc_stale_generations(self) -> None:
-        """Drop shard files that are not the meta-committed generation:
-        leftovers of a compaction that crashed either before its meta
-        commit (orphaned higher gen) or after it (stale lower gen).
-        Either way the committed generation is fully intact, so this is
-        pure garbage collection."""
-        for i in range(self.n_shards):
-            current = set(self._shard_paths(i, self._gens[i]))
-            if self.n_shards == 1:
-                patterns = ("data.bin", "data.g*.bin",
-                            "index.jsonl", "index.g*.jsonl")
-            else:
-                # exact stem + explicit ".g*" generation patterns: a bare
-                # "shard-{i:03d}*" prefix would swallow 4-digit shard names
-                # (shard-100* matches shard-1000.bin) once n_shards > 1000
-                patterns = (f"shard-{i:03d}.bin", f"shard-{i:03d}.g*.bin",
-                            f"shard-{i:03d}.idx.jsonl",
-                            f"shard-{i:03d}.g*.idx.jsonl")
-            for pat in patterns:
-                for path in self.root.glob(pat):
-                    if path not in current:
-                        try:
-                            path.unlink()
-                        except OSError:  # pragma: no cover - best effort
-                            pass
+    def _dict_path(self, i: int, gen: int,
+                   n_shards: Optional[int] = None) -> Path:
+        """The dictionary sidecar of shard `i` at generation `gen`."""
+        n = self._layout.n_shards if n_shards is None else n_shards
+        if n == 1:
+            return self.root / ("data.dict" if gen == 0
+                                else f"data.g{gen:04d}.dict")
+        return self.root / (f"shard-{i:03d}.dict" if gen == 0
+                            else f"shard-{i:03d}.g{gen:04d}.dict")
+
+    def _load_dict_sidecars(self) -> None:
+        """Verify and register every meta-referenced dictionary sidecar.
+        A missing or bit-flipped sidecar makes its shard's dict frames
+        undecodable, so the open path fails loudly instead of deferring
+        the error to some later get()."""
+        lay = self._layout
+        for i, sha in enumerate(lay.dict_shas):
+            if not sha:
+                continue
+            path = self._dict_path(i, lay.gens[i], lay.n_shards)
+            if not path.exists():
+                raise ValueError(
+                    f"corrupt store: dict sidecar {path.name} referenced by "
+                    "store.json is missing")
+            blob = path.read_bytes()
+            if hashlib.sha256(blob).hexdigest() != sha:
+                raise ValueError(
+                    f"corrupt store: dict sidecar {path.name} sha256 mismatch")
+            self.compressor.register_dictionary(blob)
+
+    def _gc_stale_files(self) -> None:
+        """Drop store-owned files that are not part of the meta-committed
+        layout: leftovers of a compaction or rebalance that crashed either
+        before its meta commit (orphaned higher generation / different
+        shard count) or after it (stale lower generation).  Either way the
+        committed layout is fully intact, so this is pure garbage
+        collection.
+
+        Scope is deliberately conservative: generation-suffixed names
+        (``.gNNNN``) are only ever written by our swap/rebalance and are
+        always collectible; bare gen-0 names are swept only when they
+        belong to the CURRENT layout's naming family (a stale
+        ``shard-001.bin`` under a compacted 2-shard store), because a
+        gen-0 file of a *different* family — say a legacy ``data.bin``
+        sitting in a multi-shard root — may be a foreign backup, not ours
+        to delete.  Non-canonical spellings (``shard-0001.bin``) are
+        never touched — see `_canonical_owned`.  The one case naming
+        cannot decide — gen-0 files of shards a committed rebalance
+        dropped — is covered by the meta's explicit ``sweep`` list, which
+        names the old layout's files until the cleanup is finished."""
+        lay = self._layout
+        keep = set()
+        for i in range(lay.n_shards):
+            data, idx = self._shard_paths(i, lay.gens[i], lay.n_shards)
+            keep.update((data.name, idx.name))
+            if lay.dict_shas[i]:
+                keep.add(self._dict_path(i, lay.gens[i], lay.n_shards).name)
+        if self._pending_sweep:
+            # finish a crashed rebalance's cleanup: these names are
+            # declared ours by the committed meta, no guessing needed
+            # (they can never name current-layout files — generations only
+            # grow — but keep is honored as belt and braces)
+            for name in self._pending_sweep:
+                if name in keep:  # pragma: no cover - defensive only
+                    continue
+                try:
+                    (self.root / name).unlink()
+                except OSError:
+                    pass
+            self._pending_sweep = []
+            self._write_meta()
+        for path in self.root.iterdir():
+            name = path.name
+            if name in keep or not _canonical_owned(name):
+                continue
+            m = _OWNED_FILE_RE.match(name)
+            has_gen = any(m.group(g) is not None
+                          for g in ("sgen", "dgen", "igen"))
+            if not has_gen:
+                sid = m.group("sid")
+                current_family = (sid is not None and lay.n_shards > 1
+                                  and int(sid) < lay.n_shards) or (
+                                      sid is None and lay.n_shards == 1)
+                if not current_family:
+                    continue  # gen-0 file of a foreign family: not ours
+            try:
+                path.unlink()
+            except OSError:  # pragma: no cover - best effort
+                pass
         tmp = self.root / (".{}.tmp".format(_META_NAME))
         if tmp.exists():
             try:
@@ -237,8 +408,9 @@ class ShardedPromptStore:
             except OSError:  # pragma: no cover
                 pass
 
-    def _shard_of(self, key: str) -> int:
-        return int(key[:4], 16) % self.n_shards
+    def _shard_of(self, key: str, n_shards: Optional[int] = None) -> int:
+        n = self._layout.n_shards if n_shards is None else n_shards
+        return int(key[:4], 16) % n
 
     def _load_index(self) -> None:
         """Rebuild the in-memory index in global put order.
@@ -249,7 +421,7 @@ class ShardedPromptStore:
         Legacy single-file records predate `seq`; their file order *is*
         put order, so they sort by position."""
         records: List[dict] = []
-        for shard in self._shards:
+        for shard in self._layout.shards:
             for pos, rec in enumerate(shard.load_index()):
                 rec.setdefault("seq", pos)
                 records.append(rec)
@@ -337,26 +509,40 @@ class ShardedPromptStore:
         """Stage 2 of a group commit: durably append one shard's planned
         entries (data fsync, then index publish fsync) and publish them to
         the in-memory index.  Thread-safe; different shards commit in
-        parallel under their own locks."""
-        if not entries:
-            return []
-        with self._shard_locks[shard_id]:
-            shard = self._shards[shard_id]
-            offsets = shard.append([e["blob"] for e in entries])
-            records = [
-                {
-                    "key": e["key"],
-                    "seq": e["seq"],
-                    "offset": off,
-                    "length": len(e["blob"]),
-                    "method": e["method"],
-                    "n_chars": e["n_chars"],
-                }
-                for e, off in zip(entries, offsets)
-            ]
-            shard.publish(records)
-            self._publish_index(records)
-        return records
+        parallel under their own locks.
+
+        `shard_id` is the routing the *planner* computed; if a rebalance
+        swapped the layout in between (or mid-wait on the old layout's
+        lock), the entries are re-grouped under the current routing and
+        committed there — a planned write is never lost and never lands
+        in a shard its key no longer routes to."""
+        out: List[dict] = []
+        pending: List[Tuple[int, List[dict]]] = [(shard_id, list(entries))]
+        while pending:
+            sid, group = pending.pop()
+            if not group:
+                continue
+            lay = self._layout
+            if sid >= lay.n_shards or any(
+                    self._shard_of(e["key"], lay.n_shards) != sid
+                    for e in group):
+                regroup: Dict[int, List[dict]] = {}
+                for e in group:
+                    regroup.setdefault(
+                        self._shard_of(e["key"], lay.n_shards), []).append(e)
+                pending.extend(regroup.items())
+                continue
+            with lay.shard_locks[sid]:
+                if self._layout is not lay:
+                    pending.append((sid, group))  # raced a rebalance: retry
+                    continue
+                shard = lay.shards[sid]
+                records = _index_records(
+                    group, shard.append([e["blob"] for e in group]))
+                shard.publish(records)
+                self._publish_index(records)
+                out.extend(records)
+        return out
 
     def _publish_index(self, records: Sequence[dict]) -> None:
         """Install committed records in the in-memory index.  A racing
@@ -371,13 +557,19 @@ class ShardedPromptStore:
     # -- reads ----------------------------------------------------------------
 
     def _read_blob(self, key: str) -> bytes:
-        sid = self._shard_of(key)
         # record lookup and file read are atomic w.r.t. a compaction swap
-        # (which retargets offsets and the backing file together)
-        with self._shard_locks[sid]:
-            with self._index_lock:
-                rec = self._index[key]
-            return self._shards[sid].read(rec["offset"], rec["length"])
+        # (which retargets offsets and the backing file together) and a
+        # rebalance (whose layout swap invalidates the captured _Layout —
+        # retry re-routes against the new shard count)
+        while True:
+            lay = self._layout
+            sid = self._shard_of(key, lay.n_shards)
+            with lay.shard_locks[sid]:
+                if self._layout is not lay:
+                    continue
+                with self._index_lock:
+                    rec = self._index[key]
+                return lay.shards[sid].read(rec["offset"], rec["length"])
 
     def get(self, key: str, verify: bool = True) -> str:
         text = self.compressor.decompress(self._read_blob(key))
@@ -411,31 +603,37 @@ class ShardedPromptStore:
     def compaction_lock(self, shard_id: int) -> threading.Lock:
         """Mutex a compactor must hold while rebuilding `shard_id` (only
         one rebuild per shard at a time; writers/readers are *not* blocked
-        by it — they synchronize on the shard lock during the swap)."""
-        return self._compact_locks[shard_id]
+        by it — they synchronize on the shard lock during the swap).
+        After acquiring, the caller must confirm the lock is still the
+        current layout's (`store.compaction_lock(i) is lock`) — a
+        rebalance replaces the lock table."""
+        return self._layout.compact_locks[shard_id]
 
     def shard_records(self, shard_id: int) -> List[dict]:
         """Snapshot of the live records routed to `shard_id`, seq order."""
+        lay = self._layout
         with self._index_lock:
             recs = [dict(r) for r in self._index.values()
-                    if self._shard_of(r["key"]) == shard_id]
+                    if self._shard_of(r["key"], lay.n_shards) == shard_id]
         recs.sort(key=lambda r: r["seq"])
         return recs
 
     def read_records(self, shard_id: int, recs: Sequence[dict]) -> List[bytes]:
         """Read the blobs for a `shard_records` snapshot."""
-        with self._shard_locks[shard_id]:
-            shard = self._shards[shard_id]
+        lay = self._layout
+        with lay.shard_locks[shard_id]:
+            shard = lay.shards[shard_id]
             return [shard.read(r["offset"], r["length"]) for r in recs]
 
     def shard_stats(self, shard_id: int) -> dict:
         """Live/dead byte accounting for one shard (compaction trigger)."""
-        with self._shard_locks[shard_id]:
-            file_bytes = self._shards[shard_id].data_size()
-            gen = self._gens[shard_id]
+        lay = self._layout
+        with lay.shard_locks[shard_id]:
+            file_bytes = lay.shards[shard_id].data_size()
+            gen = lay.gens[shard_id]
         with self._index_lock:
             live = [r["length"] for r in self._index.values()
-                    if self._shard_of(r["key"]) == shard_id]
+                    if self._shard_of(r["key"], lay.n_shards) == shard_id]
         live_bytes = sum(live)
         return {
             "shard_id": shard_id,
@@ -450,18 +648,19 @@ class ShardedPromptStore:
         """`shard_stats` for every shard in ONE index pass — the
         background compactor's scan loop; per-shard calls would revisit
         the whole index n_shards times."""
-        n_records = [0] * self.n_shards
-        live_bytes = [0] * self.n_shards
+        lay = self._layout
+        n_records = [0] * lay.n_shards
+        live_bytes = [0] * lay.n_shards
         with self._index_lock:
             for r in self._index.values():
-                sid = self._shard_of(r["key"])
+                sid = self._shard_of(r["key"], lay.n_shards)
                 n_records[sid] += 1
                 live_bytes[sid] += r["length"]
         out = []
-        for i in range(self.n_shards):
-            with self._shard_locks[i]:
-                file_bytes = self._shards[i].data_size()
-                gen = self._gens[i]
+        for i in range(lay.n_shards):
+            with lay.shard_locks[i]:
+                file_bytes = lay.shards[i].data_size()
+                gen = lay.gens[i]
             out.append({
                 "shard_id": i,
                 "gen": gen,
@@ -472,62 +671,72 @@ class ShardedPromptStore:
             })
         return out
 
-    def swap_shard(self, shard_id: int, entries: List[dict]) -> dict:
+    def swap_shard(self, shard_id: int, entries: List[dict],
+                   dictionary: Optional[bytes] = None) -> dict:
         """Atomically replace a shard's contents with `entries` (the
         compactor's rebuilt record set: key/seq/method/n_chars/blob).
         Caller holds `compaction_lock(shard_id)`, which is what makes the
-        unlocked generation bump in phase 1 safe.
+        unlocked generation bump in phase 1 safe (and excludes a
+        concurrent rebalance, which takes every compaction lock).
 
         Protocol (reuses the append-then-publish discipline):
         1. WITHOUT the shard lock — readers and writers keep going against
            the live generation — the new generation's data file is written
            + fsynced, then its index published + fsynced, at fresh
-           filenames (`shard-XXX.gNNNN.*`);
+           filenames (`shard-XXX.gNNNN.*`); if the rebuild was re-encoded
+           against a trained `dictionary`, its sidecar
+           (`shard-XXX.gNNNN.dict`) is written + fsynced alongside and
+           registered with the compressor before any reader can see a
+           frame that needs it;
         2. under the shard lock, catch up: any record committed after the
            compactor's snapshot is read from the live generation and
            appended to the rebuild (same append/publish discipline), so
            concurrent ingest is never lost;
-        3. the meta file's `gens` entry is replaced atomically
-           (`os.replace`) — THE commit point: a crash on either side of it
-           reopens one fully intact generation, and `_gc_stale_generations`
-           sweeps the loser's files on the next open;
+        3. the meta file's `gens` (and `dicts`) entries are replaced
+           atomically (`os.replace`) — THE commit point: a crash on either
+           side of it reopens one fully intact generation, and
+           `_gc_stale_files` sweeps the loser's files (sidecar included)
+           on the next open;
         4. the in-memory shard object and record offsets swap in, and the
            old generation's files are unlinked.
 
-        Returns {bytes_before, bytes_after, n_records, n_caught_up}.
+        Returns {bytes_before, bytes_after, n_records, n_caught_up};
+        bytes_after includes the new sidecar, so callers comparing totals
+        charge the dictionary its own weight.
         """
-        def _records_for(new_entries: Sequence[dict],
-                         offsets: Sequence[int]) -> List[dict]:
-            return [
-                {
-                    "key": e["key"],
-                    "seq": e["seq"],
-                    "offset": off,
-                    "length": len(e["blob"]),
-                    "method": e["method"],
-                    "n_chars": e["n_chars"],
-                }
-                for e, off in zip(new_entries, offsets)
-            ]
-
+        lay = self._layout
         entries = sorted(entries, key=lambda e: e["seq"])
         planned_seqs = {e["seq"] for e in entries}
         # phase 1: bulk rewrite, shard stays fully live
-        gen = self._gens[shard_id] + 1
-        new_shard = _Shard(*self._shard_paths(shard_id, gen))
-        for path in (new_shard.data_path, new_shard.index_path):
+        gen = lay.gens[shard_id] + 1
+        new_shard = _Shard(*self._shard_paths(shard_id, gen, lay.n_shards))
+        new_dict_path = self._dict_path(shard_id, gen, lay.n_shards)
+        for path in (new_shard.data_path, new_shard.index_path, new_dict_path):
             if path.exists():  # leftover from a crashed compaction
                 path.unlink()
-        records = _records_for(
+        dict_sha: Optional[str] = None
+        if dictionary:
+            with open(new_dict_path, "wb") as f:
+                f.write(dictionary)
+                f.flush()
+                os.fsync(f.fileno())
+            dict_sha = hashlib.sha256(dictionary).hexdigest()
+            self.compressor.register_dictionary(dictionary)
+        records = _index_records(
             entries, new_shard.append([e["blob"] for e in entries]))
         new_shard.publish(records)
         # phases 2-4: the only window readers/writers wait on
-        with self._shard_locks[shard_id]:
-            old_shard = self._shards[shard_id]
+        with lay.shard_locks[shard_id]:
+            old_shard = lay.shards[shard_id]
+            old_dict_path = (self._dict_path(shard_id, lay.gens[shard_id],
+                                             lay.n_shards)
+                             if lay.dict_shas[shard_id] else None)
             bytes_before = old_shard.data_size()
+            if old_dict_path is not None and old_dict_path.exists():
+                bytes_before += old_dict_path.stat().st_size
             with self._index_lock:
                 current = [dict(r) for r in self._index.values()
-                           if self._shard_of(r["key"]) == shard_id]
+                           if self._shard_of(r["key"], lay.n_shards) == shard_id]
             tail = sorted((r for r in current if r["seq"] not in planned_seqs),
                           key=lambda r: r["seq"])
             if tail:
@@ -541,17 +750,24 @@ class ShardedPromptStore:
                     }
                     for r in tail
                 ]
-                records += _records_for(
+                records += _index_records(
                     tail_entries,
                     new_shard.append([e["blob"] for e in tail_entries]))
                 new_shard.publish(records[-len(tail_entries):])
-            self._gens[shard_id] = gen
+            lay.gens[shard_id] = gen
+            lay.dict_shas[shard_id] = dict_sha
             self._write_meta()  # atomic commit point
-            self._shards[shard_id] = new_shard
+            lay.shards[shard_id] = new_shard
             self._publish_index(records)
             bytes_after = new_shard.data_size()
-            for path in (old_shard.data_path, old_shard.index_path):
-                if path != new_shard.data_path and path != new_shard.index_path:
+            if dictionary:
+                bytes_after += len(dictionary)
+            stale = [old_shard.data_path, old_shard.index_path]
+            if old_dict_path is not None:
+                stale.append(old_dict_path)
+            for path in stale:
+                if path not in (new_shard.data_path, new_shard.index_path,
+                                new_dict_path):
                     try:
                         path.unlink()
                     except OSError:  # pragma: no cover - best effort
@@ -559,30 +775,220 @@ class ShardedPromptStore:
         return {"bytes_before": bytes_before, "bytes_after": bytes_after,
                 "n_records": len(records), "n_caught_up": len(tail)}
 
+    # -- rebalancing -----------------------------------------------------------
+
+    def _strip_dict_frames(self, entries: List[dict]) -> int:
+        """Re-encode any dictionary-compressed blobs in `entries` as plain
+        (v1) frames, preserving each record's method.  Rebalancing mixes
+        records from many source shards into each target shard, so the
+        per-shard-generation sidecar model cannot follow them — the
+        rebalanced layout carries no dictionary dependencies and the next
+        compaction pass retrains per new shard.  Returns the re-encode
+        count.  Unparseable blobs (preserved forensics from an
+        integrity-failed shard) are moved bit-for-bit."""
+        by_method: Dict[str, List[int]] = {}
+        for i, e in enumerate(entries):
+            try:
+                if parse_frame(e["blob"]).dict_fp is not None:
+                    by_method.setdefault(e["method"], []).append(i)
+            except ValueError:
+                continue
+        n = 0
+        for method, members in by_method.items():
+            texts = self.compressor.decompress_batch(
+                [entries[i]["blob"] for i in members])
+            blobs = self.compressor.compress_batch(texts, method)
+            for i, blob in zip(members, blobs):
+                entries[i]["blob"] = blob
+                n += 1
+        return n
+
+    def rebalance(self, n_shards: int) -> dict:
+        """Re-partition every key across `n_shards` segments, online.
+
+        The heavy rewrite (phase 1) runs with no shard lock held — reads
+        and writes keep flowing against the old layout; the swap window
+        (phase 2) takes every old shard lock, catches up records committed
+        since the snapshot, publishes the new ``store.json`` atomically
+        (THE commit point, same as a compaction swap), and installs the
+        new `_Layout` in a single assignment.  Writers that planned under
+        the old layout re-route in `commit_batch`; readers retry their
+        layout capture in `_read_blob`.  All new shards start at
+        ``max(old gens) + 1`` so filenames can never collide with any
+        live generation, and a crash on either side of the meta replace
+        reopens one fully intact layout (`_gc_stale_files` sweeps the
+        loser, orphaned ``.dict`` sidecars included).
+
+        Returns {n_shards_before, n_shards_after, n_records, n_caught_up,
+        n_reencoded, bytes_before, bytes_after, wall_s}.
+        """
+        n_new = int(n_shards)
+        if n_new < 1:
+            raise ValueError("n_shards must be >= 1")
+        t0 = time.perf_counter()
+        with self._rebalance_lock:
+            old = self._layout
+            if n_new == old.n_shards:
+                size = sum(s.data_size() for s in old.shards)
+                return {"n_shards_before": old.n_shards,
+                        "n_shards_after": n_new, "n_records": len(self),
+                        "n_caught_up": 0, "n_reencoded": 0,
+                        "bytes_before": size, "bytes_after": size,
+                        "wall_s": time.perf_counter() - t0}
+            # serialize against every in-flight compaction: swap_shard's
+            # phase-1 unlocked rewrite must never interleave a layout swap
+            acquired: List[threading.Lock] = []
+            try:
+                for lock in old.compact_locks:
+                    lock.acquire()
+                    acquired.append(lock)
+                result = self._rebalance_locked(old, n_new)
+            finally:
+                for lock in reversed(acquired):
+                    lock.release()
+        result["wall_s"] = time.perf_counter() - t0
+        return result
+
+    def _rebalance_locked(self, old: "_Layout", n_new: int) -> dict:
+        gen = max(old.gens) + 1
+        # phase 1: snapshot + bulk rewrite; the store stays fully live
+        snap_entries: List[dict] = []
+        for sid in range(old.n_shards):
+            recs = self.shard_records(sid)
+            blobs = self.read_records(sid, recs)
+            snap_entries += [
+                {"key": r["key"], "seq": r["seq"], "method": r["method"],
+                 "n_chars": r["n_chars"], "blob": b}
+                for r, b in zip(recs, blobs)
+            ]
+        planned_seqs = {e["seq"] for e in snap_entries}
+        n_reencoded = self._strip_dict_frames(snap_entries)
+        parts: Dict[int, List[dict]] = {}
+        for e in snap_entries:
+            parts.setdefault(self._shard_of(e["key"], n_new), []).append(e)
+        new_shards = [_Shard(*self._shard_paths(i, gen, n_new))
+                      for i in range(n_new)]
+        new_records: Dict[int, List[dict]] = {}
+        for i, shard in enumerate(new_shards):
+            for path in (shard.data_path, shard.index_path,
+                         self._dict_path(i, gen, n_new)):
+                if path.exists():  # leftover from a crashed rebalance
+                    path.unlink()
+            entries = sorted(parts.get(i, []), key=lambda e: e["seq"])
+            if entries:
+                recs = _index_records(
+                    entries, shard.append([e["blob"] for e in entries]))
+                shard.publish(recs)
+                new_records[i] = recs
+        bytes_before = sum(s.data_size() for s in old.shards)
+        # phase 2: the only window readers/writers wait on
+        for lock in old.shard_locks:
+            lock.acquire()
+        try:
+            with self._index_lock:
+                tail = sorted((dict(r) for r in self._index.values()
+                               if r["seq"] not in planned_seqs),
+                              key=lambda r: r["seq"])
+                n_caught_up = len(tail)
+                if tail:
+                    tail_entries = [
+                        {"key": r["key"], "seq": r["seq"],
+                         "method": r["method"], "n_chars": r["n_chars"],
+                         "blob": old.shards[
+                             self._shard_of(r["key"], old.n_shards)
+                         ].read(r["offset"], r["length"])}
+                        for r in tail
+                    ]
+                    self._strip_dict_frames(tail_entries)
+                    tail_parts: Dict[int, List[dict]] = {}
+                    for e in tail_entries:
+                        tail_parts.setdefault(
+                            self._shard_of(e["key"], n_new), []).append(e)
+                    for i, entries in tail_parts.items():
+                        shard = new_shards[i]
+                        recs = _index_records(
+                            entries,
+                            shard.append([e["blob"] for e in entries]))
+                        shard.publish(recs)
+                        new_records.setdefault(i, []).extend(recs)
+                old_files: List[str] = []
+                for i in range(old.n_shards):
+                    old_files += [p.name for p in self._shard_paths(
+                        i, old.gens[i], old.n_shards)]
+                    if old.dict_shas[i]:
+                        old_files.append(self._dict_path(
+                            i, old.gens[i], old.n_shards).name)
+                new_lay = _Layout(n_new, new_shards, [gen] * n_new,
+                                  [None] * n_new)
+                self._layout = new_lay
+                # the committed meta carries the old layout's files as an
+                # explicit sweep list: if we die before the unlinks below,
+                # the next open finishes the cleanup by name (gen-0 names
+                # are ambiguous with foreign backups, so GC never guesses)
+                self._pending_sweep = old_files
+                self._write_meta()  # atomic commit point
+                for recs in new_records.values():
+                    for rec in recs:
+                        self._index[rec["key"]] = rec
+                bytes_after = sum(s.data_size() for s in new_shards)
+        finally:
+            for lock in reversed(old.shard_locks):
+                lock.release()
+        # Unlink exactly the OLD layout's files (dict sidecars included).
+        # NOT the full _gc_stale_files sweep: a compactor on the freshly
+        # installed layout may already be writing its next generation's
+        # files phase-1-unlocked, and a sweep keyed on the current gens
+        # would delete them mid-write.  Old-layout names can never collide
+        # with files any new-layout writer produces (their generations are
+        # all <= max(old gens) < gen).  Once done, drop the sweep list
+        # from the meta so a later reopen doesn't re-unlink names a future
+        # layout might legitimately reuse.
+        for name in list(self._pending_sweep):
+            try:
+                (self.root / name).unlink()
+            except OSError:  # pragma: no cover - best effort
+                pass
+        self._pending_sweep = []
+        self._write_meta()
+        return {"n_shards_before": old.n_shards, "n_shards_after": n_new,
+                "n_records": sum(len(r) for r in new_records.values()),
+                "n_caught_up": n_caught_up, "n_reencoded": n_reencoded,
+                "bytes_before": bytes_before, "bytes_after": bytes_after}
+
     # -- ops ------------------------------------------------------------------
 
     def stats(self) -> dict:
+        lay = self._layout
         with self._index_lock:
             recs = list(self._index.values())
         stored = sum(r["length"] for r in recs)
         original = sum(r["n_chars"] for r in recs)
-        per_shard = [0] * self.n_shards
+        per_shard = [0] * lay.n_shards
         for r in recs:
-            per_shard[self._shard_of(r["key"])] += 1
+            per_shard[self._shard_of(r["key"], lay.n_shards)] += 1
         file_bytes = 0
-        for i in range(self.n_shards):
-            with self._shard_locks[i]:
-                file_bytes += self._shards[i].data_size()
+        dict_bytes = 0
+        for i in range(lay.n_shards):
+            with lay.shard_locks[i]:
+                file_bytes += lay.shards[i].data_size()
+                if lay.dict_shas[i]:
+                    path = self._dict_path(i, lay.gens[i], lay.n_shards)
+                    try:  # same vanish window data_size() tolerates
+                        dict_bytes += path.stat().st_size
+                    except OSError:
+                        pass
         return {
             "n_prompts": len(recs),
-            "n_shards": self.n_shards,
+            "n_shards": lay.n_shards,
             "prompts_per_shard": per_shard,
             "stored_bytes": stored,
             "original_chars": original,
             "space_savings_pct": 100.0 * (1 - stored / original) if original else 0.0,
             "file_bytes": file_bytes,
+            "dict_bytes": dict_bytes,
             "dead_bytes": max(file_bytes - stored, 0),
-            "gens": list(self._gens),
+            "gens": list(lay.gens),
+            "dicts": sum(1 for s in lay.dict_shas if s),
         }
 
     def verify_all(self) -> dict:

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import bz2 as _bz2
 import lzma as _lzma
+import threading as _threading
 import zlib as _zlib
 from typing import Callable, Dict, Optional, Tuple
 
@@ -141,3 +142,174 @@ def decompress_bytes(data: bytes, backend: str = "zstd") -> bytes:
     except KeyError:
         raise ValueError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}") from None
     return fn(data)
+
+
+# -- trained dictionaries -------------------------------------------------
+#
+# A dictionary trained on a corpus sample recovers the cross-record
+# redundancy that per-record compression cannot see (paper §8.4.2 #2) —
+# exactly where short prompts lose the most.  ``train_dictionary_bytes``
+# produces the dictionary blob; ``compress_bytes_dict`` /
+# ``decompress_bytes_dict`` apply it.  Both sides must hold the identical
+# blob — the codec layer threads a fingerprint through frame headers.
+
+DEFAULT_DICT_SIZE = 16384
+_TRAIN_WINDOW = 16   # fallback sampler: fragment length ...
+_TRAIN_STRIDE = 4    # ... sampled at this stride
+
+
+def _train_dict_fallback(samples, dict_size: int) -> bytes:
+    """From-scratch frequent-substring sampler for the repro-lzr path:
+    count fixed-width fragments across the samples, keep the repeated
+    ones, and concatenate them most-frequent-LAST (closest to the
+    payload, so LZ offsets into the dictionary stay short — the same
+    convention zstd's trainer uses)."""
+    from collections import Counter
+
+    counts: Counter = Counter()
+    for s in samples:
+        for i in range(0, max(len(s) - _TRAIN_WINDOW + 1, 0), _TRAIN_STRIDE):
+            counts[s[i : i + _TRAIN_WINDOW]] += 1
+    frags = [f for f, c in counts.most_common() if c >= 2]
+    picked = []
+    seen = bytearray()
+    size = 0
+    for f in frags:
+        if f in seen:  # already covered by an earlier fragment
+            continue
+        picked.append(f)
+        seen += f
+        size += len(f)
+        if size >= dict_size:
+            break
+    picked.reverse()  # most frequent last
+    return bytes(b"".join(picked)[-dict_size:])
+
+
+def train_dictionary_bytes(samples, dict_size: int = DEFAULT_DICT_SIZE) -> bytes:
+    """Train a dictionary over ``samples`` (sequence of bytes).  Returns
+    ``b""`` when no useful dictionary exists (empty/tiny corpora) — the
+    caller should then compress without one.  Uses zstd's trainer when
+    the C library is installed, the from-scratch sampler otherwise."""
+    samples = [bytes(s) for s in samples if s]
+    if not samples or dict_size <= 0:
+        return b""
+    if HAVE_ZSTD:
+        try:
+            return _zstd.train_dictionary(dict_size, samples).as_bytes()
+        except Exception:
+            # corpora too small/uniform for the trainer: fall back to the
+            # sampler as a raw-content dictionary (zstd accepts those)
+            pass
+    return _train_dict_fallback(samples, dict_size)
+
+
+# ZstdCompressionDict digestion is the expensive step of dictionary
+# (de)compression, and the per-record batch paths would otherwise pay it
+# for every frame — memoize the digested object per dictionary bytes.
+# (Compressor/decompressor objects are not shared: they are cheap given a
+# digested dict and not safe for concurrent use.)
+_ZSTD_CDICTS: Dict[bytes, object] = {}
+_ZSTD_CDICTS_MAX = 8
+_ZSTD_CDICTS_LOCK = _threading.Lock()
+
+
+def _zstd_cdict(dictionary: bytes):
+    with _ZSTD_CDICTS_LOCK:
+        cdict = _ZSTD_CDICTS.get(dictionary)
+        if cdict is None:
+            cdict = _zstd.ZstdCompressionDict(dictionary)
+            while len(_ZSTD_CDICTS) >= _ZSTD_CDICTS_MAX:
+                _ZSTD_CDICTS.pop(next(iter(_ZSTD_CDICTS)))
+            _ZSTD_CDICTS[dictionary] = cdict
+        return cdict
+
+
+def _zstd_compress_dict(data: bytes, dictionary: bytes,
+                        level: int = DEFAULT_LEVEL) -> bytes:
+    if not HAVE_ZSTD:
+        return _repro_lzr_compress_dict(data, dictionary, level)
+    return _zstd.ZstdCompressor(
+        level=level, dict_data=_zstd_cdict(dictionary)).compress(data)
+
+
+def _zstd_decompress_dict(data: bytes, dictionary: bytes) -> bytes:
+    # same frame-magic sniffing as the plain path: fallback-written
+    # payloads stay readable after zstandard gets installed, and
+    # real-zstd payloads fail pointedly instead of decoding garbage
+    if data[:4] == _ZSTD_MAGIC:
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "payload was written by the real zstd library; install "
+                "zstandard (requirements-dev.txt) to read it")
+        return _zstd.ZstdDecompressor(
+            dict_data=_zstd_cdict(dictionary)).decompress(data)
+    return _repro_lzr_decompress_dict(data, dictionary)
+
+
+def _repro_lz_compress_dict(data: bytes, dictionary: bytes, level: int = 0) -> bytes:
+    return lz_compress(data, prefix=dictionary)
+
+
+def _repro_lz_decompress_dict(data: bytes, dictionary: bytes) -> bytes:
+    return lz_decompress(data, prefix=dictionary)
+
+
+def _repro_lzr_compress_dict(data: bytes, dictionary: bytes, level: int = 0) -> bytes:
+    # Dictionary mode exists for payloads too short to build their own
+    # window — exactly where the rANS stage's freq-table header can cost
+    # more than it saves.  One flag byte picks per record: 0x01 = rANS
+    # over the LZ stream, 0x00 = raw LZ stream.  (New wire format, so no
+    # compatibility constraint; plain repro-lzr frames are unchanged.)
+    lz = lz_compress(data, prefix=dictionary)
+    r = rans_compress_bytes(lz)
+    return b"\x01" + r if len(r) < len(lz) else b"\x00" + lz
+
+
+def _repro_lzr_decompress_dict(data: bytes, dictionary: bytes) -> bytes:
+    if not data:
+        raise ValueError("truncated repro-lzr dict payload")
+    body = data[1:]
+    lz = rans_decompress_bytes(body) if data[0] == 1 else body
+    return lz_decompress(lz, prefix=dictionary)
+
+
+def _zlib_compress_dict(data: bytes, dictionary: bytes, level: int = 9) -> bytes:
+    co = _zlib.compressobj(min(max(level, 0), 9), zdict=dictionary)
+    return co.compress(data) + co.flush()
+
+
+def _zlib_decompress_dict(data: bytes, dictionary: bytes) -> bytes:
+    return _zlib.decompressobj(zdict=dictionary).decompress(data)
+
+
+# backend -> (compress(data, dict, level), decompress(data, dict));
+# lzma/bz2 have no dictionary mode, so they are simply absent here
+DICT_BACKENDS: Dict[str, Tuple[Callable[..., bytes], Callable[[bytes, bytes], bytes]]] = {
+    "zstd": (_zstd_compress_dict, _zstd_decompress_dict),
+    "repro-lz": (_repro_lz_compress_dict, _repro_lz_decompress_dict),
+    "repro-lzr": (_repro_lzr_compress_dict, _repro_lzr_decompress_dict),
+    "zlib": (_zlib_compress_dict, _zlib_decompress_dict),
+}
+
+
+def compress_bytes_dict(data: bytes, dictionary: bytes,
+                        level: int = DEFAULT_LEVEL, backend: str = "zstd") -> bytes:
+    try:
+        fn = DICT_BACKENDS[backend][0]
+    except KeyError:
+        raise ValueError(
+            f"backend {backend!r} has no dictionary mode; "
+            f"have {sorted(DICT_BACKENDS)}") from None
+    return fn(data, dictionary, level)
+
+
+def decompress_bytes_dict(data: bytes, dictionary: bytes,
+                          backend: str = "zstd") -> bytes:
+    try:
+        fn = DICT_BACKENDS[backend][1]
+    except KeyError:
+        raise ValueError(
+            f"backend {backend!r} has no dictionary mode; "
+            f"have {sorted(DICT_BACKENDS)}") from None
+    return fn(data, dictionary)

@@ -8,7 +8,9 @@ optionally fronted by the repro.service tier.
 
 `--cache-mb` admits prompts through the serve-path token cache,
 `--ingest-async` builds the corpus store through the async ingest queue,
-and `--compact` runs a stage-reselecting compaction pass before serving.
+`--compact` runs a stage-reselecting compaction pass before serving
+(`--train-dict` lets it train and adopt per-shard dictionaries), and
+`--rebalance N` re-partitions the store across N shards online first.
 """
 
 from __future__ import annotations
@@ -40,7 +42,16 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--compact", action="store_true",
                     help="run a stage-reselecting compaction pass over every "
                          "shard before serving")
+    ap.add_argument("--train-dict", action="store_true",
+                    help="let the compaction pass train per-shard "
+                         "dictionaries and adopt them on a strict "
+                         "total-bytes win (implies --compact)")
+    ap.add_argument("--rebalance", type=int, default=0, metavar="N",
+                    help="re-partition the store across N shards online "
+                         "before serving (0 = keep the built layout)")
     args = ap.parse_args(argv)
+    if args.rebalance < 0:
+        ap.error(f"--rebalance ({args.rebalance}) must be >= 0")
     # an oversized --max-new would otherwise silently truncate the prompt
     # to an empty or negative slice in BatchServer._fill_slots
     # (prompt_tokens[:max_len - max_new - 1]) — refuse at parse time;
@@ -71,12 +82,18 @@ def main(argv=None) -> None:
         service = PromptService(store, cache_bytes=int(args.cache_mb * 2 ** 20),
                                 ingest_async=False)
         with service:
-            if args.compact:
-                for res in service.compact():
+            if args.rebalance:
+                res = service.rebalance(args.rebalance)
+                print(f"[serve] rebalanced {res['n_shards_before']} -> "
+                      f"{res['n_shards_after']} shards "
+                      f"({res['n_records']} records, {res['wall_s']:.2f}s)")
+            if args.compact or args.train_dict:
+                for res in service.compact(train_dict=args.train_dict):
                     print(f"[serve] compacted shard {res.shard_id}: "
                           f"{res.bytes_before} -> {res.bytes_after} B"
-                          + (f" (re-encoded {res.method})" if res.reencoded
-                             else ""))
+                          + (f" (re-encoded {res.method}"
+                             + (f", dict {res.dict_bytes} B" if res.used_dict
+                                else "") + ")" if res.reencoded else ""))
             server = BatchServer(params, cfg, batch_slots=args.slots,
                                  max_len=args.max_len)
             keys = service.keys()[: args.requests]

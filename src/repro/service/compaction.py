@@ -1,5 +1,6 @@
 """Per-shard background compaction: reclaim dead bytes and re-run codec
-stage selection on each shard's actual content mix.
+stage selection — now including trained-dictionary candidates — on each
+shard's actual content mix.
 
 Dead bytes accumulate from racing duplicate ingests (the async queue's
 documented dup window) and from records dropped at recovery time (torn
@@ -9,6 +10,18 @@ the shard's final content mix — the paper's own results (§5) show the
 winner flipping between zstd/token/hybrid with prompt size and content
 type, so compaction re-evaluates ALL available method pipelines over the
 shard's decompressed texts and re-encodes iff a different pipeline wins.
+
+Dictionary training rides the same pass: per-record compression cannot
+see cross-record redundancy, which is exactly where short prompts lose
+the most (paper §8.4.2 #2), so for each dict-capable method the pass
+trains a dictionary on the shard's byte-stage payloads and adds
+"method + dictionary" to the candidate set.  A dictionary candidate is
+charged its own sidecar size, and — like every re-encode — is adopted
+only on a STRICT total-bytes win; the winning dictionary is persisted by
+`swap_shard` as the new generation's `.dict` sidecar.  A shard whose
+current frames already reference a dictionary carries it (and its size)
+through a rebuild that keeps those blobs, so sidecars are never dropped
+out from under live frames.
 
 A rebuild is crash-safe end to end: blobs are read from a snapshot, the
 new generation is written to fresh filenames, records committed during
@@ -28,9 +41,14 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
+from repro.core.api import parse_frame
 from repro.core.store import ShardedPromptStore, content_key
+
+MIN_DICT_RECORDS = 4    # below this, a dictionary cannot pay for itself
+DICT_SAMPLE_CAP = 128   # train on at most this many records per shard
+MAX_DICT_BYTES = 16384
 
 
 @dataclass
@@ -43,10 +61,15 @@ class CompactionResult:
     method: Optional[str]       # pipeline the shard was re-encoded with
     reencoded: bool
     wall_s: float
+    dict_bytes: int = 0         # sidecar size of the adopted dictionary
 
     @property
     def bytes_reclaimed(self) -> int:
         return max(self.bytes_before - self.bytes_after, 0)
+
+    @property
+    def used_dict(self) -> bool:
+        return self.dict_bytes > 0
 
 
 def _candidate_methods(store: ShardedPromptStore) -> List[str]:
@@ -57,22 +80,88 @@ def _candidate_methods(store: ShardedPromptStore) -> List[str]:
     return list(METHODS)
 
 
+def _train_dicts(store: ShardedPromptStore,
+                 texts: List[str]) -> Dict[str, bytes]:
+    """One trained dictionary per dict-capable candidate method, trained
+    on the byte-stage payloads that method would actually compress (utf-8
+    text for zstd, packed token streams for hybrid)."""
+    from repro.core.zstd_backend import DICT_BACKENDS, train_dictionary_bytes
+
+    comp = store.compressor
+    if comp.backend not in DICT_BACKENDS or len(texts) < MIN_DICT_RECORDS:
+        return {}
+    out: Dict[str, bytes] = {}
+    for method in _candidate_methods(store):
+        if method == "token":  # no byte stage to apply a dictionary to
+            continue
+        payloads = comp.byte_stage_payloads(texts, method)
+        step = max(1, len(payloads) // DICT_SAMPLE_CAP)
+        sample = payloads[::step][:DICT_SAMPLE_CAP]
+        size = min(MAX_DICT_BYTES, max(512, sum(map(len, sample)) // 4))
+        d = train_dictionary_bytes(sample, size)
+        if d:
+            out[method] = d
+    return out
+
+
+def _scratch_compressor(comp):
+    """A compressor with the identical frame-relevant config but its own
+    dictionary registry (same tokenizer object, so no vocab retraining)."""
+    from repro.core.api import PromptCompressor
+
+    return PromptCompressor(tokenizer=comp.tokenizer, method=comp.method,
+                            level=comp.level, backend=comp.backend,
+                            scheme=comp.scheme)
+
+
+def _carried_dictionary(store: ShardedPromptStore,
+                        entries: List[dict]) -> Optional[bytes]:
+    """The dictionary the shard's current frames reference, if any (a
+    generation holds at most one — its own sidecar's).  A rebuild that
+    keeps these blobs must re-persist it, or they become undecodable on
+    reopen."""
+    for e in entries:
+        try:
+            fp = parse_frame(e["blob"]).dict_fp
+        except ValueError:
+            continue
+        if fp is not None:
+            return store.compressor.dictionary_for(fp)
+    return None
+
+
 def compact_shard(store: ShardedPromptStore, shard_id: int,
-                  reselect: bool = True) -> Optional[CompactionResult]:
-    """Rebuild one shard; returns None if another compactor holds it.
+                  reselect: bool = True,
+                  train_dict: bool = True) -> Optional[CompactionResult]:
+    """Rebuild one shard; returns None if another compactor holds it (or
+    a rebalance replaced the layout mid-acquire).
 
     Phases (heavy work happens with no store lock held):
     1. snapshot the live records + blobs;
     2. integrity-check every text against its content key;
     3. if `reselect` and the shard is clean: encode the texts through every
-       candidate method pipeline, pick the smallest total, and keep the
+       candidate method pipeline — plus, with `train_dict`, each
+       dict-capable method primed with a freshly trained dictionary
+       (charged its sidecar size) — pick the smallest total, and keep the
        re-encoded blobs only on a strict win;
-    4. `swap_shard` — catch-up + new generation + atomic meta commit.
+    4. `swap_shard` — catch-up + new generation (+ dict sidecar) + atomic
+       meta commit.
     """
-    lock = store.compaction_lock(shard_id)
+    try:
+        lock = store.compaction_lock(shard_id)
+    except IndexError:  # raced a shrinking rebalance
+        return None
     if not lock.acquire(blocking=False):
         return None
     try:
+        # a rebalance may have swapped the layout (and its lock table)
+        # between lookup and acquire: holding a dead layout's lock
+        # excludes nothing, so bow out
+        try:
+            if store.compaction_lock(shard_id) is not lock:
+                return None
+        except IndexError:
+            return None
         t0 = time.perf_counter()
         recs = store.shard_records(shard_id)
         blobs = store.read_records(shard_id, recs)
@@ -81,6 +170,8 @@ def compact_shard(store: ShardedPromptStore, shard_id: int,
              "n_chars": r["n_chars"], "blob": b}
             for r, b in zip(recs, blobs)
         ]
+        carry_dict = _carried_dictionary(store, entries)
+        dictionary = carry_dict  # sidecar the rebuild must persist
         chosen: Optional[str] = None
         reencoded = False
         if reselect and entries:
@@ -91,20 +182,37 @@ def compact_shard(store: ShardedPromptStore, shard_id: int,
             except Exception:
                 clean = False
             if clean:
-                current_total = sum(len(b) for b in blobs)
-                best_total = current_total
-                best_blobs: Optional[List[bytes]] = None
+                # keeping the current encoding keeps its sidecar too, so
+                # the incumbent is charged the dictionary's own size —
+                # same rule every dictionary candidate plays by
+                best_total = sum(len(b) for b in blobs) + len(carry_dict or b"")
+                best: Optional[Tuple[List[bytes], Optional[bytes]]] = None
                 for method in _candidate_methods(store):
                     new_blobs = store.compressor.compress_batch(texts, method)
                     total = sum(len(b) for b in new_blobs)
                     if total < best_total:
-                        best_total, best_blobs, chosen = total, new_blobs, method
-                if best_blobs is not None:
+                        best_total, best, chosen = total, (new_blobs, None), method
+                if train_dict:
+                    # score dictionary candidates on a throwaway compressor:
+                    # registering every loser on the live one would pin its
+                    # bytes (and a cached pipeline) for the process lifetime.
+                    # Frames depend only on the config, so the winner's blobs
+                    # are valid as-is; swap_shard registers its dictionary.
+                    scratch = _scratch_compressor(store.compressor)
+                    for method, d in _train_dicts(store, texts).items():
+                        dict_blobs = scratch.compress_batch(
+                            texts, method, dictionary=d)
+                        total = sum(len(b) for b in dict_blobs) + len(d)
+                        if total < best_total:
+                            best_total, best, chosen = (
+                                total, (dict_blobs, d), method)
+                if best is not None:
                     reencoded = True
-                    for e, b in zip(entries, best_blobs):
+                    new_blobs, dictionary = best
+                    for e, b in zip(entries, new_blobs):
                         e["blob"] = b
                         e["method"] = chosen
-        swap = store.swap_shard(shard_id, entries)
+        swap = store.swap_shard(shard_id, entries, dictionary=dictionary)
         return CompactionResult(
             shard_id=shard_id,
             n_records=swap["n_records"],
@@ -114,17 +222,21 @@ def compact_shard(store: ShardedPromptStore, shard_id: int,
             method=chosen,
             reencoded=reencoded,
             wall_s=time.perf_counter() - t0,
+            dict_bytes=len(dictionary or b""),
         )
     finally:
         lock.release()
 
 
-def compact_store(store: ShardedPromptStore,
-                  reselect: bool = True) -> List[CompactionResult]:
+def compact_store(store: ShardedPromptStore, reselect: bool = True,
+                  train_dict: bool = True) -> List[CompactionResult]:
     """Compact every shard (skipping any a background compactor holds)."""
     out = []
     for shard_id in range(store.n_shards):
-        res = compact_shard(store, shard_id, reselect=reselect)
+        if shard_id >= store.n_shards:  # shrunk by a concurrent rebalance
+            break
+        res = compact_shard(store, shard_id, reselect=reselect,
+                            train_dict=train_dict)
         if res is not None:
             out.append(res)
     return out
@@ -143,13 +255,15 @@ class BackgroundCompactor:
 
     def __init__(self, store: ShardedPromptStore, interval_s: float = 5.0,
                  trigger_dead_ratio: float = 0.25, min_dead_bytes: int = 4096,
-                 reselect: bool = True, force_reselect_every: int = 0) -> None:
+                 reselect: bool = True, force_reselect_every: int = 0,
+                 train_dict: bool = True) -> None:
         self._store = store
         self.interval_s = float(interval_s)
         self.trigger_dead_ratio = float(trigger_dead_ratio)
         self.min_dead_bytes = int(min_dead_bytes)
         self.reselect = reselect
         self.force_reselect_every = int(force_reselect_every)
+        self.train_dict = train_dict
         self._stop_event = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
@@ -189,8 +303,15 @@ class BackgroundCompactor:
             sweep = (self.force_reselect_every > 0
                      and self._passes % self.force_reselect_every == 0)
         results: List[CompactionResult] = []
-        all_stats = self._store.all_shard_stats()  # one index pass
-        for shard_id in range(self._store.n_shards):
+        try:
+            all_stats = self._store.all_shard_stats()  # one index pass
+        except Exception:  # e.g. racing a rebalance's layout teardown
+            with self._lock:
+                self._errors += 1
+            return results
+        for shard_id in range(len(all_stats)):
+            # a concurrent rebalance may change n_shards mid-pass;
+            # compact_shard revalidates and bows out on a dead layout
             if self._stop_event.is_set() and not sweep:
                 break
             try:
@@ -200,7 +321,9 @@ class BackgroundCompactor:
                        and dead / size >= self.trigger_dead_ratio)
                 if not due and not (sweep and st["n_records"]):
                     continue
-                res = compact_shard(self._store, shard_id, reselect=self.reselect)
+                res = compact_shard(self._store, shard_id,
+                                    reselect=self.reselect,
+                                    train_dict=self.train_dict)
             except Exception:
                 with self._lock:
                     self._errors += 1

@@ -306,7 +306,12 @@ class IngestQueue:
                 self._maybe_finish(flush)
             self._cv.notify_all()
         for shard_id, entries in parts.items():
-            self._writer_queues[shard_id].put((entries, flush))
+            # writer threads are a parallelism pool, not the routing: an
+            # online rebalance can return shard ids beyond the pool size
+            # (and commit_batch re-routes stale plans itself), so the
+            # true shard id travels with the work item
+            q = self._writer_queues[shard_id % len(self._writer_queues)]
+            q.put((shard_id, entries, flush))
 
     def _maybe_finish(self, flush: Optional[_Flush]) -> None:
         """cv held: cascade prefix-ordered flush completion."""
@@ -326,13 +331,13 @@ class IngestQueue:
 
     # -- writers ---------------------------------------------------------------
 
-    def _writer_loop(self, shard_id: int) -> None:
-        q = self._writer_queues[shard_id]
+    def _writer_loop(self, writer_id: int) -> None:
+        q = self._writer_queues[writer_id]
         while True:
             item = q.get()
             if item is None:
                 return
-            entries, flush = item
+            shard_id, entries, flush = item
             err: Optional[BaseException] = None
             try:
                 self._store.commit_batch(shard_id, entries)

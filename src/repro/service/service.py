@@ -47,6 +47,7 @@ class PromptService:
         compact_trigger_dead_ratio: float = 0.25,
         compact_min_dead_bytes: int = 4096,
         compact_reselect: bool = True,
+        compact_train_dict: bool = True,
     ) -> None:
         self.store = store
         self.cache = TokenCache(cache_bytes) if cache_bytes > 0 else None
@@ -58,7 +59,8 @@ class PromptService:
             store, interval_s=compact_interval_s,
             trigger_dead_ratio=compact_trigger_dead_ratio,
             min_dead_bytes=compact_min_dead_bytes,
-            reselect=compact_reselect)
+            reselect=compact_reselect,
+            train_dict=compact_train_dict)
             if compact_interval_s is not None else None)
         self._started = False
         self._stopped = False
@@ -157,13 +159,21 @@ class PromptService:
 
     # -- maintenance -----------------------------------------------------------
 
-    def compact(self, shard_id: Optional[int] = None,
-                reselect: bool = True) -> List[CompactionResult]:
+    def compact(self, shard_id: Optional[int] = None, reselect: bool = True,
+                train_dict: bool = True) -> List[CompactionResult]:
         """Synchronous compaction (all shards, or one)."""
         if shard_id is not None:
-            res = compact_shard(self.store, shard_id, reselect=reselect)
+            res = compact_shard(self.store, shard_id, reselect=reselect,
+                                train_dict=train_dict)
             return [res] if res is not None else []
-        return compact_store(self.store, reselect=reselect)
+        return compact_store(self.store, reselect=reselect,
+                             train_dict=train_dict)
+
+    def rebalance(self, n_shards: int) -> dict:
+        """Online shard-count change: re-partition every key through the
+        store's atomic meta commit (readers served throughout; async
+        ingest keeps flowing — stale plans re-route)."""
+        return self.store.rebalance(n_shards)
 
     def stats(self) -> dict:
         """One snapshot across every component."""

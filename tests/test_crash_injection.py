@@ -1,0 +1,267 @@
+"""Crash injection for the generation swap and the online rebalance.
+
+`os.replace` and `os.fsync` are wrapped to raise at the N-th call —
+simulating the process dying at every durability step of `swap_shard`
+(dict sidecar write included) and `rebalance` — then the store root is
+reopened cold and must present either the OLD or the NEW generation
+byte-identically (never a torn mix), with every orphaned `.bin` /
+`.idx.jsonl` / `.dict` file garbage-collected.
+
+Both operations are deterministic for a quiescent store, so the clean-run
+"after" snapshot is computed once per operation on a copy of the seeded
+root and reused as the NEW-side reference for every fault point.
+"""
+
+import json
+import os
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.core.api import PromptCompressor
+from repro.core.store import ShardedPromptStore
+from repro.service.compaction import compact_store
+from repro.tokenizer.vocab import default_tokenizer
+
+pytestmark = pytest.mark.crash
+
+
+class InjectedCrash(BaseException):
+    """BaseException so no production except-Exception path can swallow
+    the simulated death."""
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+TEXTS = [f"crash {i}: restart the ingest pod, verify quorum, page the "
+         f"oncall for cell #{i % 7}." for i in range(24)]
+
+
+def _open(root, tok):
+    return ShardedPromptStore(root, PromptCompressor(tok, method="zstd"))
+
+
+def _seed(root: Path, tok) -> None:
+    store = ShardedPromptStore(root, PromptCompressor(tok, method="zstd"),
+                               n_shards=2)
+    store.put_many(TEXTS)
+
+
+def _snapshot(root: Path) -> dict:
+    return {p.name: p.read_bytes() for p in root.iterdir() if p.is_file()}
+
+
+def _live_files(store) -> set:
+    lay = store._layout
+    names = {"store.json"}
+    for i in range(lay.n_shards):
+        data, idx = store._shard_paths(i, lay.gens[i], lay.n_shards)
+        if data.exists():
+            names.add(data.name)
+        if idx.exists():
+            names.add(idx.name)
+        if lay.dict_shas[i]:
+            names.add(store._dict_path(i, lay.gens[i], lay.n_shards).name)
+    return names
+
+
+class _FaultInjector:
+    """Counts os.replace/os.fsync calls; raises InjectedCrash when the
+    combined call index reaches `crash_at` (None = count only)."""
+
+    def __init__(self, crash_at=None):
+        self.calls = 0
+        self.crash_at = crash_at
+        self._replace = os.replace
+        self._fsync = os.fsync
+
+    def _tick(self, what):
+        if self.crash_at is not None and self.calls == self.crash_at:
+            raise InjectedCrash(f"{what} call #{self.calls}")
+        self.calls += 1
+
+    def install(self, monkeypatch):
+        def replace(src, dst, *a, **kw):
+            self._tick("os.replace")
+            return self._replace(src, dst, *a, **kw)
+
+        def fsync(fd):
+            self._tick("os.fsync")
+            return self._fsync(fd)
+
+        monkeypatch.setattr(os, "replace", replace)
+        monkeypatch.setattr(os, "fsync", fsync)
+
+
+def _assert_meta_old_or_new(data: bytes, before: dict, after: dict,
+                            crash_at: int) -> None:
+    """store.json must describe, per shard, either the old or the new
+    (gen, dict) pair — a mid-pass compaction legitimately leaves shard 0
+    committed at the new generation while shard 1 is still old, but a
+    single shard's entry may never be torn."""
+    doc = json.loads(data)
+    n = doc["n_shards"]
+    sides = []
+    for ref in (before, after):
+        if "store.json" in ref:
+            d = json.loads(ref["store.json"])
+            if d["n_shards"] == n:
+                sides.append(d)
+    assert sides, f"meta shard count at fault {crash_at} matches neither side"
+    gens = doc["gens"]
+    dicts = doc.get("dicts", [None] * n)
+    for i in range(n):
+        ok = any(gens[i] == d["gens"][i]
+                 and dicts[i] == d.get("dicts", [None] * n)[i]
+                 for d in sides)
+        assert ok, (f"shard {i} meta entry at fault {crash_at} is neither "
+                    "the old nor the new generation")
+
+
+OPS = {
+    # dict-training compaction: data + index + .dict sidecar per shard,
+    # then the atomic meta replace
+    "compact_dict": lambda store: compact_store(store, reselect=True,
+                                                train_dict=True),
+    # second-generation swap on an ALREADY dict-bearing store (old sidecar
+    # must survive a crash, new one must not leak)
+    "recompact": lambda store: compact_store(store, reselect=True,
+                                             train_dict=True),
+    "rebalance_grow": lambda store: store.rebalance(5),
+    "rebalance_shrink": lambda store: store.rebalance(1),
+}
+# ops whose seed root is first dict-compacted cleanly
+PRE_COMPACTED = {"recompact", "rebalance_grow", "rebalance_shrink"}
+
+
+@pytest.fixture(scope="module")
+def seeded(tok, tmp_path_factory):
+    """One seeded root per op + its clean-run 'after' snapshot."""
+    base = tmp_path_factory.mktemp("crash-seeds")
+    out = {}
+    for name, op in OPS.items():
+        seed = base / f"{name}-seed"
+        _seed(seed, tok)
+        if name in PRE_COMPACTED:
+            pre = _open(seed, tok)
+            compact_store(pre, reselect=True, train_dict=True)
+            assert pre.stats()["dicts"] > 0  # sidecar faults are exercised
+        before = _snapshot(seed)
+        clean = base / f"{name}-clean"
+        shutil.copytree(seed, clean)
+        op(_open(clean, tok))
+        after = _snapshot(clean)
+        out[name] = (seed, before, after)
+    return out
+
+
+def _fault_count(seeded_root, op, tok, monkeypatch, tmp_path):
+    work = tmp_path / "count"
+    shutil.copytree(seeded_root, work)
+    counter = _FaultInjector(crash_at=None)
+    with monkeypatch.context() as m:
+        counter.install(m)
+        op(_open(work, tok))
+    return counter.calls
+
+
+@pytest.mark.parametrize("opname", sorted(OPS))
+def test_crash_at_every_fault_point(opname, seeded, tok, monkeypatch,
+                                    tmp_path):
+    op = OPS[opname]
+    seed_root, before, after = seeded[opname]
+    n_faults = _fault_count(seed_root, op, tok, monkeypatch, tmp_path)
+    assert n_faults >= 3, "operation must have durability steps to test"
+    keys = _open(seed_root, tok).keys()
+
+    for crash_at in range(n_faults):
+        work = tmp_path / f"crash-{crash_at}"
+        shutil.copytree(seed_root, work)
+        injector = _FaultInjector(crash_at=crash_at)
+        with monkeypatch.context() as m:
+            injector.install(m)
+            store = _open(work, tok)
+            with pytest.raises(InjectedCrash):
+                op(store)
+            del store  # the process is dead; only the disk survives
+
+        # cold reopen: every record present and byte-lossless
+        reopened = _open(work, tok)
+        assert reopened.keys() == keys, f"keys lost at fault {crash_at}"
+        assert reopened.get_many(keys) == TEXTS
+        assert reopened.verify_all()["failure"] == 0
+
+        # old-or-new, never a torn mix: every surviving shard file equals
+        # its pre-op or clean-run-after bytes.  The atomic unit is the
+        # SHARD generation (compact_store commits one meta replace per
+        # shard), so store.json is checked per shard entry instead.
+        files = _snapshot(work)
+        for name, data in files.items():
+            if name == "store.json":
+                _assert_meta_old_or_new(data, before, after, crash_at)
+                continue
+            assert (before.get(name) == data or after.get(name) == data), (
+                f"{name} at fault {crash_at} is neither the old nor the "
+                "new generation")
+
+        # orphan GC: nothing outside the committed layout remains
+        assert set(files) == _live_files(reopened), (
+            f"orphans after fault {crash_at}: "
+            f"{set(files) ^ _live_files(reopened)}")
+        shutil.rmtree(work)
+
+
+def test_crash_after_rebalance_commit_sweeps_gen0_leftovers(tok, monkeypatch,
+                                                           tmp_path):
+    """A shrink committed from a NEVER-compacted store leaves gen-0 files
+    of the dropped shards if the process dies before cleanup.  Those
+    names are ambiguous with foreign backups, so GC must not guess —
+    the committed meta's explicit `sweep` list declares them ours and a
+    reopen finishes the unlink."""
+    from pathlib import Path
+
+    _seed(tmp_path, tok)  # 2 shards, all gen 0
+    store = _open(tmp_path, tok)
+
+    def dying_unlink(self, *a, **kw):
+        raise InjectedCrash(f"unlink {self.name}")
+
+    with monkeypatch.context() as m:
+        m.setattr(Path, "unlink", dying_unlink)
+        with pytest.raises(InjectedCrash):
+            store.rebalance(1)
+    # meta committed (n_shards=1) but every old gen-0 file survived
+    assert json.loads((tmp_path / "store.json").read_bytes())["n_shards"] == 1
+    assert (tmp_path / "shard-000.bin").exists()
+    assert (tmp_path / "shard-001.bin").exists()
+    reopened = _open(tmp_path, tok)
+    assert not (tmp_path / "shard-000.bin").exists()
+    assert not (tmp_path / "shard-001.bin").exists()
+    assert "sweep" not in json.loads((tmp_path / "store.json").read_bytes())
+    assert reopened.keys() and reopened.verify_all()["failure"] == 0
+    assert reopened.get_many(reopened.keys()) == TEXTS
+
+
+def test_rebalance_preserves_seq_order_across_crashes(seeded, tok,
+                                                      monkeypatch, tmp_path):
+    """Acceptance: rebalance(n_shards) preserves every key AND the global
+    seq iteration order at every fault point (spot-checked above per key
+    set; this pins the order against the seed)."""
+    seed_root, _, _ = seeded["rebalance_grow"]
+    expected = _open(seed_root, tok).keys()
+    n_faults = _fault_count(seed_root, OPS["rebalance_grow"], tok,
+                            monkeypatch, tmp_path / "c")
+    for crash_at in (0, n_faults // 2, n_faults - 1):
+        work = tmp_path / f"seq-{crash_at}"
+        shutil.copytree(seed_root, work)
+        injector = _FaultInjector(crash_at=crash_at)
+        with monkeypatch.context() as m:
+            injector.install(m)
+            with pytest.raises(InjectedCrash):
+                _open(work, tok).rebalance(5)
+        assert _open(work, tok).keys() == expected
+        shutil.rmtree(work)

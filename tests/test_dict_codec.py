@@ -1,0 +1,270 @@
+"""Trained-dictionary codec stage: property round-trips over arbitrary
+corpora (train -> compress -> decompress byte-identical), the dict-absent
+fallbacks (empty corpus, tiny shards, backends without a dictionary
+mode), the golden v2 frame-header layout, and the store-level sidecar
+contract (compaction adoption, reopen validation, rebalance stripping).
+"""
+
+import hashlib
+import struct
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.api import (DICT_VERSION, VERSION, PromptCompressor,
+                            dict_fingerprint, parse_frame)
+from repro.core.codec import DictCodec, get_codec, method_pipeline
+from repro.core.lz77 import lz_compress, lz_decompress
+from repro.core.store import ShardedPromptStore
+from repro.core.zstd_backend import (DICT_BACKENDS, compress_bytes_dict,
+                                     decompress_bytes_dict,
+                                     train_dictionary_bytes)
+from repro.service.compaction import compact_store
+from repro.tokenizer.vocab import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+def _short_corpus(n, tag="dict"):
+    return [f"{tag} {i}: fetch the weather for city #{i % 13} and reply "
+            "tersely with units." for i in range(n)]
+
+
+# -- lz77 prefix (dictionary) mode --------------------------------------------
+
+
+@settings(max_examples=40)
+@given(data=st.binary(min_size=0, max_size=400),
+       prefix=st.binary(min_size=0, max_size=600))
+def test_lz77_prefix_roundtrip(data, prefix):
+    comp = lz_compress(data, prefix=prefix)
+    assert lz_decompress(comp, prefix=prefix) == data
+
+
+@settings(max_examples=25)
+@given(data=st.binary(min_size=0, max_size=300))
+def test_lz77_empty_prefix_is_byte_identical_to_plain(data):
+    """prefix=b'' must not change a single output byte — every existing
+    repro-lz / repro-lzr blob stays decodable and golden tests hold."""
+    assert lz_compress(data, prefix=b"") == lz_compress(data)
+    assert lz_decompress(lz_compress(data), prefix=b"") == data
+
+
+# -- dictionary training -------------------------------------------------------
+
+
+def test_train_dictionary_edge_cases():
+    assert train_dictionary_bytes([], 4096) == b""          # empty corpus
+    assert train_dictionary_bytes([b""], 4096) == b""       # empty samples
+    assert train_dictionary_bytes([b"abc"], 0) == b""       # zero budget
+    # a single unique record has no cross-record redundancy to learn
+    one = train_dictionary_bytes([b"solitary record"], 4096)
+    assert isinstance(one, bytes)
+
+
+def test_trained_dictionary_shrinks_templated_corpus():
+    samples = [t.encode() for t in _short_corpus(64)]
+    d = train_dictionary_bytes(samples, 4096)
+    assert d and len(d) <= 4096
+    for backend in sorted(DICT_BACKENDS):
+        plain = sum(len(compress_bytes_dict(s, b"\x00", backend=backend))
+                    for s in samples[:8])
+        primed = sum(len(compress_bytes_dict(s, d, backend=backend))
+                     for s in samples[:8])
+        assert primed < plain, backend
+
+
+@settings(max_examples=20)
+@given(texts=st.lists(st.text(min_size=0, max_size=120), min_size=0,
+                      max_size=12))
+def test_dict_backend_roundtrip_arbitrary_corpora(texts):
+    """Arbitrary corpus -> train -> compress/decompress byte-identical,
+    including the dict-absent (empty-training-result) fallback."""
+    samples = [t.encode("utf-8") for t in texts]
+    d = train_dictionary_bytes(samples, 2048)
+    for backend in sorted(DICT_BACKENDS):
+        for s in samples:
+            if d:
+                blob = compress_bytes_dict(s, d, backend=backend)
+                assert decompress_bytes_dict(blob, d, backend=backend) == s
+            else:  # no dictionary learnable: callers compress plain
+                from repro.core.zstd_backend import (compress_bytes,
+                                                     decompress_bytes)
+                assert decompress_bytes(compress_bytes(s, backend=backend),
+                                        backend=backend) == s
+
+
+# -- DictCodec stage -----------------------------------------------------------
+
+
+def test_dict_codec_stage_and_registry():
+    d = train_dictionary_bytes([t.encode() for t in _short_corpus(32)], 2048)
+    codec = get_codec("dict-compressor", dictionary=d)
+    assert isinstance(codec, DictCodec)
+    payloads = [t.encode() for t in _short_corpus(8, tag="stage")]
+    assert codec.decode_batch(codec.encode_batch(payloads)) == payloads
+    with pytest.raises(ValueError, match="non-empty"):
+        DictCodec(b"")
+    with pytest.raises(ValueError, match="dictionary mode"):
+        DictCodec(d, backend="lzma")
+    with pytest.raises(ValueError, match="byte-compressor stage"):
+        method_pipeline("token", tokenizer=default_tokenizer(), dictionary=d)
+
+
+# -- frame layer ---------------------------------------------------------------
+
+
+GOLDEN_DICT = b"golden dictionary bytes for the v2 frame header test"
+
+
+def test_golden_dict_frame_header_layout(tok):
+    """Pin the v2 frame header byte layout: the v1 header (15 bytes:
+    magic 'LP', version, method, backend, signed level, scheme, 8-byte
+    tokenizer fp) followed by the 8-byte dictionary fingerprint
+    (sha256(dict)[:8]).  A layout drift would silently orphan every
+    dict-compressed store."""
+    pc = PromptCompressor(tok, method="zstd", level=15, backend="zstd",
+                          scheme="fixed")
+    blob = pc.compress_batch(["golden text"], "zstd",
+                             dictionary=GOLDEN_DICT)[0]
+    expected = (
+        b"LP"                                       # magic
+        + bytes([DICT_VERSION])                     # version 2
+        + bytes([0])                                # method id: zstd
+        + bytes([5])                                # backend id: zstd (sorted)
+        + struct.pack("<b", 15)                     # signed level byte
+        + bytes([0])                                # scheme id: fixed
+        + b"\x00" * 8                               # no tokenizer for zstd
+        + hashlib.sha256(GOLDEN_DICT).digest()[:8]  # dict fingerprint
+    )
+    assert blob[:23] == expected
+    info = parse_frame(blob)
+    assert info.dict_fp == dict_fingerprint(GOLDEN_DICT)
+    assert DICT_VERSION == 2 and VERSION == 1
+    # and a dictionary-less frame still writes the unchanged v1 header
+    plain = pc.compress("golden text", "zstd")
+    assert plain[2] == VERSION and parse_frame(plain).dict_fp is None
+
+
+@settings(max_examples=15)
+@given(texts=st.lists(st.text(min_size=1, max_size=150), min_size=1,
+                      max_size=8))
+def test_compressor_dict_frames_roundtrip_property(texts, tok):
+    pc = PromptCompressor(tok)
+    for method in ("zstd", "hybrid"):
+        d = train_dictionary_bytes(
+            pc.byte_stage_payloads(texts, method), 2048)
+        if not d:
+            continue
+        blobs = pc.compress_batch(texts, method, dictionary=d)
+        assert pc.decompress_batch(blobs) == texts
+        plain = pc.tokens_batch(pc.compress_batch(texts, method))
+        primed = pc.tokens_batch(blobs)
+        for a, b in zip(plain, primed):
+            assert np.array_equal(a, b)
+
+
+def test_unregistered_dictionary_fails_pointedly(tok):
+    pc = PromptCompressor(tok, method="zstd")
+    d = train_dictionary_bytes([t.encode() for t in _short_corpus(32)], 2048)
+    blob = pc.compress_batch(["needs the dict"], dictionary=d)[0]
+    fresh = PromptCompressor(tok, method="zstd")
+    with pytest.raises(ValueError, match="sidecar"):
+        fresh.decompress(blob)
+    fresh.register_dictionary(d)
+    assert fresh.decompress(blob) == "needs the dict"
+
+
+# -- store sidecar contract ----------------------------------------------------
+
+
+def _dict_store(root, tok, n_texts=48, n_shards=2):
+    store = ShardedPromptStore(root, PromptCompressor(tok, method="zstd"),
+                               n_shards=n_shards)
+    texts = _short_corpus(n_texts, tag="store")
+    keys = store.put_many(texts)
+    return store, keys, texts
+
+
+def test_compaction_adopts_dictionary_and_reopens(tmp_path, tok):
+    """Acceptance: dictionary-trained compaction strictly reduces total
+    store bytes (sidecars charged) on a short-prompt corpus, and the
+    store reopens through the sidecar validation path."""
+    store, keys, texts = _dict_store(tmp_path, tok)
+    st0 = store.stats()
+    results = compact_store(store, reselect=True, train_dict=True)
+    st1 = store.stats()
+    assert any(r.used_dict for r in results)
+    assert st1["file_bytes"] + st1["dict_bytes"] < st0["file_bytes"] + st0["dict_bytes"]
+    assert store.get_many(keys) == texts
+    sidecars = sorted(p.name for p in tmp_path.glob("*.dict"))
+    assert sidecars and all(".g0001." in s for s in sidecars)
+    reopened = ShardedPromptStore(tmp_path,
+                                  PromptCompressor(tok, method="zstd"))
+    assert reopened.keys() == keys
+    assert reopened.get_many(keys) == texts
+    assert reopened.verify_all()["failure"] == 0
+
+
+def test_second_compaction_keeps_frames_decodable(tmp_path, tok):
+    """A rebuild of a dict-bearing shard must never drop the sidecar out
+    from under frames that still reference it (carry-through), and a
+    re-encode to a new dictionary must swap sidecars atomically."""
+    store, keys, texts = _dict_store(tmp_path, tok)
+    compact_store(store, train_dict=True)
+    # no-reselect pass: blobs are kept verbatim, so the dict must carry
+    compact_store(store, reselect=False)
+    assert store.get_many(keys) == texts
+    reopened = ShardedPromptStore(tmp_path,
+                                  PromptCompressor(tok, method="zstd"))
+    assert reopened.get_many(keys) == texts
+    assert reopened.stats()["dicts"] > 0
+
+
+def test_corrupt_or_missing_sidecar_refused_on_open(tmp_path, tok):
+    store, keys, _ = _dict_store(tmp_path, tok)
+    compact_store(store, train_dict=True)
+    sidecar = next(tmp_path.glob("*.dict"))
+    original = sidecar.read_bytes()
+    sidecar.write_bytes(original[:-1] + bytes([original[-1] ^ 1]))
+    with pytest.raises(ValueError, match="sha256 mismatch"):
+        ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"))
+    sidecar.unlink()
+    with pytest.raises(ValueError, match="missing"):
+        ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"))
+    sidecar.write_bytes(original)  # restored: opens again
+    assert ShardedPromptStore(
+        tmp_path, PromptCompressor(tok, method="zstd")).keys() == keys
+
+
+def test_one_record_shard_compacts_without_dictionary(tmp_path, tok):
+    """1-record shards (below MIN_DICT_RECORDS) never pay for a sidecar."""
+    store = ShardedPromptStore(tmp_path, PromptCompressor(tok, method="zstd"),
+                               n_shards=1)
+    key = store.put("a single lonely record " * 3)
+    results = compact_store(store, train_dict=True)
+    assert all(not r.used_dict for r in results)
+    assert not list(tmp_path.glob("*.dict"))
+    assert store.get(key)
+
+
+def test_rebalance_strips_dict_frames(tmp_path, tok):
+    """Rebalancing mixes records from many source shards, so it re-encodes
+    dict frames plain: the new layout must carry no sidecar dependencies
+    and still be byte-lossless."""
+    store, keys, texts = _dict_store(tmp_path, tok, n_shards=4)
+    compact_store(store, train_dict=True)
+    assert list(tmp_path.glob("*.dict"))
+    res = store.rebalance(2)
+    assert res["n_reencoded"] > 0
+    assert not list(tmp_path.glob("*.dict"))
+    assert store.keys() == keys and store.get_many(keys) == texts
+    reopened = ShardedPromptStore(tmp_path,
+                                  PromptCompressor(tok, method="zstd"))
+    assert reopened.n_shards == 2
+    assert reopened.keys() == keys and reopened.get_many(keys) == texts
+    assert reopened.verify_all()["failure"] == 0

@@ -251,6 +251,24 @@ def test_gc_globs_do_not_swallow_wider_shard_names(tmp_path, tok):
     assert reopened.keys() == keys
 
 
+def test_gc_leaves_foreign_family_gen0_files(tmp_path, tok):
+    """A legacy data.bin/index.jsonl sitting in a multi-shard root (e.g. a
+    restored backup awaiting migration) is not ours to collect — only
+    generation-suffixed names are unambiguously store-written, so gen-0
+    files of a different naming family survive every GC sweep."""
+    store = _store(tmp_path, tok, n_shards=4)
+    keys = store.put_many(_texts(8, tag="foreign"))
+    (tmp_path / "data.bin").write_bytes(b"someone's backup")
+    (tmp_path / "index.jsonl").write_text("not ours either\n")
+    compact_store(store, reselect=False)      # in-process GC path
+    reopened = _store(tmp_path, tok)          # open-time GC path
+    assert (tmp_path / "data.bin").read_bytes() == b"someone's backup"
+    assert (tmp_path / "index.jsonl").exists()
+    assert reopened.keys() == keys
+    (tmp_path / "data.bin").unlink()
+    (tmp_path / "index.jsonl").unlink()
+
+
 def test_all_shard_stats_matches_per_shard(tmp_path, tok):
     store = _store(tmp_path, tok, n_shards=4)
     store.put_many(_texts(12, tag="stats"))
@@ -272,6 +290,41 @@ def test_compaction_catches_up_concurrent_commits(tmp_path, tok):
     assert swap["n_caught_up"] == 1
     assert store.keys() == keys + late
     assert store.verify_all()["failure"] == 0
+
+
+# -- rebalance ----------------------------------------------------------------
+
+
+def test_rebalance_preserves_keys_seq_and_content(tmp_path, tok):
+    store = _store(tmp_path, tok, n_shards=4)
+    texts = _texts(24, tag="reb")
+    keys = store.put_many(texts)
+    for target in (8, 3, 1):
+        res = store.rebalance(target)
+        assert res["n_shards_after"] == target == store.n_shards
+        assert store.keys() == keys          # seq order preserved
+        assert store.get_many(keys) == texts
+        reopened = _store(tmp_path, tok)
+        assert reopened.n_shards == target and reopened.keys() == keys
+    # writes keep working on the final layout
+    extra = store.put_many(_texts(4, tag="after-reb"))
+    assert store.keys() == keys + extra
+    assert store.rebalance(1)["n_caught_up"] == 0  # no-op path
+
+
+def test_rebalance_while_writers_commit_reroutes(tmp_path, tok):
+    """A plan made under the old layout commits correctly after a
+    rebalance: commit_batch re-routes by the new shard count."""
+    store = _store(tmp_path, tok, n_shards=2)
+    texts = _texts(8, tag="stale-plan")
+    _, plan = store.plan_batch(texts)
+    store.rebalance(5)                        # invalidates the plan routing
+    for sid, entries in plan.items():
+        store.commit_batch(sid, entries)
+    assert len(store) == 8
+    assert store.verify_all()["failure"] == 0
+    reopened = _store(tmp_path, tok)
+    assert reopened.keys() == store.keys()
 
 
 # -- PromptService ------------------------------------------------------------
@@ -426,6 +479,75 @@ def test_service_concurrent_ingest_compaction_serve(tmp_path, tok):
         assert np.array_equal(store.get_tokens(key), ref.get_tokens(key))
     # and the store reopens cleanly after all the generation churn
     reopened = _store(tmp_path, tok)
+    assert reopened.verify_all()["failure"] == 0
+
+
+@pytest.mark.slow
+@pytest.mark.concurrency
+def test_rebalance_races_ingest_compaction_and_cached_serve(tmp_path, tok):
+    """Online rebalances race the async ingest queue, the background
+    (dict-training) compactor, and cached `get_tokens` readers on one
+    store: no key may be lost, the seq order must be reopen-stable, and
+    the TokenCache must never serve an array that does not decode to its
+    own content key (content addressing makes staleness structurally
+    impossible — this asserts it under the worst interleaving)."""
+    store = _store(tmp_path, tok, method="zstd", n_shards=4)
+    texts = _texts(120, tag="rebrace", rep=3)
+    svc = PromptService(store, cache_bytes=1 << 20, flush_batch=8,
+                        flush_interval_s=0.005, compact_interval_s=0.02,
+                        compact_trigger_dead_ratio=0.0,
+                        compact_min_dead_bytes=0)
+    errors: list = []
+    tickets: list = []
+    with svc:
+        def producer(lo, hi):
+            try:
+                for i in range(lo, hi, 5):
+                    tickets.append(svc.put_async(texts[i:i + 5]))
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        def cached_reader():
+            try:
+                deadline = time.monotonic() + 20
+                while time.monotonic() < deadline and len(svc) < len(texts):
+                    keys = svc.keys()[-6:]
+                    if keys:
+                        for ids, key in zip(svc.get_tokens_many(keys), keys):
+                            assert content_key(tok.decode(ids)) == key
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        def rebalancer():
+            try:
+                for target in (8, 2, 6, 3):
+                    time.sleep(0.03)
+                    res = svc.rebalance(target)
+                    assert res["n_shards_after"] == target
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        threads = ([threading.Thread(target=producer, args=(lo, lo + 40))
+                    for lo in (0, 40, 80)]
+                   + [threading.Thread(target=cached_reader) for _ in range(2)]
+                   + [threading.Thread(target=rebalancer)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        svc.drain()
+        for t in tickets:
+            t.wait(20)
+        assert not errors
+    assert store.n_shards == 3
+    assert len(store) == len(texts)                  # no lost keys
+    assert store.verify_all()["failure"] == 0
+    reopened = _store(tmp_path, tok)
+    assert reopened.keys() == store.keys()           # seq order stable
+    assert reopened.n_shards == 3
+    by_key = {content_key(t): t for t in texts}
+    for key in reopened.keys():
+        assert reopened.get(key) == by_key[key]
     assert reopened.verify_all()["failure"] == 0
 
 
