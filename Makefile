@@ -1,11 +1,12 @@
 # Test tiers (markers registered in pytest.ini; see ARCHITECTURE.md):
-#   make quick   not-slow tests + golden frame-layout pins (scripts/check.sh)
-#   make crash   crash-injection suite alone (fault points in fsync/replace)
-#   make test    full tier-1 (slow + concurrency included)
-#   make bench   the full benchmark sweep (writes BENCH_*.json)
+#   make quick       not-slow tests + golden frame-layout pins (scripts/check.sh)
+#   make crash       crash-injection suite alone (fault points in fsync/replace)
+#   make test        full tier-1 (slow + concurrency included)
+#   make bench       the full benchmark sweep (writes BENCH_*.json)
+#   make bench-codec the codec hot-path sweep alone (BENCH_codec_throughput.json)
 PY := PYTHONPATH=src python
 
-.PHONY: quick crash test bench
+.PHONY: quick crash test bench bench-codec
 
 quick:
 	bash scripts/check.sh
@@ -18,3 +19,6 @@ test:
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
+
+bench-codec:
+	PYTHONPATH=src:. python benchmarks/codec_throughput.py

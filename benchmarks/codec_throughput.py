@@ -1,0 +1,177 @@
+"""Codec hot-path throughput: scalar baseline vs the vectorized rewrite.
+
+The paper's production gate is lossless-codec throughput (Table 7 /
+§5.4), and with ``zstandard`` absent the from-scratch ``repro-lz`` /
+``repro-lzr`` backends carry every store write and compaction pass — so
+this module is the repo's perf trajectory point for the codec tier.
+
+Measured per backend, on the two payload families the system actually
+stores (method 1 compresses UTF-8 text; method 3's byte stage compresses
+*packed token streams*):
+
+* ``scalar``     — the seed implementation, forced via REPRO_LZ_MODE /
+                   single-lane rANS (this is the speedup denominator);
+* ``vectorized`` — the NumPy LZ77 parse + interleaved N-lane rANS
+                   (auto-routing, exactly what production calls hit);
+* ``batch``      — `compress_bytes` fanned over the corpus records
+                   through the shared codec thread pool (the store's
+                   plan_batch / ingest-dispatcher path) vs a sequential
+                   scalar loop.
+
+Every row carries a lossless check: FAIL in the derived column kills the
+sweep.  Writes ``benchmarks/BENCH_codec_throughput.json``.
+
+Findings this records (see ARCHITECTURE.md "Vectorized codec path",
+measured on the reference 2-vCPU container): the rANS rewrite is a
+10-20x win both ways in isolation and dominates ``repro-lzr`` — 5.9x
+compress / 4.4x decompress end-to-end on packed token streams, 3.3x /
+3.8x on prompt text; the LZ77 vectorized parse wins 1.7x (text) to 4.7x
+(packed) on compress; LZ *decode* stays on the scalar loop in auto (its
+bulk slice copies already run at memcpy speed — the vectorized
+parse+gather path measured at parity or worse, kept only behind
+REPRO_LZ_MODE=vector), so ``repro-lz`` decompress is ~1x by design and
+the decode-side win rides on the rANS stage.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import corpus, csv_row
+
+_OUT = Path(__file__).resolve().parent / "BENCH_codec_throughput.json"
+
+N_TEXT = 96          # corpus records per family (bounded for CI wall time)
+REPS = 3             # best-of reps per measurement
+BACKENDS = ("repro-lz", "repro-lzr")
+
+
+def _families():
+    from repro.core import packing
+    from repro.tokenizer.vocab import default_tokenizer
+
+    texts = [p.text for p in corpus(N_TEXT)]
+    tok = default_tokenizer()
+    text_recs = [t.encode("utf-8") for t in texts]
+    packed_recs = [
+        packing.pack_tokens(np.asarray(tok.encode(t), np.uint32), "fixed")
+        for t in texts]
+    return {"text": text_recs, "packed": packed_recs}
+
+
+def _best(fn, reps=REPS):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class _env:
+    """Temporarily pin the codec routing env knobs."""
+
+    def __init__(self, **kv):
+        self.kv = kv
+        self.old = {}
+
+    def __enter__(self):
+        for k, v in self.kv.items():
+            self.old[k] = os.environ.get(k)
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+    def __exit__(self, *exc):
+        for k, v in self.old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+_SCALAR = dict(REPRO_LZ_MODE="scalar", REPRO_RANS_LANES="1",
+               REPRO_CODEC_THREADS="0")
+_VECTOR = dict(REPRO_LZ_MODE=None, REPRO_RANS_LANES=None,
+               REPRO_CODEC_THREADS="0")
+_BATCH = dict(REPRO_LZ_MODE=None, REPRO_RANS_LANES=None,
+              REPRO_CODEC_THREADS=None)
+
+
+def run() -> list:
+    from repro.core.codec import ByteCompressorCodec
+    from repro.core.zstd_backend import compress_bytes, decompress_bytes
+
+    rows = []
+    doc = {"n_records": N_TEXT, "reps": REPS}
+    failed = False
+    for family, recs in _families().items():
+        blob = b"".join(recs)
+        mb = len(blob) / 1e6
+        doc[f"{family}_bytes"] = len(blob)
+        for backend in BACKENDS:
+            codec = ByteCompressorCodec(backend=backend)
+            # -- single-stream scalar vs vectorized ------------------------
+            with _env(**_SCALAR):
+                t_cs = _best(lambda: compress_bytes(blob, backend=backend))
+                comp_s = compress_bytes(blob, backend=backend)
+                t_ds = _best(lambda: decompress_bytes(comp_s, backend=backend))
+            with _env(**_VECTOR):
+                t_cv = _best(lambda: compress_bytes(blob, backend=backend))
+                comp_v = compress_bytes(blob, backend=backend)
+                t_dv = _best(lambda: decompress_bytes(comp_v, backend=backend))
+                lossless = decompress_bytes(comp_v, backend=backend) == blob
+            # -- batch over records: pooled vectorized vs sequential scalar
+            with _env(**_SCALAR):
+                t_bs = _best(lambda: [compress_bytes(r, backend=backend)
+                                      for r in recs])
+            with _env(**_BATCH):
+                t_bv = _best(lambda: codec.encode_batch(recs))
+                batch_ok = (codec.decode_batch(codec.encode_batch(recs))
+                            == list(recs))
+            if not (lossless and batch_ok):
+                failed = True
+            tag = f"{family}_{backend}"
+            doc.update({
+                f"{tag}_ratio_scalar": len(blob) / len(comp_s),
+                f"{tag}_ratio_vectorized": len(blob) / len(comp_v),
+                f"{tag}_compress_scalar_mbps": mb / t_cs,
+                f"{tag}_compress_vectorized_mbps": mb / t_cv,
+                f"{tag}_compress_speedup": t_cs / t_cv,
+                f"{tag}_decompress_scalar_mbps": mb / t_ds,
+                f"{tag}_decompress_vectorized_mbps": mb / t_dv,
+                f"{tag}_decompress_speedup": t_ds / t_dv,
+                f"{tag}_batch_scalar_mbps": mb / t_bs,
+                f"{tag}_batch_vectorized_mbps": mb / t_bv,
+                f"{tag}_batch_speedup": t_bs / t_bv,
+            })
+            state = "ok" if (lossless and batch_ok) else "FAIL:lossless"
+            rows.append(csv_row(
+                f"codec_{tag}_compress", 1e6 * t_cv,
+                f"scalar={mb/t_cs:.2f}MB/s vec={mb/t_cv:.2f}MB/s "
+                f"speedup={t_cs/t_cv:.1f}x {state}"))
+            rows.append(csv_row(
+                f"codec_{tag}_decompress", 1e6 * t_dv,
+                f"scalar={mb/t_ds:.2f}MB/s vec={mb/t_dv:.2f}MB/s "
+                f"speedup={t_ds/t_dv:.1f}x"))
+            rows.append(csv_row(
+                f"codec_{tag}_batch", 1e6 * t_bv,
+                f"scalar={mb/t_bs:.2f}MB/s pooled={mb/t_bv:.2f}MB/s "
+                f"speedup={t_bs/t_bv:.1f}x"))
+    doc["lossless"] = not failed
+    try:
+        _OUT.write_text(json.dumps(doc, indent=1) + "\n")
+    except OSError:
+        pass  # benchmarks dir read-only: keep the csv rows
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -25,6 +25,7 @@ MODULES = [
     ("store_batch_throughput", "batch_throughput"),
     ("service_throughput", "service_throughput"),
     ("dist_grad_compress", "grad_compress"),
+    ("codec_throughput", "codec_throughput"),
 ]
 
 

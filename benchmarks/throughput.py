@@ -1,8 +1,39 @@
 """Paper Table 7 / §5.4: compression and decompression throughput (MB/s).
 Reference: zstd 10.7/132.9, token 4.6/8.5, hybrid 3.3/2.3 MB/s on the
-paper's (unspecified) host — same order of magnitude expected here."""
+paper's (unspecified) host — same order of magnitude expected here.
 
-from benchmarks.common import METHODS, all_cycles, csv_row, stats
+Also reports BPE encode throughput alone (cold + warm word-cache): the
+token/hybrid rows are tokenizer-bound, so this row shows how much of
+their budget the merge loop takes and how much the per-word LRU memo
+(`tokenizer/bpe.py`) recovers on realistic re-encoding traffic."""
+
+import time
+
+from benchmarks.common import METHODS, all_cycles, corpus, csv_row, stats
+
+
+def _encode_row() -> str:
+    from repro.tokenizer.vocab import default_tokenizer
+
+    texts = [p.text for p in corpus()]
+    tot_mb = sum(len(t.encode("utf-8")) for t in texts) / 1e6
+    # default_tokenizer() is a process-cached singleton whose word memo
+    # the earlier all_cycles() pass already warmed — drop it so the cold
+    # row measures the merge loop, not cache hits
+    tok = default_tokenizer()
+    tok._encode_word.cache_clear()
+    t0 = time.perf_counter()
+    for t in texts:
+        tok.encode(t)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for t in texts:
+        tok.encode(t)
+    t_warm = time.perf_counter() - t0
+    return csv_row(
+        "table7_throughput_bpe_encode", 1e6 * t_cold / len(texts),
+        f"cold={tot_mb/t_cold:.1f}MB/s warm={tot_mb/t_warm:.1f}MB/s "
+        f"cache_gain={t_cold/t_warm:.1f}x")
 
 
 def run() -> list:
@@ -16,4 +47,5 @@ def run() -> list:
         us = 1e6 * sum(c.t_compress_s for c in cs) / len(cs)
         rows.append(csv_row(f"table7_throughput_{m}", us,
                             f"compress={comp:.1f}MB/s decompress={decomp:.1f}MB/s"))
+    rows.append(_encode_row())
     return rows

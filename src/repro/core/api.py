@@ -294,8 +294,10 @@ class PromptCompressor:
                        method: Optional[str] = None,
                        dictionary: Optional[bytes] = None) -> List[bytes]:
         """Batch-first compression: one pipeline pass over the whole batch
-        (batch BPE encode, one kernel launch per packing width on device),
-        bit-identical to calling `compress` per text.
+        (batch BPE encode, one kernel launch per packing width on device,
+        per-record byte compression fanned out over the shared codec
+        thread pool — see ``repro.core.codec``), bit-identical to calling
+        `compress` per text.
 
         With ``dictionary``, the byte stage is primed with it and the
         frames are emitted at header version 2 carrying its fingerprint;

@@ -33,6 +33,9 @@ pure-NumPy ``packing.pack_fixed`` path is used per stream.
 
 from __future__ import annotations
 
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
@@ -42,6 +45,68 @@ from repro.core.zstd_backend import (BACKENDS, DEFAULT_LEVEL, DICT_BACKENDS,
                                      compress_bytes, compress_bytes_dict,
                                      decompress_bytes, decompress_bytes_dict)
 from repro.tokenizer.bpe import BPETokenizer
+
+# ---------------------------------------------------------------------------
+# Shared codec thread pool
+# ---------------------------------------------------------------------------
+#
+# One process-wide pool fans per-record byte compression out across cores:
+# `PromptCompressor.compress_batch`, `ShardedPromptStore.plan_batch` and the
+# ingest dispatcher all reach it through the byte-stage codecs below, so a
+# group commit's latency is bounded by its slowest record, not the sum.
+# The win is real where the leaf releases the GIL (zlib/bz2/lzma and the
+# zstd C library do; the from-scratch backends only during their NumPy
+# spans — see ARCHITECTURE.md "Vectorized codec path" for measurements).
+# Sizing: REPRO_CODEC_THREADS always wins (0/1 disables); the default is
+# min(4, cpu_count) on hosts with >2 CPUs and DISABLED on <=2-CPU boxes,
+# where measurement shows even the GIL-releasing C codecs lose to the
+# handoff+contention cost (2 vCPUs are typically hyperthread siblings).
+# Leaf tasks never submit back into the pool, so a bounded worker count
+# cannot deadlock.
+
+_POOL: Optional[ThreadPoolExecutor] = None
+_POOL_SIZE = 0
+_POOL_LOCK = threading.Lock()
+_PAR_MIN_BATCH = 4          # payloads per batch before the pool pays off
+_PAR_MIN_BYTES = 1 << 16    # total bytes before the pool pays off
+
+
+def codec_pool_size() -> int:
+    env = os.environ.get("REPRO_CODEC_THREADS", "")
+    if env:
+        try:
+            return max(int(env), 0)
+        except ValueError:
+            return 0
+    cpus = os.cpu_count() or 1
+    return min(4, cpus) if cpus > 2 else 0
+
+
+def _codec_pool() -> Optional[ThreadPoolExecutor]:
+    global _POOL, _POOL_SIZE
+    size = codec_pool_size()
+    if size <= 1:
+        return None
+    with _POOL_LOCK:
+        if _POOL is None or _POOL_SIZE != size:
+            if _POOL is not None:
+                _POOL.shutdown(wait=False)
+            _POOL = ThreadPoolExecutor(max_workers=size,
+                                       thread_name_prefix="codec")
+            _POOL_SIZE = size
+        return _POOL
+
+
+def _parallel_map(fn: Callable[[bytes], bytes],
+                  payloads: Sequence[bytes]) -> List[bytes]:
+    """Order-preserving map over payloads, fanned across the shared pool
+    when the batch is big enough to amortize the handoff."""
+    if (len(payloads) >= _PAR_MIN_BATCH
+            and sum(map(len, payloads)) >= _PAR_MIN_BYTES):
+        pool = _codec_pool()
+        if pool is not None:
+            return list(pool.map(fn, payloads))
+    return [fn(p) for p in payloads]
 
 
 @runtime_checkable
@@ -133,11 +198,13 @@ class ByteCompressorCodec:
         self.backend = backend
 
     def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return [compress_bytes(p, level=self.level, backend=self.backend)
-                for p in payloads]
+        return _parallel_map(
+            lambda p: compress_bytes(p, level=self.level, backend=self.backend),
+            payloads)
 
     def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return [decompress_bytes(p, backend=self.backend) for p in payloads]
+        return _parallel_map(
+            lambda p: decompress_bytes(p, backend=self.backend), payloads)
 
 
 class DictCodec:
@@ -166,12 +233,14 @@ class DictCodec:
         self.backend = backend
 
     def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return [compress_bytes_dict(p, self.dictionary, level=self.level,
-                                    backend=self.backend) for p in payloads]
+        return _parallel_map(
+            lambda p: compress_bytes_dict(p, self.dictionary, level=self.level,
+                                          backend=self.backend), payloads)
 
     def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return [decompress_bytes_dict(p, self.dictionary, backend=self.backend)
-                for p in payloads]
+        return _parallel_map(
+            lambda p: decompress_bytes_dict(p, self.dictionary,
+                                            backend=self.backend), payloads)
 
 
 class PipelineCodec:

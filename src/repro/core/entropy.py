@@ -1,20 +1,66 @@
 """Shannon-entropy accounting (paper §3.6): theoretical limits and the
-compression-efficiency metric η = CR_actual / CR_theoretical."""
+compression-efficiency metric η = CR_actual / CR_theoretical — plus the
+byte-histogram primitive the rANS frequency tables are built from.
+
+``byte_histogram`` is the one entry point: vectorized ``np.bincount`` on
+CPU hosts, the Pallas one-hot-matmul histogram kernel
+(``repro.kernels.histogram``) when a non-CPU backend is attached — the
+same auto-routing convention the token-pack stage uses.  The rANS coders
+(``repro.core.rans_np`` / ``repro.core.rans``) and the bytes fast path of
+``shannon_entropy`` all feed from it, so frequency counting is vectorized
+everywhere on the codec hot path.
+"""
 
 from __future__ import annotations
 
 import math
 from collections import Counter
-from typing import Union
+from typing import Optional, Union
+
+import numpy as np
 
 Data = Union[str, bytes]
 
 
+def _device_histogram_available() -> bool:
+    """Route histograms through the Pallas kernel only when a non-CPU
+    backend is attached; on CPU the interpret-mode kernel loses to
+    ``np.bincount`` by orders of magnitude."""
+    try:
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover - jax is a hard dep of this repo
+        return False
+
+
+def byte_histogram(data, use_device: Optional[bool] = None) -> np.ndarray:
+    """256-bucket histogram of a byte payload (bytes or uint8 ndarray).
+
+    ``use_device=None`` auto-routes: Pallas histogram kernel on
+    accelerators, ``np.bincount`` on CPU.  Both paths are exact
+    (kernel parity is asserted in tests/test_kernels.py)."""
+    arr = (np.frombuffer(data, np.uint8)
+           if isinstance(data, (bytes, bytearray, memoryview))
+           else np.asarray(data, np.uint8))
+    if use_device is None:
+        use_device = _device_histogram_available()
+    if use_device and arr.size:
+        from repro.kernels.histogram import byte_histogram_device
+
+        return byte_histogram_device(arr)
+    return np.bincount(arr, minlength=256).astype(np.int64)
+
+
 def shannon_entropy(data: Data) -> float:
     """H(X) in bits/symbol over character (str) or byte (bytes) frequencies
-    (Eq. 23)."""
+    (Eq. 23).  Bytes take the vectorized histogram path."""
     if len(data) == 0:
         return 0.0
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        counts = byte_histogram(data)
+        p = counts[counts > 0] / float(len(data))
+        return float(-(p * np.log2(p)).sum())
     counts = Counter(data)
     n = len(data)
     return -sum((c / n) * math.log2(c / n) for c in counts.values())

@@ -137,6 +137,21 @@ def _pick_prob_bits(n_present: int) -> int:
     return min(pb, 16)
 
 
+def _dense_histogram(dense: np.ndarray, n_present: int) -> np.ndarray:
+    """Frequency table for the dense-alphabet ids: the Pallas histogram
+    kernel when a non-CPU backend is attached (the table build is then as
+    device-resident as the coder itself), ``np.bincount`` on CPU hosts —
+    the same routing convention as `repro.core.entropy.byte_histogram`."""
+    if jax.default_backend() != "cpu":
+        from repro.kernels.histogram import token_histogram
+
+        return np.asarray(
+            token_histogram(jnp.asarray(dense, jnp.int32), int(n_present),
+                            interpret=False),
+            dtype=np.int64)
+    return np.bincount(dense, minlength=n_present)
+
+
 def _lane_split(ids: np.ndarray, lanes: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Round-robin split into [lanes, T] + validity mask + per-lane counts."""
     n = ids.size
@@ -162,7 +177,7 @@ def tokens_compress_device(ids, lanes: int = DEFAULT_LANES) -> bytes:
         alphabet = np.concatenate([alphabet, alphabet[-1:] + 1])
     n_present = alphabet.size
     prob_bits = _pick_prob_bits(n_present)
-    counts = np.bincount(dense, minlength=n_present)
+    counts = _dense_histogram(dense, n_present)
     freqs = normalize_freqs(counts, prob_bits)
 
     sym, val, _ = _lane_split(dense.astype(np.int32), lanes)

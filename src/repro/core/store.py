@@ -467,7 +467,9 @@ class ShardedPromptStore:
     def plan_batch(self, texts: Sequence[str], method: Optional[str] = None
                    ) -> Tuple[List[str], Dict[int, List[dict]]]:
         """Stage 1 of a group commit: dedupe against the index, compress
-        the new texts in one batched pipeline pass, reserve their `seq`
+        the new texts in one batched pipeline pass (the byte stage fans
+        records out over the shared codec thread pool, so the plan takes
+        the slowest record's time, not the sum), reserve their `seq`
         range, and group the planned entries by shard.  No file I/O — the
         heavy compression runs with no lock held, so an ingest dispatcher
         can plan the next flush while writer threads fsync the last one.

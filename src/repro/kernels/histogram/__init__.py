@@ -1,4 +1,4 @@
-from repro.kernels.histogram.ops import token_histogram
+from repro.kernels.histogram.ops import byte_histogram_device, token_histogram
 from repro.kernels.histogram.ref import histogram_ref
 
-__all__ = ["token_histogram", "histogram_ref"]
+__all__ = ["byte_histogram_device", "token_histogram", "histogram_ref"]

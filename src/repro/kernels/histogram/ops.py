@@ -24,3 +24,19 @@ def token_histogram(ids: jnp.ndarray, vocab_size: int,
     out = histogram_kernel(idsp, vocab_size + pad_v, block_n=block_n,
                            block_v=block_v, interpret=interpret)
     return out[:vocab_size]
+
+
+def byte_histogram_device(data, interpret: bool = False):
+    """256-bucket byte histogram on the accelerator — the rANS frequency
+    table builder for device-resident entropy coding.  Accepts bytes or a
+    uint8 ndarray; returns numpy int64 counts [256] (the shape
+    ``normalize_freqs`` consumes)."""
+    import numpy as np
+
+    arr = np.frombuffer(data, np.uint8) if isinstance(data, (bytes, bytearray, memoryview)) \
+        else np.asarray(data, np.uint8)
+    if arr.size == 0:
+        return np.zeros(256, np.int64)
+    counts = token_histogram(jnp.asarray(arr, jnp.int32), 256,
+                             interpret=interpret)
+    return np.asarray(counts, dtype=np.int64)

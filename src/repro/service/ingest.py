@@ -22,8 +22,10 @@ Group-commit state machine (one flush):
                                        OLDEST pending submission's age)
 
     FLUSH: dispatcher pops whole submissions until >= flush_batch texts,
-    plans them (one batched codec pass, no locks held), then enqueues one
-    commit per shard touched.  The flush is DONE when every shard part is
+    plans them (one batched codec pass, no locks held; the byte stage
+    fans records out over the shared codec thread pool — see
+    ``repro.core.codec`` — so a flush costs its slowest record, not the
+    sum), then enqueues one commit per shard touched.  The flush is DONE when every shard part is
     durable AND every earlier flush is done — completion is prefix-ORDERED
     like WAL group commit (a later ticket never completes before an
     earlier one), so on an error-free run `ticket.wait()` returning means
@@ -45,6 +47,7 @@ import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
+from repro.core.codec import codec_pool_size
 from repro.core.store import ShardedPromptStore, content_key
 
 
@@ -238,6 +241,9 @@ class IngestQueue:
                 "flush_batch": self.flush_batch,
                 "flush_interval_s": self.flush_interval_s,
                 "max_pending": self.max_pending,
+                # compression parallelism the dispatcher's plan_batch calls
+                # inherit (REPRO_CODEC_THREADS; 0/1 = sequential)
+                "codec_threads": codec_pool_size(),
             }
 
     # -- dispatcher ------------------------------------------------------------

@@ -180,8 +180,14 @@ class BPETokenizer:
             )
         else:
             self._special_re = None
-        # per-instance encode cache for repeated words
-        self._word_cache: Dict[bytes, Tuple[int, ...]] = {}
+        # Per-instance LRU memo over the merge loop: pre-tokenization makes
+        # words the unit of encoding (merges never cross word boundaries),
+        # and realistic text reuses a small working set of words, so the
+        # merge loop — the encode path's hot loop — runs only on cache
+        # misses.  lru_cache (vs the old never-evicting dict) keeps the
+        # memo bounded under adversarial/streaming vocabularies while C
+        # hashing keeps hits ~100ns.
+        self._encode_word = lru_cache(maxsize=1 << 18)(self._encode_word_miss)
 
     # -- properties ---------------------------------------------------------
 
@@ -208,10 +214,9 @@ class BPETokenizer:
 
     # -- encode -------------------------------------------------------------
 
-    def _encode_word(self, word: bytes) -> Tuple[int, ...]:
-        cached = self._word_cache.get(word)
-        if cached is not None:
-            return cached
+    def _encode_word_miss(self, word: bytes) -> Tuple[int, ...]:
+        """Apply merges to one word; reached only on `_encode_word` cache
+        misses (the lru_cache wrapper is built in __post_init__)."""
         syms: List[int] = list(word)
         ranks = self._ranks
         while len(syms) > 1:
@@ -225,10 +230,7 @@ class BPETokenizer:
                 break
             a, b = syms[best_idx], syms[best_idx + 1]
             syms = _merge_word(syms, (a, b), 256 + best_rank)
-        out = tuple(syms)
-        if len(self._word_cache) < 1_000_000:
-            self._word_cache[word] = out
-        return out
+        return tuple(syms)
 
     def encode(self, text: str) -> List[int]:
         """Text -> token ids. Special tokens are recognized and mapped."""

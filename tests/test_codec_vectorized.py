@@ -1,0 +1,343 @@
+"""Vectorized codec hot path: parity with the scalar oracles.
+
+Covers the three tentpole pieces of the vectorized rewrite:
+
+* LZ77 — the NumPy parse must produce *valid streams of the identical
+  wire format* (round-trip-identical; byte identity is promised only for
+  the scalar path, which small payloads and `REPRO_LZ_MODE=scalar` pin),
+  and either decoder must decode either compressor's output;
+* rANS — the interleaved N-lane coder must round-trip for every lane
+  count, reproduce the scalar oracle's word stream bit-for-bit at one
+  lane, and keep the single-lane blob layout byte-identical to the
+  historical format;
+* batch plumbing — the pooled byte-stage fan-out must be byte-identical
+  to sequential encoding.
+"""
+
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.entropy import byte_histogram
+from repro.core.lz77 import (_lz_compress_np, _lz_compress_scalar,
+                             _lz_decompress_np, _lz_decompress_scalar,
+                             lz_compress, lz_decompress)
+from repro.core.rans_np import (normalize_freqs, rans_compress_bytes,
+                                rans_decode_interleaved, rans_decompress_bytes,
+                                rans_encode, rans_encode_interleaved)
+from repro.core.zstd_backend import compress_bytes, decompress_bytes
+
+LANES = (1, 2, 4, 8)
+
+EDGE_PAYLOADS = [
+    b"",
+    b"a",
+    b"ab",
+    b"abc",
+    b"abcd" * 400,                     # period-4 run
+    b"\x00" * 5000,                    # zero page
+    b"x" * 3,
+    bytes(range(256)) * 24,            # incompressible-ish cycle
+    b"the quick brown fox " * 300,     # natural-ish text
+]
+EDGE_IDS = ["empty", "1B", "2B", "3B", "period4", "zeros", "tiny-run",
+            "cycle", "text"]
+
+
+@pytest.fixture(scope="module")
+def incompressible():
+    rng = np.random.default_rng(7)
+    return rng.integers(0, 256, 20000, dtype=np.uint8).tobytes()
+
+
+@pytest.fixture(scope="module")
+def corpus_blob():
+    from repro.data.corpus import generate_corpus
+
+    return "\n".join(p.text for p in generate_corpus(12, seed=3)).encode()
+
+
+# ---------------------------------------------------------------------------
+# LZ77 scalar <-> vectorized
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("payload", EDGE_PAYLOADS, ids=EDGE_IDS)
+def test_lz_cross_path_roundtrip_edges(payload):
+    """Either decoder decodes either compressor's output — the wire
+    format carries no producer mark."""
+    for comp_fn in (_lz_compress_scalar, _lz_compress_np):
+        blob = comp_fn(payload)
+        assert _lz_decompress_scalar(blob) == payload
+        assert _lz_decompress_np(blob) == payload
+
+
+def test_lz_cross_path_roundtrip_bulk(corpus_blob, incompressible):
+    for payload in (corpus_blob, incompressible):
+        for comp_fn in (_lz_compress_scalar, _lz_compress_np):
+            blob = comp_fn(payload)
+            assert _lz_decompress_scalar(blob) == payload
+            assert _lz_decompress_np(blob) == payload
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.binary(min_size=0, max_size=600),
+       prefix=st.binary(min_size=0, max_size=800))
+def test_lz_vectorized_prefix_property(data, prefix):
+    """Dictionary mode: vectorized compress/decompress against arbitrary
+    prefixes, cross-decoded by the scalar oracle."""
+    blob = _lz_compress_np(data, prefix=prefix)
+    assert _lz_decompress_scalar(blob, prefix=prefix) == data
+    assert _lz_decompress_np(blob, prefix=prefix) == data
+    # and the oracle's stream through the vectorized decoder
+    assert _lz_decompress_np(_lz_compress_scalar(data, prefix=prefix),
+                             prefix=prefix) == data
+
+
+def test_lz_prefix_dictionary_bulk(corpus_blob):
+    prefix = corpus_blob[:8192]
+    data = corpus_blob[8192:40000]
+    for comp_fn in (_lz_compress_scalar, _lz_compress_np):
+        blob = comp_fn(data, prefix=prefix)
+        assert _lz_decompress_np(blob, prefix=prefix) == data
+        assert _lz_decompress_scalar(blob, prefix=prefix) == data
+    # a dictionary should actually help on shared-structure payloads
+    assert len(_lz_compress_np(data, prefix=prefix)) <= len(_lz_compress_np(data))
+
+
+def test_lz_mode_env_forces_path(corpus_blob, monkeypatch):
+    data = corpus_blob[:30000]
+    monkeypatch.setenv("REPRO_LZ_MODE", "scalar")
+    assert lz_compress(data) == _lz_compress_scalar(data)
+    monkeypatch.setenv("REPRO_LZ_MODE", "vector")
+    assert lz_compress(data) == _lz_compress_np(data)
+    assert lz_decompress(lz_compress(data)) == data
+    monkeypatch.delenv("REPRO_LZ_MODE")
+    assert lz_decompress(lz_compress(data)) == data
+
+
+def test_lz_small_payloads_stay_scalar_byte_identical():
+    """Below the crossover the public entry point IS the scalar oracle —
+    every historical golden blob and dict-sidecar stream is unchanged."""
+    data = b"short payload " * 10  # < _NP_MIN_COMPRESS
+    assert lz_compress(data) == _lz_compress_scalar(data)
+
+
+def test_lz_run_probe_routes_zero_pages_scalar(monkeypatch):
+    monkeypatch.delenv("REPRO_LZ_MODE", raising=False)
+    z = b"\x00" * 100_000
+    assert lz_compress(z) == _lz_compress_scalar(z)
+
+
+# -- truncation / corruption -------------------------------------------------
+
+
+GOLDEN_BLOCK_DATA = b"hello hello hello world world banana " * 4
+
+
+@pytest.mark.parametrize("dec_fn", [_lz_decompress_scalar, _lz_decompress_np],
+                         ids=["scalar", "vector"])
+def test_lz_truncation_at_every_byte(dec_fn):
+    """Truncating a golden block at every byte position either raises the
+    pointed ValueError or decodes a clean prefix (cuts that land exactly
+    after a literal run are indistinguishable from a valid final
+    sequence) — never an IndexError, never garbage."""
+    golden = _lz_compress_scalar(GOLDEN_BLOCK_DATA)
+    for cut in range(len(golden)):
+        t = golden[:cut]
+        if cut == 0:
+            assert dec_fn(t) == b""
+            continue
+        try:
+            out = dec_fn(t)
+        except ValueError as e:
+            assert "corrupt LZ stream" in str(e)
+        else:
+            assert GOLDEN_BLOCK_DATA.startswith(out)
+
+
+def test_lz_truncation_paths_agree():
+    golden = _lz_compress_np(GOLDEN_BLOCK_DATA)
+    for cut in range(len(golden)):
+        outs = []
+        for dec_fn in (_lz_decompress_scalar, _lz_decompress_np):
+            try:
+                outs.append(dec_fn(golden[:cut]))
+            except ValueError:
+                outs.append(ValueError)
+        assert outs[0] == outs[1], f"paths disagree at cut {cut}"
+
+
+@pytest.mark.parametrize("dec_fn", [_lz_decompress_scalar, _lz_decompress_np],
+                         ids=["scalar", "vector"])
+def test_lz_corrupt_offsets_raise(dec_fn):
+    # zero offset: token with match, offset bytes 00 00
+    with pytest.raises(ValueError, match="zero offset"):
+        dec_fn(bytes([0x10]) + b"A" + b"\x00\x00" + b"\x00")
+    # offset before start of output
+    with pytest.raises(ValueError, match="offset before start"):
+        dec_fn(bytes([0x10]) + b"A" + b"\xff\xff" + b"\x00")
+
+
+# ---------------------------------------------------------------------------
+# rANS interleaved lanes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lanes", LANES)
+@pytest.mark.parametrize("payload", EDGE_PAYLOADS, ids=EDGE_IDS)
+def test_rans_lane_roundtrip_edges(lanes, payload):
+    blob = rans_compress_bytes(payload, lanes=lanes)
+    assert rans_decompress_bytes(blob) == payload
+
+
+@pytest.mark.parametrize("lanes", LANES)
+def test_rans_lane_roundtrip_bulk(lanes, corpus_blob, incompressible):
+    for payload in (corpus_blob[:50000], incompressible):
+        assert rans_decompress_bytes(
+            rans_compress_bytes(payload, lanes=lanes)) == payload
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.binary(min_size=0, max_size=2000),
+       lanes=st.sampled_from(LANES))
+def test_rans_lane_property(data, lanes):
+    assert rans_decompress_bytes(rans_compress_bytes(data, lanes=lanes)) == data
+
+
+def test_rans_single_lane_blob_byte_identical(corpus_blob):
+    """lanes=1 (and the auto route below the size threshold) must keep the
+    historical blob layout byte-for-byte — old readers parse it."""
+    data = corpus_blob[:3000]
+    symbols = np.frombuffer(data, np.uint8)
+    freqs = normalize_freqs(np.bincount(symbols, minlength=256))
+    words, state = rans_encode(symbols, freqs)
+    import struct
+
+    nonzero = np.flatnonzero(freqs)
+    assert nonzero.size < 171  # text: sparse table
+    expected = (struct.pack("<IBH", symbols.size, 12, nonzero.size)
+                + nonzero.astype("<u1").tobytes()
+                + freqs[nonzero].astype("<u2").tobytes()
+                + struct.pack("<II", state, words.size)
+                + words[::-1].astype("<u2").tobytes())
+    assert rans_compress_bytes(data, lanes=1) == expected
+    assert rans_compress_bytes(data) == expected  # auto -> single lane
+
+
+def test_rans_interleaved_lane1_matches_scalar_words(corpus_blob):
+    """One lane of the interleaved engine IS the scalar coder: identical
+    final state and word stream (only the serialization container differs)."""
+    symbols = np.frombuffer(corpus_blob[:9973], np.uint8)
+    freqs = normalize_freqs(np.bincount(symbols, minlength=256))
+    w_ref, st_ref = rans_encode(symbols, freqs)
+    w_vec, states = rans_encode_interleaved(symbols, freqs, 1)
+    assert int(states[0]) == st_ref
+    assert np.array_equal(w_vec[::-1], w_ref)  # vec stores forward order
+    out = rans_decode_interleaved(w_vec, states, symbols.size, freqs, 1)
+    assert np.array_equal(out, symbols)
+
+
+def test_rans_multilane_header_flag(corpus_blob):
+    blob1 = rans_compress_bytes(corpus_blob[:3000], lanes=1)
+    blob8 = rans_compress_bytes(corpus_blob[:3000], lanes=8)
+    assert blob1[4] == 12          # plain prob_bits byte
+    assert blob8[4] == (12 | 0x80)  # interleaved flag
+    assert blob8[5] == 3           # log2(8)
+    assert rans_decompress_bytes(blob8) == rans_decompress_bytes(blob1)
+
+
+def test_rans_lanes_validation():
+    with pytest.raises(ValueError, match="power of two"):
+        rans_compress_bytes(b"xy", lanes=3)
+    with pytest.raises(ValueError, match="power of two"):
+        rans_compress_bytes(b"xy", lanes=2048)
+
+
+def test_rans_auto_lane_env_override(corpus_blob, monkeypatch):
+    monkeypatch.setenv("REPRO_RANS_LANES", "4")
+    blob = rans_compress_bytes(corpus_blob[:3000])
+    assert blob[4] & 0x80 and blob[5] == 2
+    assert rans_decompress_bytes(blob) == corpus_blob[:3000]
+
+
+def test_rans_single_symbol_full_table():
+    """A one-symbol alphabet puts freq == 2**prob_bits in the table
+    (x_max == 2**32) — the uint64 lanes must carry it."""
+    data = b"\x07" * 9000
+    for lanes in LANES:
+        assert rans_decompress_bytes(rans_compress_bytes(data, lanes=lanes)) == data
+
+
+# ---------------------------------------------------------------------------
+# repro-lz / repro-lzr end to end + batch pool
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["repro-lz", "repro-lzr"])
+def test_backend_roundtrip_both_modes(backend, corpus_blob, monkeypatch):
+    data = corpus_blob[:40000]
+    blobs = {}
+    for mode in ("scalar", "vector"):
+        monkeypatch.setenv("REPRO_LZ_MODE", mode)
+        blobs[mode] = compress_bytes(data, backend=backend)
+        assert decompress_bytes(blobs[mode], backend=backend) == data
+    # cross-mode: scalar-written stores decode under vector mode & back
+    monkeypatch.setenv("REPRO_LZ_MODE", "vector")
+    assert decompress_bytes(blobs["scalar"], backend=backend) == data
+    monkeypatch.setenv("REPRO_LZ_MODE", "scalar")
+    assert decompress_bytes(blobs["vector"], backend=backend) == data
+
+
+def test_batch_pool_byte_identical(corpus_blob, monkeypatch):
+    """The pooled byte-stage fan-out must not change a single output byte
+    vs sequential encoding (order-preserving pool.map)."""
+    from repro.core.codec import ByteCompressorCodec
+
+    payloads = [corpus_blob[i * 4096 : (i + 1) * 4096] for i in range(24)]
+    codec = ByteCompressorCodec(backend="repro-lzr")
+    monkeypatch.setenv("REPRO_CODEC_THREADS", "3")
+    pooled = codec.encode_batch(payloads)
+    monkeypatch.setenv("REPRO_CODEC_THREADS", "0")
+    sequential = codec.encode_batch(payloads)
+    assert pooled == sequential
+    monkeypatch.setenv("REPRO_CODEC_THREADS", "3")
+    assert codec.decode_batch(pooled) == payloads
+
+
+def test_compressor_batch_identical_with_pool(monkeypatch):
+    from repro.core.api import PromptCompressor
+    from repro.tokenizer.vocab import default_tokenizer
+
+    texts = [f"prompt number {i}: the quick brown fox " * 40 for i in range(8)]
+    pc = PromptCompressor(default_tokenizer(), method="hybrid")
+    monkeypatch.setenv("REPRO_CODEC_THREADS", "2")
+    batch = pc.compress_batch(texts)
+    singles = [pc.compress(t) for t in texts]
+    assert batch == singles
+    assert pc.decompress_batch(batch) == texts
+
+
+# ---------------------------------------------------------------------------
+# histogram primitive
+# ---------------------------------------------------------------------------
+
+
+def test_byte_histogram_matches_bincount(incompressible):
+    counts = byte_histogram(incompressible)
+    ref = np.bincount(np.frombuffer(incompressible, np.uint8), minlength=256)
+    assert np.array_equal(counts, ref)
+    assert byte_histogram(b"").sum() == 0
+
+
+def test_byte_histogram_device_parity(incompressible):
+    """Pallas (interpret-mode on CPU) histogram == bincount — the table
+    the device rANS coder builds is exact."""
+    from repro.kernels.histogram import byte_histogram_device
+
+    counts = byte_histogram_device(incompressible[:4096], interpret=True)
+    ref = np.bincount(np.frombuffer(incompressible[:4096], np.uint8),
+                      minlength=256)
+    assert np.array_equal(counts, ref)
