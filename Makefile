@@ -4,9 +4,11 @@
 #   make test        full tier-1 (slow + concurrency included)
 #   make bench       the full benchmark sweep (writes BENCH_*.json)
 #   make bench-codec the codec hot-path sweep alone (BENCH_codec_throughput.json)
+#   make bench-kernels the device-kernel parity gate + accelerator sweeps
+#                    (BENCH_kernel_codec.json; timings SKIP on CPU hosts)
 PY := PYTHONPATH=src python
 
-.PHONY: quick crash test bench bench-codec
+.PHONY: quick crash test bench bench-codec bench-kernels
 
 quick:
 	bash scripts/check.sh
@@ -22,3 +24,6 @@ bench:
 
 bench-codec:
 	PYTHONPATH=src:. python benchmarks/codec_throughput.py
+
+bench-kernels:
+	PYTHONPATH=src:. python benchmarks/kernel_throughput.py

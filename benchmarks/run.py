@@ -26,6 +26,7 @@ MODULES = [
     ("service_throughput", "service_throughput"),
     ("dist_grad_compress", "grad_compress"),
     ("codec_throughput", "codec_throughput"),
+    ("kernel_codec", "kernel_throughput"),
 ]
 
 

@@ -343,11 +343,17 @@ class PromptCompressor:
                 out[i] = raw.decode("utf-8")
         return out  # type: ignore[return-value]
 
-    def tokens(self, blob: bytes) -> np.ndarray:
+    def tokens(self, blob: bytes, to_device: bool = False) -> np.ndarray:
         """Token-stream mode on a framed blob (no detokenization)."""
-        return self.tokens_batch([blob])[0]
+        return self.tokens_batch([blob], to_device=to_device)[0]
 
-    def tokens_batch(self, blobs: Sequence[bytes]) -> List[np.ndarray]:
+    def tokens_batch(self, blobs: Sequence[bytes],
+                     to_device: bool = False) -> List[np.ndarray]:
+        """Framed blobs -> token-id arrays.  ``to_device=True`` lands the
+        arrays in device memory (jnp uint32) — serve-path decompress-to-
+        tokens hands them to model input staging without a host round
+        trip (the byte-stage undo stays on host; only the final unpack
+        uploads)."""
         infos = [parse_frame(b) for b in blobs]
         out: List[Optional[np.ndarray]] = [None] * len(blobs)
         groups: Dict[tuple, List[int]] = {}
@@ -372,10 +378,15 @@ class PromptCompressor:
             if method == "zstd":
                 ids = [np.asarray(self.tokenizer.encode(p.decode("utf-8")),
                                   dtype=np.uint32) for p in payloads]
+                if to_device:
+                    import jax.numpy as jnp
+
+                    ids = [jnp.asarray(a) for a in ids]
             else:
                 pack_stage = self.pipeline(method, backend).stages[0]
                 assert isinstance(pack_stage, TokenPackCodec)
-                ids = pack_stage.decode_ids_batch(payloads)
+                ids = pack_stage.decode_ids_batch(payloads,
+                                                  to_device=to_device)
             for i, arr in zip(members, ids):
                 out[i] = arr
         return out  # type: ignore[return-value]

@@ -125,15 +125,10 @@ class Codec(Protocol):
 # ---------------------------------------------------------------------------
 
 
-def _device_packing_available() -> bool:
-    """Use the Pallas batch path only when a non-CPU backend is attached;
-    on CPU the interpret-mode kernel loses to vectorized NumPy."""
-    try:
-        import jax
-
-        return jax.default_backend() != "cpu"
-    except Exception:  # pragma: no cover - jax is a hard dep of this repo
-        return False
+# device-packing crossover (total ids across the batch): one kernel
+# launch per width group still has to beat per-stream NumPy casts;
+# override with REPRO_PACK_DEVICE_MIN when re-tuning
+_PACK_DEVICE_MIN_IDS = 1 << 14
 
 
 class TokenPackCodec:
@@ -160,9 +155,12 @@ class TokenPackCodec:
 
     def encode_ids_batch(self, ids_list: Sequence[np.ndarray]) -> List[bytes]:
         if self.scheme == "fixed":
-            use_device = (self.use_device if self.use_device is not None
-                          else _device_packing_available())
-            if use_device:
+            from repro.core import device as _device
+
+            total = sum(np.asarray(ids).size for ids in ids_list)
+            if _device.use_device(total, "REPRO_PACK_DEVICE_MIN",
+                                  _PACK_DEVICE_MIN_IDS,
+                                  force=self.use_device):
                 import jax
 
                 from repro.kernels.token_pack import pack_fixed_batch_device
@@ -173,7 +171,26 @@ class TokenPackCodec:
                     ids_list, interpret=jax.default_backend() == "cpu")
         return [packing.pack_tokens(ids, self.scheme) for ids in ids_list]
 
-    def decode_ids_batch(self, payloads: Sequence[bytes]) -> List[np.ndarray]:
+    def decode_ids_batch(self, payloads: Sequence[bytes],
+                         to_device: bool = False) -> List[np.ndarray]:
+        """Packed payloads -> token-id arrays.  ``to_device=True`` lands
+        each array in device memory (jnp uint32) instead of host NumPy —
+        the serve path's decompress-to-tokens feeds model input staging
+        without a host round trip.  Fixed-width payloads byte-combine on
+        device; varint formats decode on host and upload."""
+        if to_device:
+            import jax.numpy as jnp
+
+            from repro.kernels.token_pack import unpack_fixed_device
+
+            out = []
+            for p in payloads:
+                fmt = p[0] if len(p) else packing.FMT_U16
+                if fmt in packing._FIXED:
+                    out.append(unpack_fixed_device(p))
+                else:
+                    out.append(jnp.asarray(packing.unpack_tokens(p)))
+            return out
         return [packing.unpack_tokens(p) for p in payloads]
 
     # -- Codec protocol ----------------------------------------------------

@@ -1,0 +1,59 @@
+"""Central device-dispatch policy for the codec tier.
+
+Every codec stage with a Pallas kernel behind it (histogram, token
+packing, LZ77 match finding, lane-parallel rANS) asks the same two
+questions before leaving the host:
+
+1. is a non-CPU JAX backend actually attached?  On CPU hosts the
+   interpret-mode kernels lose to vectorized NumPy by orders of
+   magnitude, so the device path is never taken implicitly there;
+2. is the payload big enough to amortize the host->device->host round
+   trip?  Tiny payloads pay more in dispatch + transfer than the kernel
+   saves — each call site carries a measured crossover, overridable by
+   an env knob for re-tuning on new hardware.
+
+Keeping the answers here (instead of one private helper per module, as
+the histogram and token-pack stages originally grew) means the routing
+policy is uniform and testable in one place.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+def backend_available() -> bool:
+    """True iff JAX has a non-CPU backend attached."""
+    try:
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover - jax is a hard dep of this repo
+        return False
+
+
+def crossover(env_var: str, default: int) -> int:
+    """Payload-size floor (bytes/elements) for taking a device path.
+
+    Reads ``env_var`` fresh on every call so benchmarks and tests can
+    re-tune without reimporting; invalid values fall back to the
+    measured default rather than raising.
+    """
+    raw = os.environ.get(env_var, "")
+    if raw:
+        try:
+            return max(int(raw), 0)
+        except ValueError:
+            pass
+    return default
+
+
+def use_device(size: int, env_var: str, default_min: int,
+               force: Optional[bool] = None) -> bool:
+    """The standard routing decision: explicit ``force`` wins, otherwise
+    a non-CPU backend must be attached and ``size`` must clear the
+    crossover."""
+    if force is not None:
+        return force
+    return backend_available() and size >= crossover(env_var, default_min)

@@ -21,34 +21,37 @@ import numpy as np
 
 Data = Union[str, bytes]
 
-
-def _device_histogram_available() -> bool:
-    """Route histograms through the Pallas kernel only when a non-CPU
-    backend is attached; on CPU the interpret-mode kernel loses to
-    ``np.bincount`` by orders of magnitude."""
-    try:
-        import jax
-
-        return jax.default_backend() != "cpu"
-    except Exception:  # pragma: no cover - jax is a hard dep of this repo
-        return False
+# device-histogram crossover (bytes): even with an accelerator attached,
+# small payloads pay more in upload + dispatch than the one-hot matmul
+# saves — measured on the kernel_throughput sweep; override with
+# REPRO_HIST_DEVICE_MIN when re-tuning on new hardware
+_DEVICE_MIN_BYTES = 1 << 15
 
 
 def byte_histogram(data, use_device: Optional[bool] = None) -> np.ndarray:
     """256-bucket histogram of a byte payload (bytes or uint8 ndarray).
 
-    ``use_device=None`` auto-routes: Pallas histogram kernel on
-    accelerators, ``np.bincount`` on CPU.  Both paths are exact
-    (kernel parity is asserted in tests/test_kernels.py)."""
+    ``use_device=None`` auto-routes through the shared policy in
+    ``repro.core.device``: the Pallas histogram kernel only when a
+    non-CPU backend is attached *and* the payload clears the
+    ``REPRO_HIST_DEVICE_MIN`` crossover; ``np.bincount`` otherwise.
+    Both paths are exact (kernel parity is asserted in
+    tests/test_kernels.py)."""
     arr = (np.frombuffer(data, np.uint8)
            if isinstance(data, (bytes, bytearray, memoryview))
            else np.asarray(data, np.uint8))
-    if use_device is None:
-        use_device = _device_histogram_available()
-    if use_device and arr.size:
+    from repro.core import device as _device
+
+    if _device.use_device(arr.size, "REPRO_HIST_DEVICE_MIN",
+                          _DEVICE_MIN_BYTES, force=use_device) and arr.size:
+        import jax
+
         from repro.kernels.histogram import byte_histogram_device
 
-        return byte_histogram_device(arr)
+        # compiled kernel on real accelerators; interpret mode only when
+        # the device path is forced on a CPU host (tests, parity smokes)
+        return byte_histogram_device(
+            arr, interpret=jax.default_backend() == "cpu")
     return np.bincount(arr, minlength=256).astype(np.int64)
 
 

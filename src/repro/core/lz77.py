@@ -25,11 +25,20 @@ Two implementations share that wire format:
   vectorized candidate table sees *every* position while the scalar
   loop seeds sparsely inside matches.
 
-Either path decodes the other's output — the format carries no
-producer mark.  ``REPRO_LZ_MODE=scalar|vector|auto`` (env) forces a
-path; ``auto`` (default) routes on payload size and a cheap byte-run
-probe (run-dominated inputs like zero pages stay scalar, whose
-skip-ahead loop beats any per-position vectorization).
+A third, **device** variant reuses the vectorized path's candidate
+contract but runs the match-finding stage (gram/hash build, head-table
+scatter, batched extension) on the accelerator via
+``repro.kernels.lz_match``; greedy selection and sequence emit are the
+*same host code* as the vectorized path, so its output is byte-identical
+to the vectorized parse.
+
+Every path decodes the others' output — the format carries no
+producer mark.  ``REPRO_LZ_MODE=scalar|vector|device|auto`` (env)
+forces a path; ``auto`` (default) routes on payload size and a cheap
+byte-run probe (run-dominated inputs like zero pages stay scalar, whose
+skip-ahead loop beats any per-position vectorization), and takes the
+device match finder only when a non-CPU backend is attached and the
+payload clears ``REPRO_LZ_DEVICE_MIN`` (see ``repro.core.device``).
 
 Dictionary (prefix) mode: ``lz_compress(data, prefix=d)`` seeds the
 match window with ``d`` — matches may reach back into the dictionary,
@@ -63,6 +72,10 @@ _SCAN_BLOCK = 1024          # head-table scatter granularity: candidates are
                             # buy ~1% ratio for measurably slower scans
 _EXT_ROUNDS = 3             # eager extension: 8-byte grams, cap 4+8*rounds
 _RUN_PROBE = 8192           # bytes sampled by the run-dominance probe
+_DEVICE_MIN_COMPRESS = 1 << 20   # auto-mode device crossover (bytes): the
+                            # candidate stage must amortize the byte
+                            # upload + ok/cand/mlen download; override
+                            # with REPRO_LZ_DEVICE_MIN after re-measuring
 _DECODE_MAX_ROUNDS = 64     # frontier-batch rounds before python fallback
 
 # Seeded match tables per dictionary (scalar path): a dict-primed compress
@@ -78,7 +91,7 @@ _PREFIX_TABLES_LOCK = threading.Lock()
 
 def _lz_mode() -> str:
     mode = os.environ.get("REPRO_LZ_MODE", "auto")
-    return mode if mode in ("scalar", "vector", "auto") else "auto"
+    return mode if mode in ("scalar", "vector", "device", "auto") else "auto"
 
 
 def _seeded_table(prefix: bytes) -> dict:
@@ -286,18 +299,17 @@ def _lz_decompress_scalar(comp: bytes, prefix: bytes = b"") -> bytes:
 # ---------------------------------------------------------------------------
 
 
-def _lz_compress_np(data: bytes, prefix: bytes = b"") -> bytes:
-    """Vectorized greedy parse: hashed head-table candidates + batched
-    8-byte-gram extension + jump-table selection + fused sequence emit."""
-    plen = len(prefix)
-    buf = prefix + data if plen else data
-    n = len(buf)
-    if n == plen:
-        return b""
-    limit = n - _MIN_MATCH
-    if limit < plen:
-        return _only_literals(buf, plen, n)
-    arr = np.frombuffer(buf, np.uint8)
+def _candidates_np(buf: bytes, plen: int, n: int):
+    """Candidate stage of the vectorized parse: hashed head-table
+    candidates + batched 8-byte-gram extension.
+
+    Returns ``(ok, cand, mlen)`` over the ``n - 3`` positions holding a
+    full 4-gram: ``ok`` marks positions with a verified in-window
+    candidate, ``cand`` its source position, ``mlen`` the match length —
+    exact when positive, a *lazy* marker when negative (cap survivors and
+    out-of-room tails; ``_select_emit`` resolves those by memcmp).  The
+    device match finder (``repro.kernels.lz_match``) produces the same
+    contract, so both feed one shared selection/emit."""
     nv = n - 3   # positions holding a full 4-gram (valid match starts)
     n8 = n - 7   # positions holding a full 8-gram (extension bound)
     # every 4-gram as a little-endian uint32, via a 1-byte-strided view
@@ -379,7 +391,16 @@ def _lz_compress_np(data: bytes, prefix: bytes = b"") -> bytes:
         mlen[i_act] *= -1
     for lt in lazy_tails:
         mlen[lt] *= -1
+    return ok, cand, mlen
 
+
+def _select_emit(buf: bytes, plen: int, n: int, ok: np.ndarray,
+                 cand: np.ndarray, mlen: np.ndarray) -> bytes:
+    """Greedy selection + fused sequence emit over a candidate triple
+    (shared by the NumPy and device match finders — this is the half that
+    freezes the wire format)."""
+    arr = np.frombuffer(buf, np.uint8)
+    nv = n - 3
     # greedy selection: ok-byte probe + match-length jumps.  178K-sequence
     # streams spend ~60ms here; everything the loop touches is O(1) —
     # bytes for the candidate test, a C array for lengths.
@@ -463,6 +484,40 @@ def _lz_compress_np(data: bytes, prefix: bytes = b"") -> bytes:
         final += _ext_len(fin_ll - 15)
     final += buf[fin_ls:n]
     return bytes(final)
+
+
+def _lz_compress_np(data: bytes, prefix: bytes = b"") -> bytes:
+    """Vectorized greedy parse: hashed head-table candidates + batched
+    8-byte-gram extension + jump-table selection + fused sequence emit."""
+    plen = len(prefix)
+    buf = prefix + data if plen else data
+    n = len(buf)
+    if n == plen:
+        return b""
+    if n - _MIN_MATCH < plen:
+        return _only_literals(buf, plen, n)
+    ok, cand, mlen = _candidates_np(buf, plen, n)
+    return _select_emit(buf, plen, n, ok, cand, mlen)
+
+
+def _lz_compress_device(data: bytes, prefix: bytes = b"") -> bytes:
+    """Device greedy parse: the candidate stage (gram/hash build,
+    head-table scatter, batched extension) runs as Pallas kernels + XLA
+    scatter via ``repro.kernels.lz_match``; selection/emit is the same
+    host code as the NumPy path, so the emitted stream is byte-identical
+    to ``_lz_compress_np`` (asserted across the parity corpus in
+    tests/test_kernel_codec.py)."""
+    from repro.kernels.lz_match import lz_candidates_device
+
+    plen = len(prefix)
+    buf = prefix + data if plen else data
+    n = len(buf)
+    if n == plen:
+        return b""
+    if n - _MIN_MATCH < plen:
+        return _only_literals(buf, plen, n)
+    ok, cand, mlen = lz_candidates_device(buf, plen)
+    return _select_emit(buf, plen, n, ok, cand, mlen)
 
 
 def _lz_decompress_np(comp: bytes, prefix: bytes = b"") -> bytes:
@@ -618,12 +673,19 @@ def lz_compress(data: bytes, prefix: bytes = b"") -> bytes:
     loop is faster than any per-position vectorized scan.
     """
     mode = _lz_mode()
+    if mode == "device":
+        return _lz_compress_device(data, prefix)
     if mode == "scalar" or (mode == "auto" and len(data) < _NP_MIN_COMPRESS):
         return _lz_compress_scalar(data, prefix)
     if mode == "auto":
         probe = np.frombuffer(data[:_RUN_PROBE], np.uint8)
         if probe.size > 16 and float((probe[1:] == probe[:-1]).mean()) > 0.5:
             return _lz_compress_scalar(data, prefix)
+        from repro.core import device as _device
+
+        if _device.use_device(len(data), "REPRO_LZ_DEVICE_MIN",
+                              _DEVICE_MIN_COMPRESS):
+            return _lz_compress_device(data, prefix)
     return _lz_compress_np(data, prefix)
 
 

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import os
 import struct
+import warnings
 from typing import Optional, Tuple
 
 import numpy as np
@@ -54,6 +55,63 @@ _STATE_LOW = 1 << 16  # renormalization lower bound
 # so per-step vector width amortizes numpy dispatch
 _LANES_MIN_BYTES = 4096
 _LANES_MAX = 1024
+
+# auto-mode crossover for the device lane-parallel kernels: below this the
+# upload + per-call dispatch beats the lockstep win; override with
+# REPRO_RANS_DEVICE_MIN after re-measuring (benchmarks/kernel_throughput.py)
+_DEVICE_MIN_BYTES = 1 << 16
+
+
+def _use_device_rans(n: int) -> bool:
+    """REPRO_RANS_MODE routing: ``numpy`` forces the host coder,
+    ``device`` forces the Pallas lane kernels (interpret mode on CPU —
+    tests/parity smokes), ``auto`` (default) takes the device only when a
+    non-CPU backend is attached and the payload clears the crossover."""
+    mode = os.environ.get("REPRO_RANS_MODE", "auto")
+    if mode == "device":
+        return True
+    if mode != "auto":
+        return False
+    from repro.core import device as _device
+
+    return _device.use_device(n, "REPRO_RANS_DEVICE_MIN", _DEVICE_MIN_BYTES)
+
+
+def _env_lanes() -> Optional[int]:
+    """``REPRO_RANS_LANES``, sanitized.  Env input never raises — the
+    explicit ``lanes=`` argument keeps strict validation: unset, empty or
+    ``0`` mean auto (``0`` mirrors ``REPRO_CODEC_THREADS=0``); garbage
+    and negatives fall back to auto with a warning; values above
+    ``_LANES_MAX`` or non-powers-of-two clamp down with a warning."""
+    raw = os.environ.get("REPRO_RANS_LANES", "")
+    if not raw:
+        return None
+    try:
+        val = int(raw)
+    except ValueError:
+        warnings.warn(
+            f"REPRO_RANS_LANES={raw!r} is not an integer; using auto lanes",
+            RuntimeWarning, stacklevel=3)
+        return None
+    if val == 0:
+        return None
+    if val < 0:
+        warnings.warn(
+            f"REPRO_RANS_LANES={val} is negative; using auto lanes",
+            RuntimeWarning, stacklevel=3)
+        return None
+    if val > _LANES_MAX:
+        warnings.warn(
+            f"REPRO_RANS_LANES={val} exceeds the maximum; "
+            f"clamping to {_LANES_MAX}", RuntimeWarning, stacklevel=3)
+        return _LANES_MAX
+    if val & (val - 1):
+        p2 = 1 << (val.bit_length() - 1)
+        warnings.warn(
+            f"REPRO_RANS_LANES={val} is not a power of two; "
+            f"clamping to {p2}", RuntimeWarning, stacklevel=3)
+        return p2
+    return val
 
 
 def normalize_freqs(counts: np.ndarray, prob_bits: int = PROB_BITS_DEFAULT) -> np.ndarray:
@@ -285,12 +343,9 @@ def rans_compress_bytes(data: bytes, prob_bits: int = PROB_BITS_DEFAULT,
     if symbols.size == 0:
         return struct.pack("<IBH", 0, prob_bits, 0)
     if lanes is None:
-        try:
-            lanes = int(os.environ.get("REPRO_RANS_LANES", ""))
-        except ValueError:
-            lanes = 0
-        if lanes < 1:  # unset / 0 / garbage: auto (same spirit as
-            lanes = _auto_lanes(symbols.size)  # REPRO_CODEC_THREADS=0)
+        lanes = _env_lanes()
+        if lanes is None:
+            lanes = _auto_lanes(symbols.size)
     if lanes & (lanes - 1) or not 1 <= lanes <= _LANES_MAX:
         raise ValueError(f"lanes must be a power of two in 1..{_LANES_MAX}")
     freqs, table, asize = _freq_table(symbols, prob_bits)
@@ -300,7 +355,16 @@ def rans_compress_bytes(data: bytes, prob_bits: int = PROB_BITS_DEFAULT,
         tail = (struct.pack("<II", state, words.size)
                 + words[::-1].astype("<u2").tobytes())
         return header + table + tail
-    words, states = rans_encode_interleaved(symbols, freqs, lanes, prob_bits)
+    # the single-symbol alphabet (f == 2**prob_bits) overflows the device
+    # kernel's uint32 x_max; only the NumPy uint64 lanes handle it
+    if asize > 1 and _use_device_rans(symbols.size):
+        from repro.kernels.rans_lanes import rans_encode_interleaved_device
+
+        words, states = rans_encode_interleaved_device(
+            symbols, freqs, lanes, prob_bits)
+    else:
+        words, states = rans_encode_interleaved(
+            symbols, freqs, lanes, prob_bits)
     header = struct.pack("<IBBH", symbols.size, prob_bits | 0x80,
                          lanes.bit_length() - 1, asize)
     return (header + table + states.astype("<u4").tobytes()
@@ -320,21 +384,33 @@ def _read_freq_table(blob: bytes, asize: int, off: int) -> Tuple[np.ndarray, int
     return freqs, off + 2 * asize
 
 
+def _parse_interleaved(blob: bytes):
+    """Header/table/state/word fields of a multi-lane blob."""
+    n, pbb, lane_exp, asize = struct.unpack_from("<IBBH", blob, 0)
+    lanes = 1 << lane_exp
+    freqs, off = _read_freq_table(blob, asize, 8)
+    states = np.frombuffer(blob, dtype="<u4", count=lanes, offset=off)
+    off += 4 * lanes
+    (n_words,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    words = np.frombuffer(blob, dtype="<u2", count=n_words, offset=off)
+    return n, pbb & 0x7F, lanes, asize, freqs, states, words
+
+
 def rans_decompress_bytes(blob: bytes) -> bytes:
     n, prob_bits, = struct.unpack_from("<IB", blob, 0)
     if n == 0:
         return b""
     if prob_bits & 0x80:  # interleaved layout
-        n, pbb, lane_exp, asize = struct.unpack_from("<IBBH", blob, 0)
-        lanes = 1 << lane_exp
-        freqs, off = _read_freq_table(blob, asize, 8)
-        states = np.frombuffer(blob, dtype="<u4", count=lanes, offset=off)
-        off += 4 * lanes
-        (n_words,) = struct.unpack_from("<I", blob, off)
-        off += 4
-        words = np.frombuffer(blob, dtype="<u2", count=n_words, offset=off)
-        out = rans_decode_interleaved(words, states, n, freqs, lanes,
-                                      pbb & 0x7F)
+        n, pb, lanes, asize, freqs, states, words = _parse_interleaved(blob)
+        if asize > 1 and _use_device_rans(n):
+            from repro.kernels.rans_lanes import \
+                rans_decode_interleaved_device
+
+            out = rans_decode_interleaved_device(
+                words, states, n, freqs, lanes, pb)
+        else:
+            out = rans_decode_interleaved(words, states, n, freqs, lanes, pb)
         return out.tobytes()
     n, prob_bits, asize = struct.unpack_from("<IBH", blob, 0)
     freqs, off = _read_freq_table(blob, asize, 7)
@@ -343,3 +419,24 @@ def rans_decompress_bytes(blob: bytes) -> bytes:
     words = np.frombuffer(blob, dtype="<u2", count=n_words, offset=off)[::-1]
     out = rans_decode(words, state, n, freqs, prob_bits)
     return out.astype(np.uint8).tobytes()
+
+
+def rans_decompress_to_device(blob: bytes):
+    """Decode a blob into a **device-resident** uint8 array (a jnp array)
+    — the serve path's decompress-to-tokens hands this straight to the
+    token-unpack stage without a host byte round trip.  Layouts the lane
+    kernel doesn't cover (single-lane, empty, single-symbol alphabet)
+    decode on the host and upload."""
+    import jax.numpy as jnp
+
+    n, prob_bits, = struct.unpack_from("<IB", blob, 0)
+    if n and prob_bits & 0x80:
+        n, pb, lanes, asize, freqs, states, words = _parse_interleaved(blob)
+        if asize > 1:
+            from repro.kernels.rans_lanes import \
+                rans_decode_interleaved_device
+
+            return rans_decode_interleaved_device(
+                words, states, n, freqs, lanes, pb, to_host=False)
+    return jnp.asarray(
+        np.frombuffer(rans_decompress_bytes(blob), np.uint8))

@@ -1,0 +1,4 @@
+from repro.kernels.lz_match.ops import lz_candidates_device
+from repro.kernels.lz_match.ref import lz_candidates_ref
+
+__all__ = ["lz_candidates_device", "lz_candidates_ref"]

@@ -1,0 +1,131 @@
+"""Pallas TPU kernels for the LZ77 match finder (repro-lz hot path).
+
+The NumPy fast path of ``repro.core.lz77`` already expresses match
+finding as array passes; the two dense, regular passes move into Pallas
+kernels here, and the irregular one (the hashed head-table scatter) runs
+as a jitted XLA scatter-max loop in ops.py — scatter is accelerator-
+native in XLA, while a 2^20-bucket one-hot matmul inside a kernel is
+not.
+
+* ``gram_hash_kernel`` — byte stream -> per-position little-endian
+  4-gram u32 (``v[i]`` is also the low half of the 8-gram at ``i``, so
+  the extension stage gathers from the same array) and its
+  multiplicative hash.  Elementwise over four shifted byte planes
+  (the shifts are free XLA slices), the same thin-kernel split the
+  token-pack byte-split kernel uses.
+* ``match_extend_kernel`` — batched 8-gram XOR match extension + the
+  per-position length reduction: given XOR'd gram planes for
+  ``_EXT_ROUNDS`` rounds, a branch-free state machine accumulates the
+  exact match length (trailing-zero-byte count of the first mismatching
+  gram) and flags cap survivors / out-of-room positions *lazy*
+  (negative length), which the host's greedy selection resolves by
+  memcmp — the identical contract the NumPy path hands it.
+
+Greedy sequence selection and emit stay on the host: selection is an
+inherently serial jump loop, and keeping it shared between the NumPy
+and device paths is what freezes the wire format.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 4096
+_HASH_MUL = 2654435761
+
+
+def _gram_hash_kernel(b0_ref, b1_ref, b2_ref, b3_ref, v_ref, h_ref, *,
+                      hash_bits: int):
+    b0 = b0_ref[...].astype(jnp.uint32)
+    b1 = b1_ref[...].astype(jnp.uint32)
+    b2 = b2_ref[...].astype(jnp.uint32)
+    b3 = b3_ref[...].astype(jnp.uint32)
+    v = b0 | (b1 << jnp.uint32(8)) | (b2 << jnp.uint32(16)) \
+        | (b3 << jnp.uint32(24))
+    v_ref[...] = v
+    h_ref[...] = ((v * jnp.uint32(_HASH_MUL))
+                  >> jnp.uint32(32 - hash_bits)).astype(jnp.int32)
+
+
+def gram_hash_kernel(b0, b1, b2, b3, *, hash_bits: int,
+                     block_m: int = DEFAULT_BLOCK_M,
+                     interpret: bool = False):
+    """Four shifted byte planes [M] u8 -> (v [M] u32, h [M] i32)."""
+    m = b0.shape[0]
+    block_m = min(block_m, m)
+    if m % block_m:
+        raise ValueError("pad M to a block multiple upstream")
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_gram_hash_kernel, hash_bits=hash_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))] * 4,
+        out_specs=[pl.BlockSpec((block_m,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.uint32),
+                   jax.ShapeDtypeStruct((m,), jnp.int32)],
+        interpret=interpret,
+    )(b0, b1, b2, b3)
+
+
+def _tz_bytes(d: jnp.ndarray) -> jnp.ndarray:
+    """Trailing-zero-byte count of a u32 (4 when d == 0)."""
+    z = jnp.int32(0)
+    b0 = (d & jnp.uint32(0xFF)) != 0
+    b1 = (d & jnp.uint32(0xFF00)) != 0
+    b2 = (d & jnp.uint32(0xFF0000)) != 0
+    b3 = (d & jnp.uint32(0xFF000000)) != 0
+    return jnp.where(b0, z, jnp.where(b1, 1, jnp.where(b2, 2,
+                     jnp.where(b3, 3, 4)))).astype(jnp.int32)
+
+
+def _match_extend_kernel(dlo_ref, dhi_ref, inb_ref, ok_ref, mlen_ref, *,
+                         rounds: int, min_match: int):
+    dlo = dlo_ref[...]                       # [rounds, bm] u32
+    dhi = dhi_ref[...]
+    inb = inb_ref[...]                       # [rounds, bm] i32 (1 = gram fits)
+    ok = ok_ref[...] != 0                    # [bm]
+    m = jnp.full(ok.shape, min_match, jnp.int32)
+    # state: 0 = still matching, 1 = exact length found, 2 = lazy (cap
+    # survivor or ran out of gram room — host memcmp resolves it)
+    state = jnp.zeros(ok.shape, jnp.int32)
+    for r in range(rounds):
+        running = state == 0
+        oob = running & (inb[r] == 0)
+        state = jnp.where(oob, 2, state)
+        running = state == 0
+        full = (dlo[r] | dhi[r]) == 0
+        mism = running & ~full
+        extra = jnp.where(dlo[r] != 0, _tz_bytes(dlo[r]),
+                          4 + _tz_bytes(dhi[r]))
+        m = jnp.where(mism, m + extra, m)
+        state = jnp.where(mism, 1, state)
+        m = jnp.where(state == 0, m + 8, m)
+    state = jnp.where(state == 0, 2, state)  # cap survivors go lazy
+    mlen_ref[...] = jnp.where(ok, jnp.where(state == 2, -m, m), 0)
+
+
+def match_extend_kernel(dlo, dhi, inb, ok, *, min_match: int = 4,
+                        block_m: int = DEFAULT_BLOCK_M,
+                        interpret: bool = False):
+    """dlo/dhi/inb: [rounds, M]; ok: [M] i32 -> mlen [M] i32 (negative =
+    lazy, 0 = no candidate)."""
+    rounds, m = dlo.shape
+    block_m = min(block_m, m)
+    if m % block_m:
+        raise ValueError("pad M to a block multiple upstream")
+    grid = (m // block_m,)
+    plane = pl.BlockSpec((rounds, block_m), lambda i: (0, i))
+    lane = pl.BlockSpec((block_m,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_match_extend_kernel, rounds=rounds,
+                          min_match=min_match),
+        grid=grid,
+        in_specs=[plane, plane, plane, lane],
+        out_specs=lane,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=interpret,
+    )(dlo, dhi, inb, ok)

@@ -1,0 +1,28 @@
+"""Oracle for the device LZ77 match finder.
+
+The parity reference is the NumPy candidate stage of
+``repro.core.lz77`` — whose selection/emit output is in turn held
+byte-identical to the pure-Python scalar parse's wire format by the
+core codec tests — so the oracle chain bottoms out at the original
+scalar loop, matching the flash_attention/histogram/token_pack
+convention of importing the reference from the kernel package.
+
+``mlen`` equivalence is *up to lazy markers*: the NumPy stage may mark
+positions lazy (negative) that the dense device extension resolves
+exactly; both resolve to the same length at selection time, so compare
+``ok``/``cand`` exactly and final compressed bytes for the rest.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.lz77 import _candidates_np
+
+
+def lz_candidates_ref(buf: bytes, plen: int) -> Tuple[np.ndarray,
+                                                      np.ndarray,
+                                                      np.ndarray]:
+    return _candidates_np(buf, plen, len(buf))

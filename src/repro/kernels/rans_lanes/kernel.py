@@ -1,0 +1,203 @@
+"""Pallas TPU kernels: lane-parallel interleaved rANS encode/decode.
+
+The interleaved N-lane coder (``repro.core.rans_np``) was laid out for
+exactly this port: N independent 32-bit rANS states advance in lockstep
+over a round-robin symbol split, every step is a handful of elementwise
+uint32 ops over the N states, and 16-bit renormalization emits **at most
+one** word per lane per step — so the data-dependent part of the stream
+reduces to a dense [T, lanes] word/mask pair that the host compacts into
+the shared word stream (encode) or a prefix-sum word-consumption schedule
+(decode).
+
+Both kernels keep the *step* axis sequential (rANS states chain through
+every symbol) and vectorize across lanes, mirroring the NumPy lockstep
+loop one-to-one so the produced stream is bit-identical:
+
+* encode walks step blocks in **reverse** grid order (rANS encodes
+  back-to-front), carrying the lane states in an output ref whose block
+  index_map is constant — the classic Pallas sequential-reduction
+  pattern the histogram kernel uses;
+* decode walks forward, carrying lane states plus a scalar word cursor;
+  per step it gathers the k needy lanes' renorm words at
+  ``cursor + exclusive_cumsum(need)`` — ascending-lane order, exactly
+  the NumPy consumption order.
+
+All state arithmetic is uint32: a 32-bit state with 16-bit renorm stays
+below 2**32, and ``x_max = f << (32 - prob_bits)`` fits iff every
+frequency is below ``2**prob_bits`` — the single-symbol-alphabet edge
+(f == 2**prob_bits) is routed to the NumPy uint64 path by the dispatch
+layer, never to this kernel.
+
+Step blocks are padded to ``block_t`` multiples; padded rows are masked
+out of the state evolution (and emit nothing), so padding never touches
+the stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 256   # lockstep steps per grid block
+
+
+def _encode_kernel(x0_ref, fs_ref, cs_ref, words_ref, emit_ref, state_ref, *,
+                   block_t: int, total_t: int, prob_bits: int):
+    i = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        state_ref[...] = x0_ref[...]
+
+    x = state_ref[...]                       # [lanes] u32
+    fs = fs_ref[...]                         # [bt, lanes] u32
+    cs = cs_ref[...]
+    base = (nb - 1 - i) * block_t            # reverse block order
+    shift = jnp.uint32(32 - prob_bits)
+    pb = jnp.uint32(prob_bits)
+    lo16 = jnp.uint32(0xFFFF)
+    sixteen = jnp.uint32(16)
+
+    def row(t, x):
+        r = block_t - 1 - t                  # reverse rows within the block
+        valid = base + r < total_t
+        f = fs[r]
+        c = cs[r]
+        em = (x >= (f << shift)) & valid
+        words_ref[pl.ds(r, 1), :] = (x & lo16)[None, :]
+        emit_ref[pl.ds(r, 1), :] = em.astype(jnp.int32)[None, :]
+        x2 = jnp.where(em, x >> sixteen, x)
+        xn = ((x2 // f) << pb) + (x2 % f) + c
+        return jnp.where(valid, xn, x)
+
+    state_ref[...] = jax.lax.fori_loop(0, block_t, row, x)
+
+
+def rans_encode_lanes_kernel(fs: jnp.ndarray, cs: jnp.ndarray,
+                             x0: jnp.ndarray, *, total_t: int,
+                             prob_bits: int,
+                             block_t: int = DEFAULT_BLOCK_T,
+                             interpret: bool = False):
+    """fs/cs: [Tp, lanes] u32 per-step (freq, cumfreq), Tp a block_t
+    multiple covering total_t real steps; x0: [lanes] u32 initial states
+    (the host runs the partial tail step first — rANS encodes it first).
+
+    Returns (words [Tp, lanes] u32 dense, emit [Tp, lanes] i32 mask,
+    states [lanes] u32).  Forward stream = words[emit] in row-major
+    order; padded rows never emit.
+    """
+    tp, lanes = fs.shape
+    if tp % block_t:
+        raise ValueError("pad T to a block multiple upstream")
+    nb = tp // block_t
+    kernel = functools.partial(_encode_kernel, block_t=block_t,
+                               total_t=total_t, prob_bits=prob_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((block_t, lanes), lambda i, nb=nb: (nb - 1 - i, 0)),
+            pl.BlockSpec((block_t, lanes), lambda i, nb=nb: (nb - 1 - i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, lanes), lambda i, nb=nb: (nb - 1 - i, 0)),
+            pl.BlockSpec((block_t, lanes), lambda i, nb=nb: (nb - 1 - i, 0)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((tp, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x0, fs, cs)
+
+
+def _decode_kernel(words_ref, st_ref, freq_ref, cum_ref, s2s_ref,
+                   sym_ref, state_ref, wpos_ref, *,
+                   block_t: int, total_t: int, prob_bits: int, n_words: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        state_ref[...] = st_ref[...]
+        wpos_ref[0] = 0
+
+    x = state_ref[...]                       # [lanes] u32
+    wpos = wpos_ref[0]
+    words = words_ref[...]                   # [Wp] u32, whole stream
+    freqs = freq_ref[...]                    # [256] u32
+    cum = cum_ref[...]                       # [256] u32
+    s2s = s2s_ref[...]                       # [2**prob_bits] i32
+    slot_mask = jnp.uint32((1 << prob_bits) - 1)
+    pb = jnp.uint32(prob_bits)
+    low = jnp.uint32(1 << 16)
+    sixteen = jnp.uint32(16)
+    base = i * block_t
+
+    def row(r, carry):
+        x, wpos = carry
+        valid = base + r < total_t
+        slot = x & slot_mask
+        s = s2s[slot.astype(jnp.int32)]      # [lanes] gather
+        sym_ref[pl.ds(r, 1), :] = s[None, :]
+        xn = freqs[s] * (x >> pb) + (slot - cum[s])
+        need = (xn < low) & valid
+        cnt = jnp.cumsum(need.astype(jnp.int32))
+        pos = wpos + cnt - need.astype(jnp.int32)   # exclusive prefix
+        w = words[jnp.clip(pos, 0, n_words - 1)]
+        xn = jnp.where(need, (xn << sixteen) | w, xn)
+        return jnp.where(valid, xn, x), wpos + cnt[-1]
+
+    x, wpos = jax.lax.fori_loop(0, block_t, row, (x, wpos))
+    state_ref[...] = x
+    wpos_ref[0] = wpos
+
+
+def rans_decode_lanes_kernel(words: jnp.ndarray, states: jnp.ndarray,
+                             freqs: jnp.ndarray, cum: jnp.ndarray,
+                             slot2sym: jnp.ndarray, *, total_t: int,
+                             prob_bits: int,
+                             block_t: int = DEFAULT_BLOCK_T,
+                             interpret: bool = False):
+    """words: [Wp] u32 forward stream (zero-padded), states: [lanes] u32,
+    freqs/cum: [256] u32, slot2sym: [2**prob_bits] i32.
+
+    Returns (symbols [Tp, lanes] i32 — row-major flatten IS the
+    round-robin interleave order, states [lanes] u32 after the full
+    steps, words_consumed [1] i32).  The host runs the partial tail step
+    (slot lookup only, no renorm) on the returned states.
+    """
+    tp = -(-total_t // block_t) * block_t if total_t else block_t
+    lanes = states.shape[0]
+    nb = tp // block_t
+    kernel = functools.partial(_decode_kernel, block_t=block_t,
+                               total_t=total_t, prob_bits=prob_bits,
+                               n_words=words.shape[0])
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((words.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((slot2sym.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(words, states, freqs, cum, slot2sym)

@@ -1,0 +1,28 @@
+"""Oracle for the lane-parallel rANS kernels.
+
+The parity reference is the NumPy interleaved coder itself
+(``repro.core.rans_np``) — lane 1 of which is bit-identical to the
+scalar seed coder, so the chain of oracles bottoms out at the original
+pure-Python loop.  These wrappers exist so the kernel test suite imports
+its oracle from the kernel package like every other kernel
+(flash_attention/histogram/token_pack convention).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.rans_np import (rans_decode_interleaved,
+                                rans_encode_interleaved)
+
+
+def encode_lanes_ref(symbols: np.ndarray, freqs: np.ndarray, lanes: int,
+                     prob_bits: int):
+    """(words u16 forward order, final states u32 [lanes])."""
+    return rans_encode_interleaved(symbols, freqs, lanes, prob_bits)
+
+
+def decode_lanes_ref(words: np.ndarray, states: np.ndarray, n: int,
+                     freqs: np.ndarray, lanes: int,
+                     prob_bits: int) -> np.ndarray:
+    return rans_decode_interleaved(words, states, n, freqs, lanes, prob_bits)

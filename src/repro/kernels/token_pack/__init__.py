@@ -1,7 +1,9 @@
 from repro.kernels.token_pack.ops import (delta_zigzag_device,
                                           pack_fixed_batch_device,
-                                          pack_tokens_device)
+                                          pack_tokens_device,
+                                          unpack_fixed_device)
 from repro.kernels.token_pack.ref import delta_zigzag_ref, pack_ref
 
 __all__ = ["pack_tokens_device", "pack_fixed_batch_device",
-           "delta_zigzag_device", "pack_ref", "delta_zigzag_ref"]
+           "unpack_fixed_device", "delta_zigzag_device", "pack_ref",
+           "delta_zigzag_ref"]

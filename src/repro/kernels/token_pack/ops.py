@@ -71,6 +71,29 @@ def pack_fixed_batch_device(ids_list, interpret: bool = True) -> List[bytes]:
     return out
 
 
+def unpack_fixed_device(payload) -> jnp.ndarray:
+    """Inverse of the fixed-width packers, landing the ids **on device**:
+    a self-describing payload (format byte + LE body) -> uint32 jnp
+    array.  Accepts host bytes or a device-resident uint8 array (e.g.
+    straight from ``rans_decompress_to_device``), so the serve path's
+    decompress-to-tokens never bounces the body through host memory.
+
+    Only the fixed formats (0x00 u16 / 0x01 u32) are byte-combinable on
+    device; varint payloads raise and the caller falls back to the host
+    unpacker."""
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        payload = jnp.asarray(np.frombuffer(payload, np.uint8))
+    fmt = int(payload[0])
+    body = payload[1:].astype(jnp.uint32)
+    if fmt == 0x00:
+        return body[0::2] | (body[1::2] << jnp.uint32(8))
+    if fmt == 0x01:
+        return (body[0::4] | (body[1::4] << jnp.uint32(8))
+                | (body[2::4] << jnp.uint32(16))
+                | (body[3::4] << jnp.uint32(24)))
+    raise ValueError(f"format {fmt:#x} has no device unpacker")
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def delta_zigzag_device(ids: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     """[N] ids -> [N,4] zigzag-delta bytes (feeder for the rANS stage)."""

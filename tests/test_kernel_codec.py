@@ -1,0 +1,342 @@
+"""Device codec path: Pallas LZ77 match finder + lane-parallel rANS.
+
+Everything runs in interpret mode on CPU (the kernels compile unchanged
+on real accelerators), and every assertion is **byte identity** against
+the NumPy fast path — whose own wire format is held to the scalar
+oracles by tests/test_codec_vectorized.py — so the oracle chain bottoms
+out at the pure-Python coders.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import random
+import struct
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax.numpy as jnp
+
+from repro.core.entropy import byte_histogram
+from repro.core.lz77 import (_candidates_np, _lz_compress_device,
+                             _lz_compress_np, _lz_decompress_scalar,
+                             lz_compress, lz_decompress)
+from repro.core.rans_np import (_env_lanes, rans_compress_bytes,
+                                rans_decode_interleaved,
+                                rans_decompress_bytes,
+                                rans_decompress_to_device,
+                                rans_encode_interleaved)
+from repro.kernels.lz_match import lz_candidates_device, lz_candidates_ref
+from repro.kernels.rans_lanes import (decode_lanes_ref, encode_lanes_ref,
+                                      rans_decode_interleaved_device,
+                                      rans_encode_interleaved_device)
+from repro.kernels.token_pack import unpack_fixed_device
+
+_PB = 12
+DEVICE_LANES = (16, 64, 256, 1024)
+
+
+def _freqs_for(payload: bytes) -> np.ndarray:
+    from repro.core.rans_np import normalize_freqs
+
+    return normalize_freqs(np.bincount(
+        np.frombuffer(payload, np.uint8), minlength=256), _PB)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = random.Random(1234)
+    words = [bytes(rng.choices(b"etaoin shrdlu\n", k=rng.randint(2, 9)))
+             for _ in range(64)]
+    text = b"".join(rng.choice(words) for _ in range(12000))
+    return {
+        "text": text,
+        "random": rng.randbytes(50000),
+        "runs": b"\x00" * 30000 + rng.randbytes(500) + b"Z" * 5000,
+        "period3": b"abc" * 15000,
+        "skewed": bytes(rng.choices(b"ab", weights=[200, 1], k=40000)),
+        "tiny": b"abcabcabcXYZ",
+        "lane-edge": rng.randbytes(4101),   # n % lanes != 0 for every count
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lane-parallel rANS kernels (satellite 3: lanes 16..1024, golden headers,
+# cross-decode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lanes", DEVICE_LANES)
+def test_rans_lanes_kernel_bit_identical(corpus, lanes):
+    for name, payload in corpus.items():
+        sym = np.frombuffer(payload, np.uint8)
+        freqs = _freqs_for(payload)
+        w_ref, x_ref = encode_lanes_ref(sym, freqs, lanes, _PB)
+        w_dev, x_dev = rans_encode_interleaved_device(
+            sym, freqs, lanes, _PB, interpret=True)
+        assert np.array_equal(w_ref, w_dev), (name, lanes)
+        assert np.array_equal(x_ref, x_dev), (name, lanes)
+        out = rans_decode_interleaved_device(
+            w_dev, x_dev, sym.size, freqs, lanes, _PB, interpret=True)
+        assert bytes(out) == payload, (name, lanes)
+
+
+@pytest.mark.parametrize("lanes", DEVICE_LANES)
+def test_rans_lanes_cross_decode(corpus, lanes):
+    """NumPy-encoded streams decode on device and vice versa — the blob
+    carries no producer mark."""
+    payload = corpus["text"]
+    sym = np.frombuffer(payload, np.uint8)
+    freqs = _freqs_for(payload)
+    w_np, x_np = rans_encode_interleaved(sym, freqs, lanes, _PB)
+    out_dev = rans_decode_interleaved_device(
+        w_np, x_np, sym.size, freqs, lanes, _PB, interpret=True)
+    assert bytes(out_dev) == payload
+    w_dev, x_dev = rans_encode_interleaved_device(
+        sym, freqs, lanes, _PB, interpret=True)
+    out_np = rans_decode_interleaved(w_dev, x_dev, sym.size, freqs, lanes, _PB)
+    assert out_np.tobytes() == payload
+
+
+@pytest.mark.parametrize("lanes", DEVICE_LANES)
+def test_multilane_golden_header(corpus, lanes, monkeypatch):
+    """Frozen multi-lane layout: bit 7 of the prob_bits byte flags the
+    interleaved format, the next byte is log2(lanes), and the device
+    coder produces the identical blob."""
+    payload = corpus["text"]
+    blob = rans_compress_bytes(payload, lanes=lanes)
+    n, pbb, lane_exp, asize = struct.unpack_from("<IBBH", blob, 0)
+    assert n == len(payload)
+    assert pbb == _PB | 0x80
+    assert lane_exp == lanes.bit_length() - 1
+    monkeypatch.setenv("REPRO_RANS_MODE", "device")
+    assert rans_compress_bytes(payload, lanes=lanes) == blob
+    assert rans_decompress_bytes(blob) == payload
+    monkeypatch.setenv("REPRO_RANS_MODE", "numpy")
+    assert rans_decompress_bytes(blob) == payload
+
+
+def test_rans_device_mode_blob_identical(corpus, monkeypatch):
+    """REPRO_RANS_MODE=device reproduces the auto-lane NumPy blob
+    byte-for-byte on every corpus payload."""
+    for name, payload in corpus.items():
+        monkeypatch.setenv("REPRO_RANS_MODE", "numpy")
+        ref = rans_compress_bytes(payload)
+        monkeypatch.setenv("REPRO_RANS_MODE", "device")
+        assert rans_compress_bytes(payload) == ref, name
+        assert rans_decompress_bytes(ref) == payload, name
+
+
+def test_rans_device_single_symbol_alphabet(monkeypatch):
+    """f == 2**prob_bits overflows the u32 kernel state; dispatch must
+    keep that alphabet on the NumPy uint64 lanes even in device mode."""
+    payload = b"\x07" * 20000
+    monkeypatch.setenv("REPRO_RANS_MODE", "device")
+    blob = rans_compress_bytes(payload)
+    assert rans_decompress_bytes(blob) == payload
+    monkeypatch.setenv("REPRO_RANS_MODE", "numpy")
+    assert rans_compress_bytes(payload) == blob
+
+
+def test_rans_device_underflow_detected(corpus):
+    payload = corpus["text"]
+    sym = np.frombuffer(payload, np.uint8)
+    freqs = _freqs_for(payload)
+    words, states = rans_encode_interleaved(sym, freqs, 64, _PB)
+    with pytest.raises(ValueError, match="underflow"):
+        rans_decode_interleaved_device(
+            words[: words.size // 2], states, sym.size, freqs, 64, _PB,
+            interpret=True)
+
+
+def test_rans_decompress_to_device(corpus):
+    for payload in (corpus["text"], corpus["tiny"], b"", b"\x42" * 9000):
+        blob = rans_compress_bytes(payload)
+        out = rans_decompress_to_device(blob)
+        assert isinstance(out, jnp.ndarray)
+        assert bytes(np.asarray(out)) == payload
+
+
+def test_decode_lanes_ref_roundtrip(corpus):
+    sym = np.frombuffer(corpus["lane-edge"], np.uint8)
+    freqs = _freqs_for(corpus["lane-edge"])
+    words, states = encode_lanes_ref(sym, freqs, 16, _PB)
+    assert decode_lanes_ref(
+        words, states, sym.size, freqs, 16, _PB).tobytes() == corpus["lane-edge"]
+
+
+# ---------------------------------------------------------------------------
+# REPRO_RANS_LANES env hardening (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("raw,expect,warns", [
+    ("-1", None, True),        # negative -> auto, warned
+    ("0", None, False),        # documented auto spelling, silent
+    ("2048", 1024, True),      # above max -> clamp, warned
+    ("banana", None, True),    # garbage -> auto, warned
+    ("48", 32, True),          # non-power-of-two -> clamp down, warned
+    ("64", 64, False),
+    ("", None, False),
+])
+def test_env_lanes_sanitized(monkeypatch, raw, expect, warns):
+    monkeypatch.setenv("REPRO_RANS_LANES", raw)
+    if warns:
+        with pytest.warns(RuntimeWarning):
+            assert _env_lanes() == expect
+    else:
+        assert _env_lanes() == expect
+
+
+@pytest.mark.parametrize("raw", ["-1", "0", "2048", "banana"])
+def test_env_lanes_never_break_compression(monkeypatch, corpus, raw):
+    """Bad env values degrade to auto/clamped lanes with a warning —
+    compression itself must keep working and round-trip."""
+    payload = corpus["text"]
+    monkeypatch.delenv("REPRO_RANS_LANES", raising=False)
+    monkeypatch.setenv("REPRO_RANS_LANES", raw)
+    ctx = (pytest.warns(RuntimeWarning) if raw != "0"
+           else contextlib.nullcontext())
+    with ctx:
+        blob = rans_compress_bytes(payload)
+    assert rans_decompress_bytes(blob) == payload
+    if raw == "2048":
+        assert blob[5] == 10  # clamped to 1024 lanes
+
+
+def test_explicit_lanes_argument_still_strict():
+    """Only env input is sanitized; the programmatic API keeps raising."""
+    for bad in (-1, 3, 2048):
+        with pytest.raises(ValueError, match="power of two"):
+            rans_compress_bytes(b"xy" * 100, lanes=bad)
+
+
+# ---------------------------------------------------------------------------
+# Device LZ77 match finder
+# ---------------------------------------------------------------------------
+
+
+def test_lz_candidates_device_matches_ref(corpus):
+    for name, payload in corpus.items():
+        ok_r, cand_r, mlen_r = lz_candidates_ref(payload, 0)
+        ok_d, cand_d, mlen_d = lz_candidates_device(
+            payload, 0, interpret=True)
+        assert np.array_equal(ok_r, ok_d), name
+        assert np.array_equal(cand_r[ok_r], cand_d[ok_d]), name
+        # exact lengths agree; the dense device extension may resolve
+        # positions the NumPy run-dominance break left lazy (negative) —
+        # never the reverse, and both resolve identically at selection
+        both = (mlen_r > 0) & (mlen_d > 0)
+        assert np.array_equal(mlen_r[both], mlen_d[both]), name
+        assert not np.any((mlen_d < 0) & (mlen_r > 0)), name
+
+
+def test_lz_device_compress_byte_identical(corpus):
+    for name, payload in corpus.items():
+        ref = _lz_compress_np(payload)
+        dev = _lz_compress_device(payload)
+        assert dev == ref, name
+        assert _lz_decompress_scalar(dev) == payload, name
+
+
+def test_lz_device_dictionary_prefix(corpus):
+    prefix = corpus["text"][:4096]
+    for payload in (corpus["text"][4096:20000], corpus["tiny"],
+                    corpus["random"][:8000]):
+        ref = _lz_compress_np(payload, prefix=prefix)
+        dev = _lz_compress_device(payload, prefix=prefix)
+        assert dev == ref
+        assert _lz_decompress_scalar(dev, prefix=prefix) == payload
+
+
+@pytest.mark.parametrize("n", [0, 1, 3, 4, 5, 7, 8, 9, 16, 17])
+def test_lz_device_truncation_edges(corpus, n):
+    """Every byte length around the 4-gram/8-gram bounds."""
+    payload = corpus["text"][:n]
+    assert _lz_compress_device(payload) == _lz_compress_np(payload)
+    assert lz_decompress(_lz_compress_device(payload)) == payload
+
+
+def test_lz_mode_device_env(corpus, monkeypatch):
+    monkeypatch.setenv("REPRO_LZ_MODE", "device")
+    dev = lz_compress(corpus["text"])
+    monkeypatch.setenv("REPRO_LZ_MODE", "vector")
+    assert dev == lz_compress(corpus["text"])
+    assert lz_decompress(dev) == corpus["text"]
+
+
+def test_lz_candidates_np_shared_contract(corpus):
+    """The refactored NumPy candidate stage feeds the same selection/emit
+    the device path uses; its output must equal the ref wrapper."""
+    payload = corpus["text"][:30000]
+    ok, cand, mlen = _candidates_np(payload, 0, len(payload))
+    ok2, cand2, mlen2 = lz_candidates_ref(payload, 0)
+    assert np.array_equal(ok, ok2)
+    assert np.array_equal(cand, cand2)
+    assert np.array_equal(mlen, mlen2)
+
+
+# ---------------------------------------------------------------------------
+# Histogram crossover (satellite 1) + device token landing
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_small_payload_stays_host(corpus, monkeypatch):
+    """Below the crossover the device path is never taken implicitly —
+    byte_histogram must not import/launch the kernel for tiny payloads
+    even when a backend claims to be attached."""
+    from repro.core import device as _device
+
+    monkeypatch.setattr(_device, "backend_available", lambda: True)
+    calls = []
+    import repro.kernels.histogram as hk
+
+    real = hk.byte_histogram_device
+    monkeypatch.setattr(hk, "byte_histogram_device",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    small = byte_histogram(corpus["tiny"])
+    assert not calls, "device histogram launched below the crossover"
+    assert int(small.sum()) == len(corpus["tiny"])
+    monkeypatch.setenv("REPRO_HIST_DEVICE_MIN", "4")
+    big = byte_histogram(corpus["tiny"])
+    assert calls, "crossover override ignored"
+    assert np.array_equal(big, small)
+
+
+def test_histogram_forced_device_parity(corpus):
+    for payload in (corpus["text"], corpus["skewed"]):
+        assert np.array_equal(
+            np.asarray(byte_histogram(payload, use_device=True)),
+            byte_histogram(payload, use_device=False))
+
+
+def test_unpack_fixed_device_parity():
+    from repro.core.packing import pack_fixed, unpack_tokens
+
+    for ids in ([], [0], [1, 65535, 2], list(range(70000, 70100)),
+                list(np.random.default_rng(5).integers(0, 2**20, 513))):
+        payload = pack_fixed(np.asarray(ids, np.uint32))
+        dev = unpack_fixed_device(payload)
+        assert isinstance(dev, jnp.ndarray)
+        assert np.array_equal(np.asarray(dev), unpack_tokens(payload))
+
+
+def test_tokens_batch_to_device(corpus, monkeypatch):
+    from repro.core.api import PromptCompressor
+    from repro.tokenizer.bpe import train_bpe
+
+    tok = train_bpe(["the quick brown fox jumps over the lazy dog"],
+                    vocab_size=300)
+    pc = PromptCompressor(tokenizer=tok, method="hybrid",
+                          backend="repro-lzr")
+    text = "the quick brown fox " * 300
+    for method in ("hybrid", "token", "zstd"):
+        blob = pc.compress(text, method=method)
+        host = pc.tokens(blob)
+        dev = pc.tokens(blob, to_device=True)
+        assert isinstance(dev, jnp.ndarray), method
+        assert np.array_equal(np.asarray(dev), host), method
