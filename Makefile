@@ -1,5 +1,12 @@
 # Test tiers (markers registered in pytest.ini; see ARCHITECTURE.md):
-#   make quick       not-slow tests + golden frame-layout pins (scripts/check.sh)
+#   make analyze     static invariant checker (repro.analysis): lock order,
+#                    durability, frozen wire formats, kernel hygiene, env
+#                    registry, pool re-entrancy.  Waive a false positive with
+#                    `# repro-analysis: disable=REPRO00N <reason>` inline;
+#                    re-pin a frozen-format hash (only together with its
+#                    golden test) via `python -m repro.analysis --repin-frozen`.
+#   make quick       analyze + not-slow tests + golden frame-layout pins
+#                    (scripts/check.sh)
 #   make crash       crash-injection suite alone (fault points in fsync/replace)
 #   make test        full tier-1 (slow + concurrency included)
 #   make bench       the full benchmark sweep (writes BENCH_*.json)
@@ -8,7 +15,10 @@
 #                    (BENCH_kernel_codec.json; timings SKIP on CPU hosts)
 PY := PYTHONPATH=src python
 
-.PHONY: quick crash test bench bench-codec bench-kernels
+.PHONY: analyze quick crash test bench bench-codec bench-kernels
+
+analyze:
+	$(PY) -m repro.analysis src --baseline analysis-baseline.json
 
 quick:
 	bash scripts/check.sh

@@ -7,6 +7,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Invariant gate first: the static analyzer (lock order, durability,
+# frozen wire formats, kernel hygiene, env registry, pool re-entrancy)
+# fails in seconds, before any test tier spends minutes.
+python -m repro.analysis src --baseline analysis-baseline.json
+
 python -m pytest -q -m "not slow"
 python -m pytest -q tests/test_codec.py tests/test_dict_codec.py -k golden
 

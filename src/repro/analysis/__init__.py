@@ -1,0 +1,24 @@
+"""repro.analysis — AST-based invariant checker for this repo.
+
+Six rules, each enforcing an invariant the code's correctness argument
+already depends on (see ARCHITECTURE.md "Static analysis & invariants"):
+
+| id       | invariant                                                |
+|----------|----------------------------------------------------------|
+| REPRO001 | lock acquisition follows the documented rank order       |
+| REPRO002 | os.replace publishes fsync the file before, the dir after|
+| REPRO003 | frozen wire-format functions match pinned AST hashes     |
+| REPRO004 | Pallas kernel fns stay pure (no host state / shapes)     |
+| REPRO005 | REPRO_* env reads go through repro.core.env              |
+| REPRO006 | codec-pool tasks never submit back into the pool         |
+
+Run as ``python -m repro.analysis src/`` (or ``make analyze``).  Waive
+a single false positive inline with ``# repro-analysis:
+disable=REPRO00N <reason>`` on or above the flagged line.
+"""
+
+from repro.analysis.core import (Finding, ParsedFile, Rule, all_rules,
+                                 parse_source, register, run_rules)
+
+__all__ = ["Finding", "ParsedFile", "Rule", "all_rules", "parse_source",
+           "register", "run_rules"]

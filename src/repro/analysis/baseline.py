@@ -1,0 +1,64 @@
+"""Findings baseline: grandfathered hits that don't fail the gate.
+
+The baseline exists so the analyzer can be adopted mid-stream on a tree
+with known findings and ratchet them down — new findings always fail,
+baselined ones report as suppressed.  This repo's committed baseline is
+**empty** (every true finding was fixed, every false positive carries
+an inline waiver with a reason); the mechanism stays because the next
+rule added will likely land with grandfathered hits.
+
+Matching is by (rule, path, message) — line numbers shift under
+unrelated edits and would make the baseline churn-prone.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import List, Sequence, Tuple
+
+from repro.analysis.core import Finding
+
+VERSION = 1
+
+
+def save(path: str, findings: Sequence[Finding]) -> None:
+    doc = {
+        "version": VERSION,
+        "findings": [
+            {"rule": f.rule, "path": f.path, "message": f.message}
+            for f in sorted(findings, key=Finding.identity)
+        ],
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+
+
+def load(path: str) -> List[Tuple[str, str, str]]:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("version") != VERSION:
+        raise ValueError(
+            f"unsupported baseline version {doc.get('version')!r} in {path}")
+    return [(e["rule"], e["path"], e["message"])
+            for e in doc.get("findings", [])]
+
+
+def split(findings: Sequence[Finding],
+          baseline: Sequence[Tuple[str, str, str]]
+          ) -> Tuple[List[Finding], List[Finding]]:
+    """(new, suppressed): a baseline entry absorbs at most one finding
+    per occurrence count — a *second* identical hit is new."""
+    budget = {}
+    for ident in baseline:
+        budget[ident] = budget.get(ident, 0) + 1
+    new: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        ident = f.identity()
+        if budget.get(ident, 0) > 0:
+            budget[ident] -= 1
+            suppressed.append(f)
+        else:
+            new.append(f)
+    return new, suppressed

@@ -1,0 +1,159 @@
+"""Command line front end: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (or all findings baselined/waived), 1 findings,
+2 usage/internal error.  ``--format json`` emits a machine-readable
+report for CI; ``--write-baseline`` snapshots current findings to adopt
+the analyzer on a dirty tree; ``--repin-frozen`` updates the
+frozen-format manifest (refusing unless golden tests changed too).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import rules_frozen
+from repro.analysis.core import (META_RULE, Finding, ParsedFile, all_rules,
+                                 parse_source, run_rules)
+
+
+def _find_repo_root(start: str) -> str:
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(cur, ".git")) \
+                or os.path.isfile(os.path.join(cur, "ROADMAP.md")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def collect_files(paths: List[str], root: str) -> List[ParsedFile]:
+    """Parse every .py under `paths`; syntax errors become REPRO000
+    findings carried on a pseudo-file (path, no tree) — surfaced by
+    run()."""
+    files: List[ParsedFile] = []
+    errors: List[Finding] = []
+    seen = set()
+    for path in paths:
+        if os.path.isfile(path):
+            candidates = [path]
+        else:
+            candidates = []
+            for dirpath, dirnames, filenames in os.walk(path):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                candidates += [os.path.join(dirpath, n)
+                               for n in sorted(filenames)
+                               if n.endswith(".py")]
+        for cand in candidates:
+            rel = os.path.relpath(os.path.abspath(cand), root)
+            rel = rel.replace(os.sep, "/")
+            if rel in seen:
+                continue
+            seen.add(rel)
+            try:
+                with open(cand, encoding="utf-8") as fh:
+                    source = fh.read()
+                files.append(parse_source(rel, source))
+            except SyntaxError as exc:
+                errors.append(Finding(
+                    META_RULE, rel, exc.lineno or 0,
+                    f"does not parse: {exc.msg}"))
+            except OSError as exc:
+                errors.append(Finding(
+                    META_RULE, rel, 0, f"unreadable: {exc}"))
+    files.sort(key=lambda f: f.path)
+    collect_files.errors = errors  # type: ignore[attr-defined]
+    return files
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro invariant checker (lock order, durability, "
+                    "frozen formats, kernel hygiene, env registry, "
+                    "pool re-entrancy)")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/directories to scan (default: src)")
+    parser.add_argument("--baseline", metavar="FILE",
+                        help="findings baseline; baselined hits report "
+                             "as suppressed and do not fail")
+    parser.add_argument("--write-baseline", metavar="FILE",
+                        help="write current findings as the new baseline "
+                             "and exit 0")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--rules", metavar="IDS",
+                        help="comma-separated rule ids to run "
+                             "(default: all)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--repin-frozen", action="store_true",
+                        help="update frozen-format AST-hash pins "
+                             "(requires changed golden tests)")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rid, cls in sorted(all_rules().items()):
+            print(f"{rid}  {cls.title}")
+        return 0
+
+    paths = args.paths or ["src"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+    root = _find_repo_root(paths[0])
+    files = collect_files(paths, root)
+    parse_errors = collect_files.errors  # type: ignore[attr-defined]
+
+    if args.repin_frozen:
+        try:
+            print(rules_frozen.repin(files, root))
+            return 0
+        except RuntimeError as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+
+    only = [r.strip() for r in args.rules.split(",")] if args.rules else None
+    try:
+        findings = parse_errors + run_rules(files, only)
+    except KeyError as exc:
+        print(f"error: {exc.args[0]}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        baseline_mod.save(args.write_baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.write_baseline}")
+        return 0
+
+    suppressed: List[Finding] = []
+    if args.baseline:
+        try:
+            known = baseline_mod.load(args.baseline)
+        except (OSError, ValueError) as exc:
+            print(f"error: cannot load baseline: {exc}", file=sys.stderr)
+            return 2
+        findings, suppressed = baseline_mod.split(findings, known)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "message": f.message} for f in findings],
+            "suppressed": len(suppressed),
+        }, indent=1, sort_keys=True))
+    else:
+        for f in findings:
+            print(f.format())
+        tail = f"{len(findings)} finding(s)"
+        if suppressed:
+            tail += f", {len(suppressed)} baselined"
+        print(tail if findings or suppressed else "clean")
+    return 1 if findings else 0

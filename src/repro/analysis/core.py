@@ -1,0 +1,140 @@
+"""Engine of the invariant checker: parsing, waivers, rule registry.
+
+The analyzer is deliberately stdlib-only (``ast`` + ``json``): it runs
+in every environment the tests run in, including the CI container,
+with zero install steps.  Design points:
+
+* **Rules see the whole tree.**  A rule's ``run`` receives the full
+  list of parsed files, not one file at a time — the lock-order graph
+  (REPRO001) and the pool re-entrancy call graph (REPRO006) are
+  cross-module properties and can't be checked file-locally.
+* **Waivers are lexical and carry a reason.**  ``# repro-analysis:
+  disable=REPRO001 <why>`` on the finding's line (or the line above)
+  suppresses that rule there; a waiver without a reason is itself a
+  finding (REPRO000) so suppressions stay auditable.
+* **Findings are stable identities.**  A finding is (rule, path,
+  message); the baseline matcher ignores line numbers so unrelated
+  edits above a grandfathered hit don't resurrect it.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+#: waiver comment shape: ``repro-analysis: disable=<RULE>[,<RULE>] <reason>``
+_WAIVER_RE = re.compile(
+    r"#\s*repro-analysis:\s*disable=([A-Z0-9,]+)(?:\s+(\S.*))?")
+
+META_RULE = "REPRO000"  # analyzer self-diagnostics (parse errors, bad waivers)
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str        # repo-relative, forward slashes
+    line: int        # 1-based; 0 = whole-file
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+    def identity(self) -> tuple:
+        """Line-insensitive identity used for baseline matching."""
+        return (self.rule, self.path, self.message)
+
+
+@dataclass
+class Waiver:
+    line: int
+    rules: List[str]
+    reason: Optional[str]
+
+
+@dataclass
+class ParsedFile:
+    path: str                      # repo-relative, forward slashes
+    source: str
+    tree: ast.Module
+    waivers: List[Waiver] = field(default_factory=list)
+
+    def waived(self, rule: str, line: int) -> bool:
+        """True if `rule` is waived at `line` (same line or line above)."""
+        for w in self.waivers:
+            if rule in w.rules and w.line in (line, line - 1):
+                return True
+        return False
+
+
+def parse_source(path: str, source: str) -> ParsedFile:
+    """Parse one file; raises SyntaxError (callers convert to REPRO000)."""
+    tree = ast.parse(source, filename=path)
+    waivers = []
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVER_RE.search(line)
+        if m:
+            rules = [r for r in m.group(1).split(",") if r]
+            waivers.append(Waiver(lineno, rules, m.group(2)))
+    return ParsedFile(path=path, source=source, tree=tree, waivers=waivers)
+
+
+class Rule:
+    """Base class; subclasses set ``id``/``title`` and override ``run``."""
+
+    id: str = ""
+    title: str = ""
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        raise NotImplementedError
+
+
+_RULES: Dict[str, Callable[[], Rule]] = {}
+
+
+def register(cls):
+    """Class decorator adding a rule to the registry (import-time)."""
+    if not cls.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if cls.id in _RULES:
+        raise ValueError(f"duplicate rule id {cls.id}")
+    _RULES[cls.id] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Callable[[], Rule]]:
+    # rule modules register on import; pull them in here so the registry
+    # is complete no matter which entry point asked
+    from repro.analysis import (rules_durability, rules_env,  # noqa: F401
+                                rules_frozen, rules_kernels, rules_locks,
+                                rules_pool)
+    return dict(_RULES)
+
+
+def run_rules(files: Sequence[ParsedFile],
+              only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run (a subset of) the registry; returns non-waived findings plus
+    REPRO000 diagnostics for malformed waivers."""
+    findings: List[Finding] = []
+    for f in files:
+        for w in f.waivers:
+            if w.reason is None:
+                findings.append(Finding(
+                    META_RULE, f.path, w.line,
+                    "waiver without a reason; write '# repro-analysis: "
+                    "disable=REPROxxx <one-line justification>'"))
+    rules = all_rules()
+    wanted = list(only) if only else sorted(rules)
+    for rid in wanted:
+        if rid not in rules:
+            raise KeyError(f"unknown rule {rid!r}; known: {sorted(rules)}")
+        rule = rules[rid]()
+        by_path = {f.path: f for f in files}
+        for finding in rule.run(files):
+            pf = by_path.get(finding.path)
+            if pf is not None and pf.waived(finding.rule, finding.line):
+                continue
+            findings.append(finding)
+    findings.sort(key=lambda x: (x.path, x.line, x.rule, x.message))
+    return findings

@@ -1,0 +1,92 @@
+"""REPRO002 — tmp-then-rename publishes must fsync file and directory.
+
+For every function containing an ``os.replace(...)`` (the atomic-publish
+commit point), two things must be lexically present in the same
+function:
+
+* a *file* fsync **before** the replace — ``os.fsync(...)`` or one of
+  the ``repro.core.durability`` helpers (``fsync_file`` /
+  ``write_durable``), so the payload bytes are on the platter before
+  the name points at them;
+* a *directory* fsync **after** it — ``fsync_dir(...)``, so the rename
+  itself survives power loss (an unsynced directory can forget the
+  rename and resurrect the old bytes).
+
+Both findings anchor at the ``os.replace`` line, so one waiver line
+covers a deliberately non-durable publisher (heartbeats).  The check is
+function-local by design: the durability helpers exist precisely so the
+whole write→fsync→replace→fsync-dir sequence is visible at the publish
+site (see repro.core.durability), and a publish whose fsync lives in a
+different function defeats that reviewability even when correct.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from repro.analysis.core import Finding, ParsedFile, Rule, register
+
+RULE_ID = "REPRO002"
+
+_FILE_FSYNC = frozenset({"fsync_file", "write_durable"})
+_DIR_FSYNC = frozenset({"fsync_dir"})
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _is_os_call(call: ast.Call, attr: str) -> bool:
+    fn = call.func
+    return (isinstance(fn, ast.Attribute) and fn.attr == attr
+            and isinstance(fn.value, ast.Name) and fn.value.id == "os")
+
+
+@register
+class DurabilityRule(Rule):
+    id = RULE_ID
+    title = "os.replace publishes fsync the file before and the dir after"
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        findings: List[Finding] = []
+        for f in files:
+            for fn in (n for n in ast.walk(f.tree)
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))):
+                findings.extend(self._check_function(f, fn))
+        return findings
+
+    def _check_function(self, f: ParsedFile, fn) -> List[Finding]:
+        replaces: List[ast.Call] = []
+        file_syncs: List[int] = []
+        dir_syncs: List[int] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if _is_os_call(node, "replace"):
+                replaces.append(node)
+            elif _is_os_call(node, "fsync") or name in _FILE_FSYNC:
+                file_syncs.append(node.lineno)
+            elif name in _DIR_FSYNC:
+                dir_syncs.append(node.lineno)
+        findings: List[Finding] = []
+        for rep in replaces:
+            if not any(line <= rep.lineno for line in file_syncs):
+                findings.append(Finding(
+                    RULE_ID, f.path, rep.lineno,
+                    f"os.replace in '{fn.name}' without a preceding file "
+                    f"fsync (os.fsync / fsync_file / write_durable): the "
+                    f"rename can land before the data"))
+            if not any(line >= rep.lineno for line in dir_syncs):
+                findings.append(Finding(
+                    RULE_ID, f.path, rep.lineno,
+                    f"os.replace in '{fn.name}' without a following "
+                    f"fsync_dir: the rename itself is not durable"))
+        return findings

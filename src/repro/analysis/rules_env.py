@@ -1,0 +1,83 @@
+"""REPRO005 — every ``REPRO_*`` env read goes through the registry.
+
+``repro.core.env`` declares each knob once with a typed parser and a
+default; an ad-hoc ``os.environ.get("REPRO_...")`` elsewhere silently
+forks the parsing/fallback contract (exactly how the pre-registry tree
+ended up with three different garbage-handling behaviors).  Flagged
+outside ``core/env.py``:
+
+* ``os.environ.get`` / ``os.getenv`` / ``os.environ[...]`` reads whose
+  key is a literal starting with ``REPRO_``;
+* the same reads with a *non-literal* key — dynamic keys are how
+  generic helpers smuggle untracked knobs in (the registry's ``read``
+  is the sanctioned dynamic accessor).
+
+Writes (``os.environ[...] = ...``, used by launch scripts for XLA
+flags) and non-REPRO literals are out of scope.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from repro.analysis.core import Finding, ParsedFile, Rule, register
+
+RULE_ID = "REPRO005"
+
+
+def _env_read_key(node: ast.AST) -> Optional[object]:
+    """Returns the key expression of an environ read, else None.
+
+    Recognizes ``os.environ.get(k, ...)``, ``os.getenv(k, ...)`` and
+    ``os.environ[k]`` in Load context.
+    """
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr == "get" \
+                and _is_os_environ(fn.value) and node.args:
+            return node.args[0]
+        if isinstance(fn, ast.Attribute) and fn.attr == "getenv" \
+                and isinstance(fn.value, ast.Name) \
+                and fn.value.id == "os" and node.args:
+            return node.args[0]
+    if isinstance(node, ast.Subscript) and _is_os_environ(node.value) \
+            and isinstance(node.ctx, ast.Load):
+        return node.slice
+    return None
+
+
+def _is_os_environ(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "environ"
+            and isinstance(node.value, ast.Name) and node.value.id == "os")
+
+
+@register
+class EnvRegistryRule(Rule):
+    id = RULE_ID
+    title = "REPRO_* env vars are read only via repro.core.env"
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        findings: List[Finding] = []
+        for f in files:
+            if f.path.endswith("core/env.py"):
+                continue
+            for node in ast.walk(f.tree):
+                key = _env_read_key(node)
+                if key is None:
+                    continue
+                if isinstance(key, ast.Constant) \
+                        and isinstance(key.value, str):
+                    if key.value.startswith("REPRO_"):
+                        findings.append(Finding(
+                            RULE_ID, f.path, node.lineno,
+                            f"raw environ read of {key.value!r}; use "
+                            f"repro.core.env.read (declared parser + "
+                            f"default)"))
+                else:
+                    findings.append(Finding(
+                        RULE_ID, f.path, node.lineno,
+                        "environ read with a dynamic key; route it "
+                        "through repro.core.env.read so the knob is "
+                        "declared"))
+        return findings

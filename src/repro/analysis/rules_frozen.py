@@ -1,0 +1,176 @@
+"""REPRO003 — frozen wire-format functions must not drift silently.
+
+Three codec backends (scalar, NumPy, Pallas) must emit byte-identical
+streams; what freezes the format is a small set of host functions (the
+shared LZ77 emit, the rANS stream layout, the frame header, the packing
+formats).  This rule pins a *normalized AST hash* of each one in
+``frozen_format.json``: docstrings stripped, positions dropped, so
+comment/formatting churn never trips it, while any semantic edit does.
+
+A hash mismatch is a finding.  The sanctioned way to change a frozen
+function is ``python -m repro.analysis --repin-frozen``, which refuses
+to update the pins unless at least one of the manifest's *golden test
+files* changed too — byte-format changes must land with the golden
+tests that prove old blobs still decode (or a deliberate format bump).
+
+``REPRO_ANALYSIS_FROZEN_MANIFEST`` overrides the manifest path so tests
+can exercise the rule against fixtures.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.core import Finding, ParsedFile, Rule, register
+from repro.core import env
+
+RULE_ID = "REPRO003"
+
+DEFAULT_MANIFEST = os.path.join(os.path.dirname(__file__),
+                                "frozen_format.json")
+
+
+def manifest_path() -> str:
+    return env.read("REPRO_ANALYSIS_FROZEN_MANIFEST") or DEFAULT_MANIFEST
+
+
+def load_manifest(path: Optional[str] = None) -> dict:
+    with open(path or manifest_path()) as fh:
+        return json.load(fh)
+
+
+def normalized_hash(fn_node) -> str:
+    """sha256 of the def's AST with positions and the docstring removed."""
+    node = ast.parse(ast.unparse(fn_node)).body[0]  # re-parse: fresh copy
+    body = node.body
+    if body and isinstance(body[0], ast.Expr) \
+            and isinstance(body[0].value, ast.Constant) \
+            and isinstance(body[0].value.value, str):
+        node.body = body[1:] or [ast.Pass()]
+    return hashlib.sha256(
+        ast.dump(node, include_attributes=False).encode()).hexdigest()
+
+
+def find_function(tree: ast.Module, qualname: str):
+    """Locate ``fn`` or ``Class.method`` at module top level."""
+    parts = qualname.split(".")
+    scope = tree.body
+    node = None
+    for i, part in enumerate(parts):
+        node = next(
+            (n for n in scope
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and n.name == part), None)
+        if node is None:
+            return None
+        if i < len(parts) - 1:
+            if not isinstance(node, ast.ClassDef):
+                return None
+            scope = node.body
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return node
+    return None
+
+
+def file_sha256(path: str) -> str:
+    with open(path, "rb") as fh:
+        return hashlib.sha256(fh.read()).hexdigest()
+
+
+def compute_pins(files: Sequence[ParsedFile],
+                 manifest: dict) -> Dict[str, Optional[str]]:
+    """{spec: current hash or None if the function is missing} for every
+    manifest entry whose file is in the scanned set."""
+    by_suffix = {f.path: f for f in files}
+    out: Dict[str, Optional[str]] = {}
+    for spec in manifest.get("functions", {}):
+        rel, qualname = spec.split("::", 1)
+        pf = None
+        for path, cand in by_suffix.items():
+            if path == rel or path.endswith("/" + rel):
+                pf = cand
+                break
+        if pf is None:
+            continue  # file not in this scan's scope
+        fn = find_function(pf.tree, qualname)
+        out[spec] = None if fn is None else normalized_hash(fn)
+    return out
+
+
+@register
+class FrozenFormatRule(Rule):
+    id = RULE_ID
+    title = "frozen wire-format functions match their pinned AST hashes"
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        path = manifest_path()
+        try:
+            manifest = load_manifest(path)
+        except FileNotFoundError:
+            return [Finding(RULE_ID, path, 0,
+                            "frozen-format manifest missing")]
+        findings: List[Finding] = []
+        pinned = manifest.get("functions", {})
+        for spec, current in sorted(compute_pins(files, manifest).items()):
+            rel, qualname = spec.split("::", 1)
+            pf = next(f for f in files
+                      if f.path == rel or f.path.endswith("/" + rel))
+            if current is None:
+                findings.append(Finding(
+                    RULE_ID, pf.path, 0,
+                    f"frozen function '{qualname}' is pinned in the "
+                    f"manifest but no longer exists"))
+                continue
+            if current != pinned[spec]:
+                fn = find_function(pf.tree, qualname)
+                findings.append(Finding(
+                    RULE_ID, pf.path, fn.lineno,
+                    f"frozen wire-format function '{qualname}' changed "
+                    f"(AST hash {current[:12]} != pinned "
+                    f"{pinned[spec][:12]}); re-pin with --repin-frozen "
+                    f"alongside updated golden tests"))
+        return findings
+
+
+def repin(files: Sequence[ParsedFile], repo_root: str,
+          path: Optional[str] = None) -> str:
+    """Rewrite the manifest pins; refuses when function hashes changed
+    but every golden test file is byte-identical to its recorded hash.
+    Returns a human-readable summary."""
+    path = path or manifest_path()
+    manifest = load_manifest(path)
+    pins = compute_pins(files, manifest)
+    changed = [s for s, h in pins.items()
+               if h is not None and h != manifest["functions"].get(s)]
+    missing = [s for s, h in pins.items() if h is None]
+    if missing:
+        raise RuntimeError(
+            f"cannot re-pin: frozen functions missing: {missing}")
+    goldens = manifest.get("golden_tests", {})
+    if changed and goldens:
+        stale = []
+        for rel, sha in goldens.items():
+            full = os.path.join(repo_root, rel)
+            if not os.path.exists(full) or file_sha256(full) == sha:
+                stale.append(rel)
+        if len(stale) == len(goldens):
+            raise RuntimeError(
+                "refusing to re-pin: frozen wire-format functions changed "
+                f"({changed}) but none of the golden test files "
+                f"({sorted(goldens)}) changed; update the golden tests in "
+                "the same diff to prove old blobs still decode")
+    for spec, h in pins.items():
+        manifest["functions"][spec] = h
+    for rel in goldens:
+        full = os.path.join(repo_root, rel)
+        if os.path.exists(full):
+            goldens[rel] = file_sha256(full)
+    with open(path, "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return (f"re-pinned {len(changed)} changed of {len(pins)} frozen "
+            f"functions in {path}")

@@ -1,0 +1,168 @@
+"""REPRO004 — Pallas kernel hygiene.
+
+Kernel functions (the first argument of a ``pl.pallas_call``, possibly
+wrapped in ``functools.partial``) execute as traced device code: they
+run once at trace time, so anything that looks like Python-side effectful
+or stateful code is a latent correctness bug, not just style.  Flagged
+inside kernel bodies:
+
+* ``print`` calls and ``global``/``nonlocal`` statements;
+* any use of host-state modules: ``os``, ``random``, ``time``,
+  ``np``/``numpy`` (device code uses ``jnp``), in particular
+  ``np.random`` — trace-time randomness bakes one sample into the
+  compiled kernel;
+* reads of module-level mutable state: a Name that resolves to a
+  module-level binding which is neither an import, a function/class,
+  nor an ALL-CAPS constant — mutable captures are frozen at trace time
+  and silently go stale;
+* ``.shape`` on anything that is not a kernel parameter (a ref) or a
+  kernel-local value — shapes must come from refs/BlockSpec, never from
+  captured host arrays.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.core import Finding, ParsedFile, Rule, register
+
+RULE_ID = "REPRO004"
+
+_CONST_RE = re.compile(r"^_?[A-Z][A-Z0-9_]*$")
+_HOST_MODULES = frozenset({"os", "np", "numpy", "random", "time"})
+
+
+def _kernel_names(tree: ast.Module) -> Dict[str, int]:
+    """{function name: pallas_call line} for kernel fns in this module."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        is_pallas = (isinstance(fn, ast.Attribute) and fn.attr == "pallas_call"
+                     and isinstance(fn.value, ast.Name)
+                     and fn.value.id == "pl")
+        if not is_pallas or not node.args:
+            continue
+        kernel = node.args[0]
+        if isinstance(kernel, ast.Call):  # functools.partial(kernel, ...)
+            callee = kernel.func
+            is_partial = (isinstance(callee, ast.Attribute)
+                          and callee.attr == "partial") or \
+                         (isinstance(callee, ast.Name)
+                          and callee.id == "partial")
+            if is_partial and kernel.args:
+                kernel = kernel.args[0]
+        if isinstance(kernel, ast.Name):
+            out[kernel.id] = node.lineno
+    return out
+
+
+def _module_bindings(tree: ast.Module) -> Dict[str, str]:
+    """Top-level name -> kind ('import' | 'def' | 'const' | 'mutable')."""
+    out: Dict[str, str] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Import):
+            for alias in stmt.names:
+                out[alias.asname or alias.name.split(".")[0]] = "import"
+        elif isinstance(stmt, ast.ImportFrom):
+            for alias in stmt.names:
+                out[alias.asname or alias.name] = "import"
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            out[stmt.name] = "def"
+        elif isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = ("const" if _CONST_RE.match(t.id)
+                                 else "mutable")
+    return out
+
+
+def _local_names(fn) -> Set[str]:
+    """Parameters plus every name assigned/bound inside the function."""
+    names: Set[str] = set()
+    args = fn.args
+    for a in (list(args.posonlyargs) + list(args.args)
+              + list(args.kwonlyargs)):
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            names.add(node.name)
+        elif isinstance(node, ast.comprehension):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+    return names
+
+
+@register
+class KernelHygieneRule(Rule):
+    id = RULE_ID
+    title = "Pallas kernel fns stay pure: no host state, shapes from refs"
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        findings: List[Finding] = []
+        for f in files:
+            kernels = _kernel_names(f.tree)
+            if not kernels:
+                continue
+            bindings = _module_bindings(f.tree)
+            for fn in ast.walk(f.tree):
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and fn.name in kernels:
+                    findings.extend(self._check_kernel(f, fn, bindings))
+        return findings
+
+    def _check_kernel(self, f: ParsedFile, fn,
+                      bindings: Dict[str, str]) -> List[Finding]:
+        findings: List[Finding] = []
+        local = _local_names(fn)
+
+        def flag(node, msg: str) -> None:
+            findings.append(Finding(
+                RULE_ID, f.path, node.lineno,
+                f"kernel '{fn.name}': {msg}"))
+
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                flag(node, f"{type(node).__name__.lower()} statement; "
+                     f"kernels must not mutate enclosing scopes")
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "print":
+                flag(node, "print() runs at trace time only; use "
+                     "pl.debug_print or drop it")
+            elif isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name):
+                base = node.value.id
+                if base in _HOST_MODULES and base not in local:
+                    flag(node, f"uses host module '{base}.{node.attr}'; "
+                         f"device code must use jnp/pl/jax.lax only")
+                elif node.attr == "shape" and base not in local \
+                        and bindings.get(base) not in ("import",):
+                    flag(node, f"reads '{base}.shape' from a captured "
+                         f"host value; shapes must come from refs or "
+                         f"BlockSpec parameters")
+            elif isinstance(node, ast.Name) \
+                    and isinstance(node.ctx, ast.Load):
+                if node.id in local or node.id in ("True", "False", "None"):
+                    continue
+                kind = bindings.get(node.id)
+                if kind == "mutable":
+                    flag(node, f"captures module-level mutable state "
+                         f"'{node.id}'; trace-time capture freezes one "
+                         f"value forever (make it an ALL_CAPS constant "
+                         f"or pass it as a parameter)")
+        return findings

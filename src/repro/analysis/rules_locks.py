@@ -1,0 +1,442 @@
+"""REPRO001 — static lock-order checking over the store's rank table.
+
+Approximates each function's lock behavior from the AST:
+
+* **Nodes** are lock *classes*, keyed by normalized attribute name
+  (``_meta_lock`` → ``meta``, ``shard_locks`` → ``shard``): a store has
+  N shard locks, but ordering is a property of the class, not the
+  instance (equal-rank acquisitions are legal — the rebalancer sweeps
+  whole classes in index order under the rebalance lock).
+* **Ranks** come from the creation site: a lock built through
+  ``make_lock("shard")`` / ``make_rlock(...)`` (repro.core.locks)
+  carries its documented rank; raw ``threading.Lock()`` nodes are
+  unranked and participate only in cycle detection.
+* **Edges** a→b mean "b acquired while a held": nested ``with`` blocks,
+  bare ``.acquire()`` calls (held for the rest of the function — the
+  try/finally sweep idiom), and one level of call propagation (holding
+  a, call ``f()``; f directly acquires b).  Propagation is name-based
+  and skips ubiquitous method names (``get``, ``append``, ...) that
+  would drown the graph in dict/list noise.
+
+Findings: (1) an edge from a higher rank to a lower rank — the direct
+witness of a reversed acquisition; (2) any cycle among lock nodes;
+(3) non-reentrant locks ``with``-nested inside themselves; (4) *hot
+sections*: fsync / publish / batch-compression work under an ``index``
+or ``meta``-class lock, which serializes every reader behind disk or
+CPU time (one aggregated finding per ``with`` block, so one waiver
+line covers a justified case).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Finding, ParsedFile, Rule, register
+from repro.core.locks import RANKS
+
+RULE_ID = "REPRO001"
+
+#: method names excluded from call propagation: dict/list/ndarray noise
+_PROPAGATE_SKIP = frozenset({
+    "get", "put", "pop", "popitem", "append", "extend", "add", "read",
+    "write", "update", "copy", "items", "values", "keys", "sort",
+    "sorted", "close", "join", "clear", "move_to_end", "setdefault",
+    "len", "range", "dict", "list", "sum", "max", "min", "zip", "exists",
+    "unlink", "stat",
+})
+
+#: calls that must not run under an index/meta-class lock
+_HOT_PLAIN = frozenset({
+    "publish", "fsync_file", "fsync_dir", "compress_bytes",
+    "compress_bytes_dict", "compress_batch", "decompress_batch",
+    "encode_batch", "decode_batch", "plan_batch", "put_many",
+})
+_HOT_NODES = ("index", "meta")
+
+
+def _normalize(raw: str) -> str:
+    s = raw.lstrip("_").lower()
+    for suffix in ("_locks", "_lock"):
+        if s.endswith(suffix):
+            s = s[: -len(suffix)]
+            break
+    return s if s else "lock"
+
+
+def _lock_ctor(call: ast.Call) -> Optional[Tuple[Optional[str], bool]]:
+    """(order, reentrant) if `call` constructs a lock, else None."""
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else None)
+    if name in ("Lock", "RLock"):
+        base = fn.value if isinstance(fn, ast.Attribute) else None
+        if base is None or (isinstance(base, ast.Name)
+                            and base.id == "threading"):
+            return (None, name == "RLock")
+        return None
+    if name in ("make_lock", "make_rlock"):
+        order = None
+        if call.args and isinstance(call.args[0], ast.Constant) \
+                and isinstance(call.args[0].value, str):
+            order = call.args[0].value
+        return (order, name == "make_rlock")
+    return None
+
+
+class _LockNode:
+    __slots__ = ("name", "orders", "reentrant", "sites")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.orders: Set[str] = set()
+        self.reentrant = False
+        self.sites: List[Tuple[str, int]] = []
+
+    @property
+    def rank(self) -> Optional[int]:
+        ranks = {RANKS[o] for o in self.orders if o in RANKS}
+        return min(ranks) if ranks else None
+
+
+class _FunctionFacts:
+    """Per-function lock behavior extracted in one ordered AST walk."""
+
+    def __init__(self, name: str, path: str):
+        self.name = name
+        self.path = path
+        self.direct: Set[str] = set()                 # nodes acquired
+        self.edges: List[Tuple[str, str, int]] = []   # (held, acquired, line)
+        self.calls: List[Tuple[str, Tuple[str, ...], int]] = []
+        self.self_nest: List[Tuple[str, int]] = []    # non-reentrant re-with
+        self.hot: Dict[Tuple[str, int], List[Tuple[str, int]]] = {}
+
+
+@register
+class LockOrderRule(Rule):
+    id = RULE_ID
+    title = "lock acquisition order matches the documented rank table"
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        nodes: Dict[str, _LockNode] = {}
+        getters: Dict[str, str] = {}   # function name -> node it returns
+        funcs: List[_FunctionFacts] = []
+
+        for f in files:
+            self._collect_nodes(f, nodes)
+        for f in files:
+            self._collect_getters(f, nodes, getters)
+        for f in files:
+            for fn in self._iter_functions(f.tree):
+                funcs.append(self._analyze_function(
+                    fn, f.path, nodes, getters))
+
+        findings: List[Finding] = []
+        for node in nodes.values():
+            if len({RANKS[o] for o in node.orders if o in RANKS}) > 1:
+                path, line = node.sites[0]
+                findings.append(Finding(
+                    RULE_ID, path, line,
+                    f"lock class '{node.name}' created with conflicting "
+                    f"orders {sorted(node.orders)}"))
+
+        # merge edges; first witness wins for reporting
+        edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+        direct_by_name: Dict[str, Set[str]] = {}
+        for fn in funcs:
+            direct_by_name.setdefault(fn.name, set()).update(fn.direct)
+        for fn in funcs:
+            for held, acq, line in fn.edges:
+                edges.setdefault((held, acq), (fn.path, line))
+            for callee, held, line in fn.calls:
+                if callee in _PROPAGATE_SKIP:
+                    continue
+                for acq in direct_by_name.get(callee, ()):
+                    for h in held:
+                        if h != acq:  # propagated self-edges are noise
+                            edges.setdefault((h, acq), (fn.path, line))
+
+        order_str = " < ".join(sorted(RANKS, key=RANKS.get))
+        for (a, b), (path, line) in sorted(edges.items()):
+            ra = nodes[a].rank if a in nodes else None
+            rb = nodes[b].rank if b in nodes else None
+            if ra is not None and rb is not None and ra > rb:
+                findings.append(Finding(
+                    RULE_ID, path, line,
+                    f"acquires '{b}' (rank {rb}) while holding '{a}' "
+                    f"(rank {ra}); documented order is {order_str}"))
+
+        for scc in _sccs({a for e in edges for a in e},
+                         {e for e in edges}):
+            if len(scc) < 2:
+                continue
+            for (a, b), (path, line) in sorted(edges.items()):
+                if a in scc and b in scc:
+                    findings.append(Finding(
+                        RULE_ID, path, line,
+                        f"lock cycle among {sorted(scc)}: edge "
+                        f"'{a}' -> '{b}' closes a deadlock-capable loop"))
+
+        for fn in funcs:
+            for name, line in fn.self_nest:
+                findings.append(Finding(
+                    RULE_ID, fn.path, line,
+                    f"non-reentrant lock '{name}' acquired inside a block "
+                    f"already holding it (self-deadlock)"))
+            for (name, wline), hits in sorted(fn.hot.items()):
+                what = ", ".join(sorted({h for h, _ in hits}))
+                findings.append(Finding(
+                    RULE_ID, fn.path, wline,
+                    f"holds '{name}' lock across blocking work ({what}); "
+                    f"fsync/compression under an index/meta lock "
+                    f"serializes all readers"))
+        return findings
+
+    # -- collection passes ---------------------------------------------------
+
+    def _collect_nodes(self, f: ParsedFile,
+                       nodes: Dict[str, _LockNode]) -> None:
+        for stmt in ast.walk(f.tree):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            value = stmt.value
+            calls = []
+            if isinstance(value, ast.Call):
+                calls.append(value)
+            elif isinstance(value, ast.ListComp) \
+                    and isinstance(value.elt, ast.Call):
+                calls.append(value.elt)
+            for call in calls:
+                ctor = _lock_ctor(call)
+                if ctor is None:
+                    continue
+                order, reentrant = ctor
+                for target in stmt.targets:
+                    raw = None
+                    if isinstance(target, ast.Attribute):
+                        raw = target.attr
+                    elif isinstance(target, ast.Name):
+                        raw = target.id
+                    if raw is None:
+                        continue
+                    name = _normalize(raw)
+                    node = nodes.setdefault(name, _LockNode(name))
+                    if order:
+                        node.orders.add(order)
+                    node.reentrant = node.reentrant or reentrant
+                    node.sites.append((f.path, stmt.lineno))
+
+    def _collect_getters(self, f: ParsedFile, nodes: Dict[str, _LockNode],
+                         getters: Dict[str, str]) -> None:
+        """Functions whose return expression IS a lock node ('lock
+        getters', e.g. store.compaction_lock) propagate the node to
+        variables bound from their call."""
+        for fn in self._iter_functions(f.tree):
+            for stmt in ast.walk(fn):
+                if isinstance(stmt, ast.Return) and stmt.value is not None:
+                    name = _resolve_lock_expr(stmt.value, nodes, {}, {})
+                    if name is not None:
+                        getters[fn.name] = name
+
+    def _iter_functions(self, tree: ast.Module):
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    # -- the ordered walk ----------------------------------------------------
+
+    def _analyze_function(self, fn, path: str, nodes: Dict[str, _LockNode],
+                          getters: Dict[str, str]) -> _FunctionFacts:
+        facts = _FunctionFacts(fn.name, path)
+        bindings: Dict[str, str] = {}   # local var -> lock node
+        bare_held: List[str] = []       # .acquire()d, held to function end
+
+        def held_now(with_stack: Tuple[str, ...]) -> Tuple[str, ...]:
+            return tuple(bare_held) + with_stack
+
+        def scan_expr(expr: ast.AST, with_stack: Tuple[str, ...],
+                      hot_key: Optional[Tuple[str, int]]) -> None:
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = _call_name(node)
+                if callee == "acquire":
+                    target = _resolve_lock_expr(
+                        node.func.value, nodes, bindings, getters) \
+                        if isinstance(node.func, ast.Attribute) else None
+                    if target is not None:
+                        facts.direct.add(target)
+                        for h in held_now(with_stack):
+                            if h != target:
+                                facts.edges.append((h, target, node.lineno))
+                        bare_held.append(target)
+                    continue
+                if callee == "release":
+                    target = _resolve_lock_expr(
+                        node.func.value, nodes, bindings, getters) \
+                        if isinstance(node.func, ast.Attribute) else None
+                    if target is not None and target in bare_held:
+                        bare_held.remove(target)
+                    continue
+                if callee is not None:
+                    held = held_now(with_stack)
+                    if held:
+                        facts.calls.append((callee, held, node.lineno))
+                    if hot_key is not None and _is_hot_call(node, callee):
+                        facts.hot.setdefault(hot_key, []).append(
+                            (callee, node.lineno))
+
+        def walk(stmts, with_stack: Tuple[str, ...],
+                 hot_key: Optional[Tuple[str, int]]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, ast.With):
+                    acquired: List[str] = []
+                    for item in stmt.items:
+                        scan_expr(item.context_expr, with_stack, hot_key)
+                        name = _resolve_lock_expr(
+                            item.context_expr, nodes, bindings, getters)
+                        if name is None:
+                            continue
+                        facts.direct.add(name)
+                        if name in with_stack:
+                            node = nodes.get(name)
+                            if node is not None and not node.reentrant:
+                                facts.self_nest.append((name, stmt.lineno))
+                        for h in held_now(with_stack):
+                            if h != name:
+                                facts.edges.append((h, name, stmt.lineno))
+                        acquired.append(name)
+                    inner = with_stack + tuple(acquired)
+                    key = hot_key
+                    for name in acquired:
+                        if any(tag in name for tag in _HOT_NODES):
+                            key = (name, stmt.lineno)
+                    walk(stmt.body, inner, key)
+                elif isinstance(stmt, ast.For):
+                    scan_expr(stmt.iter, with_stack, hot_key)
+                    src = _resolve_lock_expr(stmt.iter, nodes, bindings,
+                                             getters)
+                    if src is not None and isinstance(stmt.target, ast.Name):
+                        bindings[stmt.target.id] = src
+                    walk(stmt.body, with_stack, hot_key)
+                    walk(stmt.orelse, with_stack, hot_key)
+                elif isinstance(stmt, ast.Assign):
+                    scan_expr(stmt.value, with_stack, hot_key)
+                    src = _resolve_lock_expr(stmt.value, nodes, bindings,
+                                             getters)
+                    if src is not None:
+                        for target in stmt.targets:
+                            if isinstance(target, ast.Name):
+                                bindings[target.id] = src
+                elif isinstance(stmt, (ast.If, ast.While)):
+                    scan_expr(stmt.test, with_stack, hot_key)
+                    walk(stmt.body, with_stack, hot_key)
+                    walk(stmt.orelse, with_stack, hot_key)
+                elif isinstance(stmt, ast.Try):
+                    walk(stmt.body, with_stack, hot_key)
+                    for handler in stmt.handlers:
+                        walk(handler.body, with_stack, hot_key)
+                    walk(stmt.orelse, with_stack, hot_key)
+                    walk(stmt.finalbody, with_stack, hot_key)
+                elif isinstance(stmt, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef, ast.ClassDef)):
+                    continue  # nested defs analyzed as their own functions
+                else:
+                    scan_expr(stmt, with_stack, hot_key)
+
+        walk(fn.body, (), None)
+        return facts
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _is_hot_call(call: ast.Call, callee: str) -> bool:
+    if callee in _HOT_PLAIN:
+        return True
+    fn = call.func
+    if isinstance(fn, ast.Attribute) and fn.attr in ("fsync", "replace") \
+            and isinstance(fn.value, ast.Name) and fn.value.id == "os":
+        return True
+    return False
+
+
+def _resolve_lock_expr(expr: ast.AST, nodes: Dict[str, "_LockNode"],
+                       bindings: Dict[str, str],
+                       getters: Dict[str, str]) -> Optional[str]:
+    """Lock node a runtime expression denotes, if recognizable."""
+    if isinstance(expr, ast.Subscript):
+        return _resolve_lock_expr(expr.value, nodes, bindings, getters)
+    if isinstance(expr, ast.Attribute):
+        name = _normalize(expr.attr)
+        return name if name in nodes else None
+    if isinstance(expr, ast.Name):
+        if expr.id in bindings:
+            return bindings[expr.id]
+        name = _normalize(expr.id)
+        return name if name in nodes else None
+    if isinstance(expr, ast.Call):
+        callee = _call_name(expr)
+        if callee in getters:
+            return getters[callee]
+    return None
+
+
+def _sccs(vertices: Set[str],
+          edges: Set[Tuple[str, str]]) -> List[Set[str]]:
+    """Tarjan strongly-connected components (iterative)."""
+    adj: Dict[str, List[str]] = {v: [] for v in vertices}
+    for a, b in edges:
+        adj.setdefault(a, []).append(b)
+        adj.setdefault(b, [])
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Set[str] = set()
+    stack: List[str] = []
+    out: List[Set[str]] = []
+    counter = [0]
+
+    for root in sorted(adj):
+        if root in index:
+            continue
+        work = [(root, iter(adj[root]))]
+        index[root] = low[root] = counter[0]
+        counter[0] += 1
+        stack.append(root)
+        on_stack.add(root)
+        while work:
+            v, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(adj[w])))
+                    advanced = True
+                    break
+                if w in on_stack:
+                    low[v] = min(low[v], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[v])
+            if low[v] == index[v]:
+                comp: Set[str] = set()
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.add(w)
+                    if w == v:
+                        break
+                out.append(comp)
+    return out

@@ -1,0 +1,161 @@
+"""REPRO006 — no re-entrant submission into the shared codec pool.
+
+The codec thread pool (repro.core.codec) is bounded and shared; its
+deadlock-freedom argument is one sentence: *leaf tasks never submit
+back into the pool*.  If a function that runs AS a pool task (directly
+or transitively) calls back into the pool's submission gateway, all
+workers can end up blocked waiting for tasks that can only run on those
+same workers.
+
+Statically: a **sink** is a function that both obtains the shared pool
+(calls ``_codec_pool``) and dispatches work into an executor
+(``.submit``/``.map`` attribute call) — in this tree that is
+``_parallel_map``.  A **root** is any callable passed as a task to a
+sink's call site (lambda or function name in the first argument).  The
+rule builds a name-based call graph — augmented with module-level
+registry dicts whose values reference functions, so dispatch like
+``BACKENDS[backend][0](...)`` keeps edges — and flags any root from
+which a sink is reachable, reporting the call chain.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Finding, ParsedFile, Rule, register
+
+RULE_ID = "REPRO006"
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _function_calls(fn) -> Set[str]:
+    """Simple names of everything `fn` calls (or whose value it takes —
+    a function passed onward may be called by the receiver)."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name:
+                out.add(name)
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    out.add(arg.id)
+    return out
+
+
+def _lambda_calls(lam: ast.Lambda) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(lam):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name:
+                out.add(name)
+    return out
+
+
+@register
+class PoolReentrancyRule(Rule):
+    id = RULE_ID
+    title = "codec-pool tasks never submit back into the pool"
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        # pass 1: function defs, their call sets, and registry-dict edges
+        defs: Dict[str, List[Tuple[str, ast.AST]]] = {}
+        calls_of: Dict[str, Set[str]] = {}
+        registry_members: Dict[str, Set[str]] = {}  # dict name -> fn names
+        for f in files:
+            for stmt in f.tree.body:
+                if isinstance(stmt, ast.Assign) \
+                        and isinstance(stmt.value, ast.Dict):
+                    names = {n.id for v in stmt.value.values
+                             for n in ast.walk(v)
+                             if isinstance(n, ast.Name)}
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name) and names:
+                            registry_members.setdefault(
+                                t.id, set()).update(names)
+            for node in ast.walk(f.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    defs.setdefault(node.name, []).append((f.path, node))
+                    merged = calls_of.setdefault(node.name, set())
+                    merged.update(_function_calls(node))
+                    # dispatch through a registry dict reaches all members
+                    for sub in ast.walk(node):
+                        if isinstance(sub, ast.Subscript) \
+                                and isinstance(sub.value, ast.Name) \
+                                and sub.value.id in registry_members:
+                            merged.update(registry_members[sub.value.id])
+
+        # pass 2: sinks — functions that hold the shared pool AND dispatch
+        sinks: Set[str] = set()
+        for name, sites in defs.items():
+            for _, fn in sites:
+                gets_pool = False
+                dispatches = False
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Call):
+                        cname = _call_name(node)
+                        if cname == "_codec_pool":
+                            gets_pool = True
+                        elif cname in ("submit", "map") \
+                                and isinstance(node.func, ast.Attribute):
+                            dispatches = True
+                if gets_pool and dispatches:
+                    sinks.add(name)
+        if not sinks:
+            return []
+
+        # reachability: can `name` reach a sink through the call graph?
+        reach_cache: Dict[str, Optional[List[str]]] = {}
+
+        def chain_to_sink(start_calls: Set[str]) -> Optional[List[str]]:
+            seen: Set[str] = set()
+            queue = deque([(c, [c]) for c in sorted(start_calls)])
+            while queue:
+                name, chain = queue.popleft()
+                if name in sinks:
+                    return chain
+                if name in seen or name not in calls_of:
+                    continue
+                seen.add(name)
+                for nxt in sorted(calls_of[name]):
+                    queue.append((nxt, chain + [nxt]))
+            return None
+
+        # pass 3: roots — callables handed to sink call sites as tasks
+        findings: List[Finding] = []
+        for f in files:
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call) \
+                        or _call_name(node) not in sinks:
+                    continue
+                if not node.args:
+                    continue
+                task = node.args[0]
+                if isinstance(task, ast.Lambda):
+                    start = _lambda_calls(task)
+                    label = "lambda"
+                elif isinstance(task, ast.Name):
+                    start = {task.id}
+                    label = task.id
+                else:
+                    continue
+                chain = chain_to_sink(start)
+                if chain is not None:
+                    findings.append(Finding(
+                        RULE_ID, f.path, task.lineno,
+                        f"task '{label}' submitted to the shared codec "
+                        f"pool can re-enter it via "
+                        f"{' -> '.join(chain)}; pool tasks must stay "
+                        f"leaves (bounded-worker deadlock)"))
+        return findings

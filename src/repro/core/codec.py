@@ -38,6 +38,8 @@ import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
+from repro.core import env
+
 import numpy as np
 
 from repro.core import packing
@@ -72,12 +74,9 @@ _PAR_MIN_BYTES = 1 << 16    # total bytes before the pool pays off
 
 
 def codec_pool_size() -> int:
-    env = os.environ.get("REPRO_CODEC_THREADS", "")
-    if env:
-        try:
-            return max(int(env), 0)
-        except ValueError:
-            return 0
+    size = env.read("REPRO_CODEC_THREADS")
+    if size is not None:
+        return size
     cpus = os.cpu_count() or 1
     return min(4, cpus) if cpus > 2 else 0
 

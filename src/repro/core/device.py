@@ -19,8 +19,9 @@ policy is uniform and testable in one place.
 
 from __future__ import annotations
 
-import os
 from typing import Optional
+
+from repro.core import env
 
 
 def backend_available() -> bool:
@@ -38,15 +39,10 @@ def crossover(env_var: str, default: int) -> int:
 
     Reads ``env_var`` fresh on every call so benchmarks and tests can
     re-tune without reimporting; invalid values fall back to the
-    measured default rather than raising.
+    measured default rather than raising (the registry's int parser
+    raises and ``env.read`` absorbs it into the default).
     """
-    raw = os.environ.get(env_var, "")
-    if raw:
-        try:
-            return max(int(raw), 0)
-        except ValueError:
-            pass
-    return default
+    return env.read(env_var, default)
 
 
 def use_device(size: int, env_var: str, default_min: int,

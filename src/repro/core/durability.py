@@ -1,0 +1,53 @@
+"""Crash-durability helpers: the fsync half of tmp-then-rename publish.
+
+The store's atomic-publish discipline (ARCHITECTURE.md) is: write to a
+tmp file, fsync the *file* (data reaches the platter before the name
+does), ``os.replace`` onto the final name, then fsync the *parent
+directory* (the rename itself is metadata — on ext4/xfs an unsynced
+directory can forget the rename after power loss, resurrecting the old
+bytes under the new name).  These helpers are deliberately small and
+call-site-visible: publishers keep their ``os.replace`` inline rather
+than calling one opaque wrapper, so the static durability rule
+(``repro.analysis`` REPRO002) can see the full
+write → fsync → replace → fsync-dir sequence lexically and flag any
+publisher that skips a step.
+
+``fsync_dir`` is best-effort: directory fds are unsupported on some
+platforms/filesystems (notably Windows), and a publish that lands but
+may be forgotten on power-loss is strictly better than one that
+crashes every save on such hosts.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Union
+
+
+def fsync_file(f) -> None:
+    """Flush a writable file object's buffers down to the platter."""
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def fsync_dir(path: Union[str, Path]) -> None:
+    """Best-effort fsync of a directory (persists renames/creates in it)."""
+    try:
+        fd = os.open(str(path), os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def write_durable(path: Union[str, Path], data: bytes) -> None:
+    """Write ``data`` to ``path`` and fsync the file (not the parent —
+    publishers fsync the parent after their ``os.replace``)."""
+    with open(path, "wb") as f:
+        f.write(data)
+        fsync_file(f)

@@ -51,11 +51,12 @@ threads a fingerprint through frame headers to guarantee that).
 
 from __future__ import annotations
 
-import os
 import threading
 from array import array
 
 import numpy as np
+
+from repro.core import env
 
 _MIN_MATCH = 4
 _WINDOW = 0xFFFF  # 64 KiB - 1, max encodable offset
@@ -90,8 +91,7 @@ _PREFIX_TABLES_LOCK = threading.Lock()
 
 
 def _lz_mode() -> str:
-    mode = os.environ.get("REPRO_LZ_MODE", "auto")
-    return mode if mode in ("scalar", "vector", "device", "auto") else "auto"
+    return env.read("REPRO_LZ_MODE")
 
 
 def _seeded_table(prefix: bytes) -> dict:

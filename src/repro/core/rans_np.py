@@ -39,12 +39,12 @@ parse multi-lane blobs; this reader accepts every layout.
 
 from __future__ import annotations
 
-import os
 import struct
-import warnings
 from typing import Optional, Tuple
 
 import numpy as np
+
+from repro.core import env
 
 PROB_BITS_DEFAULT = 12
 _STATE_LOW = 1 << 16  # renormalization lower bound
@@ -67,7 +67,7 @@ def _use_device_rans(n: int) -> bool:
     ``device`` forces the Pallas lane kernels (interpret mode on CPU —
     tests/parity smokes), ``auto`` (default) takes the device only when a
     non-CPU backend is attached and the payload clears the crossover."""
-    mode = os.environ.get("REPRO_RANS_MODE", "auto")
+    mode = env.read("REPRO_RANS_MODE")
     if mode == "device":
         return True
     if mode != "auto":
@@ -78,40 +78,10 @@ def _use_device_rans(n: int) -> bool:
 
 
 def _env_lanes() -> Optional[int]:
-    """``REPRO_RANS_LANES``, sanitized.  Env input never raises — the
-    explicit ``lanes=`` argument keeps strict validation: unset, empty or
-    ``0`` mean auto (``0`` mirrors ``REPRO_CODEC_THREADS=0``); garbage
-    and negatives fall back to auto with a warning; values above
-    ``_LANES_MAX`` or non-powers-of-two clamp down with a warning."""
-    raw = os.environ.get("REPRO_RANS_LANES", "")
-    if not raw:
-        return None
-    try:
-        val = int(raw)
-    except ValueError:
-        warnings.warn(
-            f"REPRO_RANS_LANES={raw!r} is not an integer; using auto lanes",
-            RuntimeWarning, stacklevel=3)
-        return None
-    if val == 0:
-        return None
-    if val < 0:
-        warnings.warn(
-            f"REPRO_RANS_LANES={val} is negative; using auto lanes",
-            RuntimeWarning, stacklevel=3)
-        return None
-    if val > _LANES_MAX:
-        warnings.warn(
-            f"REPRO_RANS_LANES={val} exceeds the maximum; "
-            f"clamping to {_LANES_MAX}", RuntimeWarning, stacklevel=3)
-        return _LANES_MAX
-    if val & (val - 1):
-        p2 = 1 << (val.bit_length() - 1)
-        warnings.warn(
-            f"REPRO_RANS_LANES={val} is not a power of two; "
-            f"clamping to {p2}", RuntimeWarning, stacklevel=3)
-        return p2
-    return val
+    """``REPRO_RANS_LANES``, sanitized by the env registry's parser (the
+    explicit ``lanes=`` argument keeps strict validation; the env knob
+    warns and clamps — see repro.core.env)."""
+    return env.read("REPRO_RANS_LANES")
 
 
 def normalize_freqs(counts: np.ndarray, prob_bits: int = PROB_BITS_DEFAULT) -> np.ndarray:

@@ -75,6 +75,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.api import PromptCompressor, parse_frame
+from repro.core.durability import fsync_dir, fsync_file, write_durable
+from repro.core.locks import make_lock, make_rlock
 
 _META_NAME = "store.json"
 _ITER_BATCH = 64
@@ -215,8 +217,8 @@ class _Layout:
         self.shards = shards
         self.gens = gens
         self.dict_shas = dict_shas
-        self.shard_locks = [threading.RLock() for _ in range(n_shards)]
-        self.compact_locks = [threading.Lock() for _ in range(n_shards)]
+        self.shard_locks = [make_rlock("shard") for _ in range(n_shards)]
+        self.compact_locks = [make_lock("compact") for _ in range(n_shards)]
 
 
 class ShardedPromptStore:
@@ -228,8 +230,8 @@ class ShardedPromptStore:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.compressor = compressor or PromptCompressor()
-        self._meta_lock = threading.Lock()
-        self._rebalance_lock = threading.Lock()
+        self._meta_lock = make_lock("meta")
+        self._rebalance_lock = make_lock("rebalance")
         # files a committed rebalance still owes an unlink for (crash
         # between its meta commit and its cleanup): carried in store.json
         # as "sweep" so a reopen can finish the job — by-name intent
@@ -240,7 +242,7 @@ class ShardedPromptStore:
         self._layout = _Layout(n, shards, gens, dict_shas)
         self._load_dict_sidecars()
         self._gc_stale_files()
-        self._index_lock = threading.RLock()
+        self._index_lock = make_rlock("index")
         self._index: Dict[str, dict] = {}
         self._next_seq = 0
         self._load_index()
@@ -274,8 +276,11 @@ class ShardedPromptStore:
         n = self.DEFAULT_SHARDS if requested is None else int(requested)
         if n < 1:
             raise ValueError("n_shards must be >= 1")
-        meta_path.write_text(
-            json.dumps({"version": 1, "n_shards": n, "gens": [0] * n}) + "\n")
+        doc = {"version": 1, "n_shards": n, "gens": [0] * n}
+        tmp = self.root / (".{}.tmp".format(_META_NAME))
+        write_durable(tmp, (json.dumps(doc) + "\n").encode())
+        os.replace(tmp, meta_path)
+        fsync_dir(self.root)
         return n, [0] * n, [None] * n
 
     def _write_meta(self) -> None:
@@ -283,6 +288,7 @@ class ShardedPromptStore:
         of a compaction swap or a rebalance.  Caller holds the shard
         lock(s) of the swapped shard(s); `_meta_lock` serializes swaps of
         different shards."""
+        # repro-analysis: disable=REPRO001 the meta lock exists to serialize exactly this publish; only swap/rebalance commit points take it, readers never do
         with self._meta_lock:
             lay = self._layout
             doc = {"version": 1, "n_shards": lay.n_shards,
@@ -294,9 +300,11 @@ class ShardedPromptStore:
             tmp = self.root / (".{}.tmp".format(_META_NAME))
             with open(tmp, "w") as f:
                 f.write(json.dumps(doc) + "\n")
-                f.flush()
-                os.fsync(f.fileno())
+                fsync_file(f)
             os.replace(tmp, self.root / _META_NAME)
+            # directory fsync persists the rename AND the same-dir create
+            # of any new-generation shard files this commit points at
+            fsync_dir(self.root)
 
     def _shard_paths(self, i: int, gen: int,
                      n_shards: Optional[int] = None) -> Tuple[Path, Path]:
@@ -887,6 +895,7 @@ class ShardedPromptStore:
         for lock in old.shard_locks:
             lock.acquire()
         try:
+            # repro-analysis: disable=REPRO001 the tail catch-up publish must be atomic with the layout swap: records written after the snapshot exist only in the old generation, and releasing the index lock before the new shards absorb them would let readers see a layout missing live keys
             with self._index_lock:
                 tail = sorted((dict(r) for r in self._index.values()
                                if r["seq"] not in planned_seqs),

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.durability import fsync_dir, write_durable
 from repro.dist._util import path_names
 
 _STEP_FMT = "step_{:08d}"
@@ -116,18 +117,22 @@ def save_checkpoint(
         buf = io.BytesIO()
         np.savez(buf, **entries)
         data = buf.getvalue()
-        (tmp / name).write_bytes(data)
+        write_durable(tmp / name, data)
         # hash the in-memory bytes — re-reading the file would double the
         # checkpoint I/O for the identical digest
         checksums[name] = hashlib.sha256(data).hexdigest()
 
     meta = {"step": int(step), "extra": extra or {},
             "leaves": leaves_meta, "shard_sha256": checksums}
-    (tmp / "meta.json").write_text(json.dumps(meta, indent=1))
+    write_durable(tmp / "meta.json", json.dumps(meta, indent=1).encode())
+    # the directory entries for the shard files must be durable before
+    # the rename publishes them under the final name
+    fsync_dir(tmp)
 
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)
+    fsync_dir(root)
 
     if keep_last is not None:
         steps = sorted(p for p in root.iterdir()

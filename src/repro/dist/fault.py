@@ -42,6 +42,7 @@ class Heartbeat:
                "time": time.time() if now is None else now}
         tmp = self._path.with_suffix(f".tmp{os.getpid()}")
         tmp.write_text(json.dumps(doc))
+        # repro-analysis: disable=REPRO002 heartbeats are per-step ephemeral liveness signals; fsyncing one per training step would serialize the hot loop on the platter, and a beat lost to power-loss is indistinguishable from the host being dead (which is what the monitor concludes anyway)
         os.replace(tmp, self._path)  # readers never see a torn beat
 
 

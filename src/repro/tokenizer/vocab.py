@@ -13,6 +13,8 @@ import os
 from pathlib import Path
 from typing import Optional
 
+from repro.core import env
+from repro.core.durability import fsync_dir, write_durable
 from repro.tokenizer.bpe import BPETokenizer, train_bpe
 
 _DEFAULT_VOCAB_SIZE = 8192
@@ -40,8 +42,9 @@ def save_tokenizer(tok: BPETokenizer, path: str | Path) -> None:
         "fingerprint": tok.fingerprint(),
     }
     tmp = path.with_suffix(path.suffix + ".tmp")
-    tmp.write_text(json.dumps(doc))
+    write_durable(tmp, json.dumps(doc).encode())
     os.replace(tmp, path)  # atomic publish
+    fsync_dir(path.parent)
 
 
 def load_tokenizer(path: str | Path) -> BPETokenizer:
@@ -59,7 +62,8 @@ def load_tokenizer(path: str | Path) -> BPETokenizer:
 
 
 def default_tokenizer_path() -> Path:
-    root = os.environ.get("REPRO_ASSET_DIR", os.path.join(os.path.dirname(__file__), "assets"))
+    root = env.read("REPRO_ASSET_DIR",
+                    os.path.join(os.path.dirname(__file__), "assets"))
     return Path(root) / f"repro_bpe_{_DEFAULT_VOCAB_SIZE}.json"
 
 

@@ -1,0 +1,27 @@
+"""Shared pytest wiring: the runtime lock-order sanitizer is on for
+every test carrying the ``concurrency`` or ``crash`` marker (the tests
+that actually interleave store lock paths), via ``REPRO_LOCK_SANITIZER``
+— see ``repro.core.locks``.  Stores built inside those tests get
+sanitized locks; the flag is restored afterwards so unmarked tests
+measure the production (unwrapped) primitives."""
+
+import os
+
+_SANITIZED_MARKERS = ("concurrency", "crash")
+_SAVED = object()
+
+
+def pytest_runtest_setup(item):
+    if any(item.get_closest_marker(m) for m in _SANITIZED_MARKERS):
+        item._repro_saved_sanitizer = os.environ.get("REPRO_LOCK_SANITIZER")
+        os.environ["REPRO_LOCK_SANITIZER"] = "1"
+
+
+def pytest_runtest_teardown(item):
+    saved = getattr(item, "_repro_saved_sanitizer", _SAVED)
+    if saved is _SAVED:
+        return
+    if saved is None:
+        os.environ.pop("REPRO_LOCK_SANITIZER", None)
+    else:
+        os.environ["REPRO_LOCK_SANITIZER"] = saved

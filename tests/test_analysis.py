@@ -1,0 +1,616 @@
+"""repro.analysis: per-rule trigger/non-trigger fixtures, waiver and
+baseline round-trips, the frozen-format repin gate, the env registry,
+and the runtime lock-order sanitizer (including a provoked reversed
+shard/index acquisition on a real store)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+
+import pytest
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import rules_frozen
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import parse_source, run_rules
+from repro.core import env
+from repro.core.locks import (RANKS, LockOrderViolation, make_lock,
+                              make_rlock)
+from repro.core.store import ShardedPromptStore
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _findings(sources, rule, waive=True):
+    """Run one rule over {path: source}; returns findings."""
+    files = [parse_source(p, s) for p, s in sorted(sources.items())]
+    return [f for f in run_rules(files, [rule]) if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# REPRO001 lock order
+# ---------------------------------------------------------------------------
+
+_LOCKED_STORE = '''
+import threading
+from repro.core.locks import make_lock, make_rlock
+
+class Store:
+    def __init__(self):
+        self._index_lock = make_rlock("index")
+        self.shard_locks = [make_rlock("shard") for _ in range(4)]
+        self._meta_lock = make_lock("meta")
+'''
+
+
+def test_lock_order_flags_reversed_nesting():
+    src = _LOCKED_STORE + '''
+    def read(self, sid):
+        with self._index_lock:
+            with self.shard_locks[sid]:
+                return 1
+'''
+    found = _findings({"store.py": src}, "REPRO001")
+    assert any("rank 20" in f.message and "rank 30" in f.message
+               for f in found)
+
+
+def test_lock_order_accepts_documented_nesting():
+    src = _LOCKED_STORE + '''
+    def commit(self, sid):
+        with self.shard_locks[sid]:
+            with self._index_lock:
+                return 1
+'''
+    assert _findings({"store.py": src}, "REPRO001") == []
+
+
+def test_lock_order_sees_through_one_call_level():
+    src = _LOCKED_STORE + '''
+    def publish_index(self):
+        with self._index_lock:
+            pass
+
+    def hold_meta_and_publish(self):
+        with self._meta_lock:
+            self.publish_index()
+'''
+    found = _findings({"store.py": src}, "REPRO001")
+    assert any("'index'" in f.message and "'meta'" in f.message
+               for f in found)
+
+
+def test_lock_order_flags_cycles_between_unranked_locks():
+    src = '''
+import threading
+A_LOCK = threading.Lock()
+B_LOCK = threading.Lock()
+
+def ab():
+    with A_LOCK:
+        with B_LOCK:
+            pass
+
+def ba():
+    with B_LOCK:
+        with A_LOCK:
+            pass
+'''
+    found = _findings({"mod.py": src}, "REPRO001")
+    assert any("cycle" in f.message for f in found)
+
+
+def test_lock_order_flags_fsync_under_index_lock():
+    src = _LOCKED_STORE + '''
+    def bad_publish(self, shard):
+        with self._index_lock:
+            shard.publish([])
+'''
+    found = _findings({"store.py": src}, "REPRO001")
+    assert any("blocking work" in f.message for f in found)
+
+
+def test_lock_order_resolves_bare_acquire_and_getters():
+    src = _LOCKED_STORE + '''
+    def compaction_lock(self, sid):
+        return self.shard_locks[sid]
+
+def worker(store):
+    lock = store.compaction_lock(0)
+    lock.acquire()
+    try:
+        with store._meta_lock:
+            pass
+    finally:
+        lock.release()
+'''
+    # shard(20) -> meta(40) is legal; reversed getter use must flag
+    assert _findings({"store.py": src}, "REPRO001") == []
+    src_bad = _LOCKED_STORE + '''
+    def compaction_lock(self, sid):
+        return self.shard_locks[sid]
+
+def worker(store):
+    with store._meta_lock:
+        lock = store.compaction_lock(0)
+        lock.acquire()
+        lock.release()
+'''
+    found = _findings({"store.py": src_bad}, "REPRO001")
+    assert any("'shard'" in f.message and "'meta'" in f.message
+               for f in found)
+
+
+# ---------------------------------------------------------------------------
+# REPRO002 durability
+# ---------------------------------------------------------------------------
+
+def test_durability_flags_replace_without_fsyncs():
+    src = '''
+import os
+
+def publish(tmp, final):
+    with open(tmp, "w") as f:
+        f.write("x")
+    os.replace(tmp, final)
+'''
+    found = _findings({"mod.py": src}, "REPRO002")
+    msgs = " | ".join(f.message for f in found)
+    assert "preceding file fsync" in msgs
+    assert "fsync_dir" in msgs
+
+
+def test_durability_accepts_full_sequence():
+    src = '''
+import os
+from repro.core.durability import fsync_dir, write_durable
+
+def publish(tmp, final, parent):
+    write_durable(tmp, b"x")
+    os.replace(tmp, final)
+    fsync_dir(parent)
+'''
+    assert _findings({"mod.py": src}, "REPRO002") == []
+
+
+def test_durability_waiver_suppresses_with_reason():
+    src = '''
+import os
+
+def beat(tmp, final):
+    # repro-analysis: disable=REPRO002 ephemeral liveness signal
+    os.replace(tmp, final)
+'''
+    assert _findings({"mod.py": src}, "REPRO002") == []
+
+
+def test_waiver_without_reason_is_itself_a_finding():
+    src = '''
+import os
+
+def beat(tmp, final):
+    # repro-analysis: disable=REPRO002
+    os.replace(tmp, final)
+'''
+    files = [parse_source("mod.py", src)]
+    found = run_rules(files, ["REPRO002"])
+    assert any(f.rule == "REPRO000" and "without a reason" in f.message
+               for f in found)
+
+
+# ---------------------------------------------------------------------------
+# REPRO003 frozen formats
+# ---------------------------------------------------------------------------
+
+def _fixture_manifest(tmp_path, fn_src, golden_text="golden v1"):
+    mod = tmp_path / "wire.py"
+    mod.write_text(fn_src)
+    golden = tmp_path / "test_golden.py"
+    golden.write_text(golden_text)
+    pf = parse_source("wire.py", fn_src)
+    node = rules_frozen.find_function(pf.tree, "emit")
+    manifest = {
+        "version": 1,
+        "functions": {"wire.py::emit": rules_frozen.normalized_hash(node)},
+        "golden_tests": {"test_golden.py":
+                         rules_frozen.file_sha256(str(golden))},
+    }
+    mpath = tmp_path / "frozen.json"
+    mpath.write_text(json.dumps(manifest))
+    return mod, golden, mpath
+
+
+def test_frozen_comment_and_docstring_churn_is_invisible(tmp_path, monkeypatch):
+    mod, _, mpath = _fixture_manifest(
+        tmp_path, 'def emit(x):\n    """doc."""\n    return x + 1\n')
+    monkeypatch.setenv("REPRO_ANALYSIS_FROZEN_MANIFEST", str(mpath))
+    churned = ('def emit(x):\n    """rewritten docs!"""\n'
+               '    # a new comment\n    return x + 1\n')
+    assert _findings({"wire.py": churned}, "REPRO003") == []
+
+
+def test_frozen_semantic_change_is_flagged(tmp_path, monkeypatch):
+    mod, _, mpath = _fixture_manifest(
+        tmp_path, "def emit(x):\n    return x + 1\n")
+    monkeypatch.setenv("REPRO_ANALYSIS_FROZEN_MANIFEST", str(mpath))
+    found = _findings({"wire.py": "def emit(x):\n    return x + 2\n"},
+                      "REPRO003")
+    assert found and "changed" in found[0].message
+    found = _findings({"wire.py": "def other(x):\n    return x\n"},
+                      "REPRO003")
+    assert found and "no longer exists" in found[0].message
+
+
+def test_frozen_repin_requires_changed_goldens(tmp_path, monkeypatch):
+    mod, golden, mpath = _fixture_manifest(
+        tmp_path, "def emit(x):\n    return x + 1\n")
+    monkeypatch.setenv("REPRO_ANALYSIS_FROZEN_MANIFEST", str(mpath))
+    changed = "def emit(x):\n    return x + 2\n"
+    mod.write_text(changed)
+    files = [parse_source("wire.py", changed)]
+    with pytest.raises(RuntimeError, match="golden"):
+        rules_frozen.repin(files, str(tmp_path))
+    golden.write_text("golden v2: pins the new stream bytes")
+    rules_frozen.repin(files, str(tmp_path))
+    assert _findings({"wire.py": changed}, "REPRO003") == []
+
+
+def test_frozen_src_pins_match_current_tree():
+    """The committed manifest matches the committed frozen functions."""
+    manifest = rules_frozen.load_manifest(rules_frozen.DEFAULT_MANIFEST)
+    files = []
+    for spec in manifest["functions"]:
+        rel = spec.split("::", 1)[0]
+        full = os.path.join(REPO, rel)
+        with open(full) as fh:
+            files.append(parse_source(rel, fh.read()))
+    pins = rules_frozen.compute_pins(files, manifest)
+    assert pins == manifest["functions"]
+
+
+# ---------------------------------------------------------------------------
+# REPRO004 kernel hygiene
+# ---------------------------------------------------------------------------
+
+_KERNEL_WRAP = '''
+import functools
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SCALE = jnp.float32(2.0)
+_state = {{}}
+
+def _kernel(x_ref, o_ref):
+{body}
+
+def launch(x):
+    return pl.pallas_call(_kernel, out_shape=x)(x)
+'''
+
+
+def test_kernel_hygiene_flags_host_state():
+    bad_bodies = {
+        "    print('tracing')": "print",
+        "    o_ref[...] = x_ref[...] * _state['k']": "mutable state",
+        "    import numpy as np\n    o_ref[...] = np.random.rand()":
+            "host module",
+    }
+    for body, why in bad_bodies.items():
+        src = _KERNEL_WRAP.format(body=body)
+        found = _findings({"kernel.py": src}, "REPRO004")
+        assert found, f"expected a finding for: {why}"
+
+
+def test_kernel_hygiene_accepts_clean_kernel():
+    src = _KERNEL_WRAP.format(
+        body="    o_ref[...] = x_ref[...] * _SCALE")
+    assert _findings({"kernel.py": src}, "REPRO004") == []
+
+
+def test_kernel_hygiene_flags_captured_shape():
+    src = '''
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+table = jnp.zeros((8,))
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + table.shape[0]
+
+def launch(x):
+    return pl.pallas_call(_kernel, out_shape=x)(x)
+'''
+    found = _findings({"kernel.py": src}, "REPRO004")
+    assert any("shape" in f.message for f in found)
+
+
+def test_kernel_hygiene_real_kernels_are_clean():
+    files = []
+    kern_root = os.path.join(REPO, "src", "repro", "kernels")
+    for dirpath, _, names in os.walk(kern_root):
+        for name in names:
+            if name.endswith(".py"):
+                full = os.path.join(dirpath, name)
+                rel = os.path.relpath(full, REPO)
+                with open(full) as fh:
+                    files.append(parse_source(rel, fh.read()))
+    assert [f for f in run_rules(files, ["REPRO004"])
+            if f.rule == "REPRO004"] == []
+
+
+# ---------------------------------------------------------------------------
+# REPRO005 env registry
+# ---------------------------------------------------------------------------
+
+def test_env_rule_flags_raw_and_dynamic_reads():
+    src = '''
+import os
+
+def knob():
+    return os.environ.get("REPRO_SOME_KNOB", "1")
+
+def dynamic(name):
+    return os.getenv(name)
+'''
+    found = _findings({"mod.py": src}, "REPRO005")
+    assert len(found) == 2
+    assert any("REPRO_SOME_KNOB" in f.message for f in found)
+    assert any("dynamic key" in f.message for f in found)
+
+
+def test_env_rule_ignores_writes_and_foreign_vars():
+    src = '''
+import os
+
+def setup():
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    return os.environ.get("XLA_FLAGS", "")
+'''
+    assert _findings({"mod.py": src}, "REPRO005") == []
+    # env.py itself is the sanctioned reader
+    raw = 'import os\n\ndef read(n):\n    return os.environ.get(n, "")\n'
+    assert _findings({"repro/core/env.py": raw}, "REPRO005") == []
+
+
+# ---------------------------------------------------------------------------
+# REPRO006 pool re-entrancy
+# ---------------------------------------------------------------------------
+
+_POOL_SRC = '''
+def _codec_pool():
+    return None
+
+def _parallel_map(fn, payloads):
+    pool = _codec_pool()
+    return list(pool.map(fn, payloads))
+
+def compress_one(p):
+    return p
+
+def nested_batch(payloads):
+    return _parallel_map(lambda p: compress_one(p), payloads)
+
+def reentrant_task(p):
+    return _parallel_map(lambda q: q, [p])
+
+def deadlock_batch(payloads):
+    return _parallel_map(reentrant_task, payloads)
+
+def indirect(p):
+    return reentrant_task(p)
+
+def indirect_batch(payloads):
+    return _parallel_map(lambda p: indirect(p), payloads)
+'''
+
+
+def test_pool_rule_flags_reentrant_tasks_only():
+    found = _findings({"codec.py": _POOL_SRC}, "REPRO006")
+    lines = {f.line for f in found}
+    src_lines = _POOL_SRC.splitlines()
+    flagged = {src_lines[l - 1].strip() for l in lines}
+    assert any("reentrant_task" in s for s in flagged)
+    assert any("indirect" in s for s in flagged)
+    assert not any("compress_one" in s for s in flagged)
+
+
+def test_pool_rule_follows_registry_dict_dispatch():
+    src = '''
+def _codec_pool():
+    return None
+
+def _parallel_map(fn, payloads):
+    pool = _codec_pool()
+    return list(pool.map(fn, payloads))
+
+def _bad_backend(p):
+    return _parallel_map(lambda q: q, [p])
+
+BACKENDS = {"bad": (_bad_backend, None)}
+
+def compress_bytes(p, backend="bad"):
+    fn = BACKENDS[backend][0]
+    return fn(p)
+
+def batch(payloads):
+    return _parallel_map(lambda p: compress_bytes(p), payloads)
+'''
+    found = _findings({"codec.py": src}, "REPRO006")
+    assert any("compress_bytes" in f.message or "lambda" in f.message
+               for f in found)
+
+
+# ---------------------------------------------------------------------------
+# CLI, baseline round-trip, and the committed tree
+# ---------------------------------------------------------------------------
+
+def test_cli_src_is_clean_with_empty_baseline(capsys):
+    rc = cli_main([os.path.join(REPO, "src"),
+                   "--baseline", os.path.join(REPO,
+                                              "analysis-baseline.json")])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    baseline = json.load(open(os.path.join(REPO, "analysis-baseline.json")))
+    assert baseline["findings"] == []
+
+
+def test_cli_json_format_and_exit_code(tmp_path, capsys):
+    bad = tmp_path / "mod.py"
+    bad.write_text('import os\n\ndef f():\n'
+                   '    return os.environ.get("REPRO_X")\n')
+    rc = cli_main([str(bad), "--format", "json"])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert report["findings"][0]["rule"] == "REPRO005"
+
+
+def test_cli_baseline_roundtrip(tmp_path, capsys):
+    bad = tmp_path / "mod.py"
+    bad.write_text('import os\n\ndef f():\n'
+                   '    return os.environ.get("REPRO_X")\n')
+    base = tmp_path / "base.json"
+    assert cli_main([str(bad), "--write-baseline", str(base)]) == 0
+    capsys.readouterr()
+    assert cli_main([str(bad), "--baseline", str(base)]) == 0
+    out = capsys.readouterr().out
+    assert "baselined" in out
+    # a second, new finding still fails
+    bad.write_text(bad.read_text()
+                   + '\ndef g():\n    return os.environ.get("REPRO_Y")\n')
+    assert cli_main([str(bad), "--baseline", str(base)]) == 1
+
+
+def test_cli_rejects_unknown_rule(tmp_path, capsys):
+    mod = tmp_path / "m.py"
+    mod.write_text("x = 1\n")
+    assert cli_main([str(mod), "--rules", "REPRO999"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# env registry runtime behavior
+# ---------------------------------------------------------------------------
+
+def test_env_registry_rejects_undeclared_names():
+    with pytest.raises(RuntimeError, match="undeclared"):
+        env.read("REPRO_NOT_A_KNOB")
+
+
+def test_env_registry_parser_contracts(monkeypatch):
+    monkeypatch.setenv("REPRO_CODEC_THREADS", "garbage")
+    assert env.read("REPRO_CODEC_THREADS") == 0      # historical: disable
+    monkeypatch.setenv("REPRO_LZ_MODE", "bogus")
+    assert env.read("REPRO_LZ_MODE") == "auto"
+    monkeypatch.setenv("REPRO_LZ_DEVICE_MIN", "nah")
+    assert env.read("REPRO_LZ_DEVICE_MIN", 77) == 77  # raise -> default
+    monkeypatch.setenv("REPRO_RANS_LANES", "48")
+    with pytest.warns(RuntimeWarning):
+        assert env.read("REPRO_RANS_LANES") == 32     # clamp to pow2
+    monkeypatch.delenv("REPRO_RANS_LANES")
+    assert env.read("REPRO_RANS_LANES") is None
+
+
+# ---------------------------------------------------------------------------
+# runtime lock-order sanitizer
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def sanitized(monkeypatch):
+    monkeypatch.setenv("REPRO_LOCK_SANITIZER", "1")
+
+
+def test_sanitizer_disabled_returns_plain_primitives(monkeypatch):
+    monkeypatch.delenv("REPRO_LOCK_SANITIZER", raising=False)
+    assert type(make_lock("shard")) is type(threading.Lock())
+
+
+def test_sanitizer_allows_documented_order(sanitized):
+    shard, index = make_rlock("shard"), make_rlock("index")
+    with shard:
+        with index:
+            pass
+    with index:  # and re-entry of an rlock is fine
+        with index:
+            pass
+
+
+def test_sanitizer_raises_on_reversal_with_sites(sanitized):
+    shard, index = make_rlock("shard"), make_rlock("index")
+    with index:
+        with pytest.raises(LockOrderViolation) as exc:
+            shard.acquire()
+    msg = str(exc.value)
+    assert "rank 20" in msg and "rank 30" in msg
+    assert "test_analysis.py" in msg  # acquisition sites are reported
+
+
+def test_sanitizer_equal_ranks_allowed(sanitized):
+    locks = [make_rlock("shard") for _ in range(3)]
+    for lock in locks:
+        lock.acquire()
+    for lock in reversed(locks):
+        lock.release()
+
+
+def test_sanitizer_self_deadlock_on_plain_lock(sanitized):
+    lock = make_lock("meta")
+    lock.acquire()
+    with pytest.raises(LockOrderViolation, match="self-deadlock"):
+        lock.acquire()
+    lock.release()
+
+
+def test_sanitizer_is_per_thread(sanitized):
+    shard, index = make_rlock("shard"), make_rlock("index")
+    errors = []
+
+    def other():
+        try:
+            with shard:   # this thread holds nothing else: fine
+                pass
+        except LockOrderViolation as exc:  # pragma: no cover
+            errors.append(exc)
+
+    with index:
+        t = threading.Thread(target=other)
+        t.start()
+        t.join()
+    assert errors == []
+
+
+def test_sanitizer_catches_reversed_store_acquisition(sanitized, tmp_path):
+    """The acceptance scenario: holding the index lock, a reader path
+    that takes a shard lock must raise under the sanitizer."""
+    store = ShardedPromptStore(tmp_path, n_shards=2)
+    key = store.put("the quick brown fox")
+    assert store.get(key) == "the quick brown fox"
+    with store._index_lock:
+        with pytest.raises(LockOrderViolation):
+            store.get(key)
+    # ...and the store still works once the bad hold is released
+    assert store.get(key) == "the quick brown fox"
+
+
+@pytest.mark.concurrency
+def test_concurrency_marker_turns_sanitizer_on(tmp_path):
+    """conftest wires REPRO_LOCK_SANITIZER=1 for this marker; a store
+    built here must carry sanitized locks."""
+    assert os.environ.get("REPRO_LOCK_SANITIZER") == "1"
+    store = ShardedPromptStore(tmp_path, n_shards=2)
+    key = store.put("marker-enabled store")
+    with store._index_lock:
+        with pytest.raises(LockOrderViolation):
+            store.get(key)
+
+
+def test_sanitized_store_full_pipeline(sanitized, tmp_path):
+    """put/get/batch/rebalance all stay violation-free under the
+    sanitizer (the documented order is actually followed)."""
+    store = ShardedPromptStore(tmp_path, n_shards=2)
+    keys = store.put_many([f"prompt {i} body text" for i in range(24)])
+    assert store.get(keys[7]) == "prompt 7 body text"
+    store.rebalance(4)
+    assert store.get(keys[3]) == "prompt 3 body text"
+    assert len(store) == 24
