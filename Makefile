@@ -13,9 +13,10 @@
 #   make bench-codec the codec hot-path sweep alone (BENCH_codec_throughput.json)
 #   make bench-kernels the device-kernel parity gate + accelerator sweeps
 #                    (BENCH_kernel_codec.json; timings SKIP on CPU hosts)
+#   make obs-smoke   REPRO_OBS=0 codec overhead guard (scripts/obs_smoke.py)
 PY := PYTHONPATH=src python
 
-.PHONY: analyze quick crash test bench bench-codec bench-kernels
+.PHONY: analyze quick crash test bench bench-codec bench-kernels obs-smoke
 
 analyze:
 	$(PY) -m repro.analysis src --baseline analysis-baseline.json
@@ -37,3 +38,6 @@ bench-codec:
 
 bench-kernels:
 	PYTHONPATH=src:. python benchmarks/kernel_throughput.py
+
+obs-smoke:
+	$(PY) scripts/obs_smoke.py

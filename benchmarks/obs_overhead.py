@@ -1,0 +1,85 @@
+"""Enabled-mode obs overhead: what does live telemetry cost the codec?
+
+Three measurements of the same ~1 MiB repro-lzr compress:
+
+* ``raw``      — ``compress_bytes`` directly (no codec framing, no obs);
+* ``enabled``  — ``ByteCompressorCodec.encode_batch`` built with
+                 REPRO_OBS=1: every batch observes a latency histogram
+                 and four byte counters;
+* ``disabled`` — the same codec built with REPRO_OBS=0 (no-op stubs);
+                 informational here, gated hard in scripts/obs_smoke.py.
+
+Per-batch instrumentation cost is O(1) (two perf_counter reads, one
+histogram observe, four counter incs, two ``sum(len(...))`` passes over
+the payload list), so on a single 1 MiB payload (~hundreds of ms of
+codec work) enabled-mode overhead should be well under the 5% design
+target; the FAIL threshold is 10% — trip it and the obs layer has
+grown per-byte work.  Instruments created here stay registered, so the
+sweep-end ``BENCH_obs_snapshot.json`` (benchmarks/run.py) records this
+module's traffic too.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import csv_row
+
+TARGET = 0.05   # design target for enabled-mode overhead
+FAIL_AT = 0.10  # derived column says FAIL above this
+REPS = 5
+
+
+def _best(fn, reps=REPS):
+    fn()  # warmup
+    b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        b = min(b, time.perf_counter() - t0)
+    return b
+
+
+def run():
+    from repro.core.codec import ByteCompressorCodec
+    from repro.core.zstd_backend import compress_bytes
+    from repro.data.corpus import generate_corpus
+
+    blob = "\n".join(
+        p.text for p in generate_corpus(32, seed=0)).encode()[:1 << 20]
+    t_raw = _best(lambda: compress_bytes(blob, backend="repro-lzr"))
+
+    # REPRO_OBS is resolved at instrument creation, i.e. codec
+    # construction — build a fresh codec under each setting
+    prior = os.environ.get("REPRO_OBS")
+    times = {}
+    try:
+        for mode in ("1", "0"):
+            os.environ["REPRO_OBS"] = mode
+            codec = ByteCompressorCodec(backend="repro-lzr")
+            times[mode] = _best(lambda: codec.encode_batch([blob]))
+    finally:
+        if prior is None:
+            os.environ.pop("REPRO_OBS", None)
+        else:
+            os.environ["REPRO_OBS"] = prior
+
+    rows = [csv_row("obs_raw_1mib", t_raw * 1e6, "baseline")]
+    on = times["1"] / t_raw - 1.0
+    verdict = ("FAIL" if on > FAIL_AT
+               else "ok" if on <= TARGET else "above_target")
+    rows.append(csv_row(
+        "obs_enabled_1mib", times["1"] * 1e6,
+        f"{verdict}:{on * 100:+.1f}%_target<{TARGET * 100:.0f}%"
+        f"_fail>{FAIL_AT * 100:.0f}%"))
+    off = times["0"] / t_raw - 1.0
+    rows.append(csv_row(
+        "obs_disabled_1mib", times["0"] * 1e6,
+        f"info:{off * 100:+.1f}%_gated_in_obs_smoke"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

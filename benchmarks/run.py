@@ -27,6 +27,7 @@ MODULES = [
     ("dist_grad_compress", "grad_compress"),
     ("codec_throughput", "codec_throughput"),
     ("kernel_codec", "kernel_throughput"),
+    ("obs_overhead", "obs_overhead"),
 ]
 
 
@@ -55,7 +56,24 @@ def main() -> None:
             if "FAIL" in row or "ERROR" in row:
                 failed = True
         print(f"{name}_wall,{1e6*dt:.0f},done")
+    _dump_obs_snapshot()
     sys.exit(1 if failed else 0)
+
+
+def _dump_obs_snapshot() -> None:
+    """Attach the sweep's obs snapshot (every benchmark above ran with
+    live instrumentation) so a perf regression comes with its per-stage
+    codec timings and byte counters on the same commit."""
+    import json
+    from pathlib import Path
+
+    from repro import obs
+
+    snap = obs.snapshot()
+    out = Path(__file__).resolve().parent / "BENCH_obs_snapshot.json"
+    out.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
+    print(f"obs_snapshot,0,{len(snap['counters'])}c_{len(snap['gauges'])}g_"
+          f"{len(snap['histograms'])}h_{out.name}")
 
 
 if __name__ == "__main__":

@@ -48,6 +48,11 @@ assert speedup >= 1.8, (
     "did the hot path silently fall back to the scalar loop?")
 PYEOF
 
+# Obs smoke: with REPRO_OBS=0 the instrumented codec hot path must sit
+# within 3% of the raw compress baseline — the guard against metric
+# bookkeeping leaking outside the enabled() gate (see scripts/obs_smoke.py).
+python scripts/obs_smoke.py
+
 # Device-kernel smoke: both codec kernels (LZ77 match finder, lane-parallel
 # rANS) run in interpret mode and must be byte-identical to the scalar-
 # rooted oracles — the guard against a kernel or dispatch change silently

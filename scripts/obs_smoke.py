@@ -1,0 +1,66 @@
+"""Disabled-mode obs overhead smoke (`make obs-smoke`, scripts/check.sh).
+
+With ``REPRO_OBS=0`` the instrumented codec hot path must run within a
+few percent of the uninstrumented PR-5 baseline: the only residue the
+obs layer is allowed to leave on a disabled process is two
+``perf_counter`` reads plus one no-op method call per *batch* (byte
+sums are computed only by the enabled twin).  On a ~1 MB repro-lzr
+compress (~hundreds of ms) that residue is nanoseconds; a failure here
+means per-call work leaked outside the ``obs.enabled()`` gate.
+
+The baseline is ``compress_bytes`` called directly — the exact path
+``ByteCompressorCodec.encode_batch`` wrapped before instrumentation —
+so the measured delta is framing + disabled-obs residue and nothing
+else.  Best-of-N with a warmup pass keeps allocator/JIT noise out; the
+3% ceiling is ~30x the residue, so only a real regression trips it.
+"""
+
+import os
+import sys
+import time
+
+os.environ["REPRO_OBS"] = "0"  # before any repro import: codecs built
+                               # below must resolve to the no-op stubs
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.codec import ByteCompressorCodec          # noqa: E402
+from repro.core.zstd_backend import compress_bytes        # noqa: E402
+from repro.data.corpus import generate_corpus             # noqa: E402
+
+CEILING = 0.03  # fractional overhead allowed with REPRO_OBS=0
+REPS = 5
+
+
+def best(fn, reps=REPS):
+    fn()  # warmup
+    b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        b = min(b, time.perf_counter() - t0)
+    return b
+
+
+def main() -> int:
+    blob = "\n".join(
+        p.text for p in generate_corpus(32, seed=0)).encode()[:1 << 20]
+    codec = ByteCompressorCodec(backend="repro-lzr")
+
+    t_raw = best(lambda: compress_bytes(blob, backend="repro-lzr"))
+    t_obs = best(lambda: codec.encode_batch([blob]))
+    overhead = t_obs / t_raw - 1.0
+
+    print(f"obs smoke: repro-lzr 1MiB compress raw {t_raw * 1e3:.0f}ms "
+          f"instrumented(REPRO_OBS=0) {t_obs * 1e3:.0f}ms "
+          f"overhead {overhead * 100:+.1f}% (ceiling {CEILING * 100:.0f}%)")
+    if overhead > CEILING:
+        print("obs smoke: FAIL — disabled-mode instrumentation is doing "
+              "per-call work; check that all metric math sits behind the "
+              "enabled twin in repro.core.codec", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -108,7 +108,7 @@ def all_rules() -> Dict[str, Callable[[], Rule]]:
     # is complete no matter which entry point asked
     from repro.analysis import (rules_durability, rules_env,  # noqa: F401
                                 rules_frozen, rules_kernels, rules_locks,
-                                rules_pool)
+                                rules_obs, rules_pool)
     return dict(_RULES)
 
 

@@ -35,10 +35,12 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 from repro.core import env
+from repro import obs
 
 import numpy as np
 
@@ -108,6 +110,76 @@ def _parallel_map(fn: Callable[[bytes], bytes],
     return [fn(p) for p in payloads]
 
 
+# ---------------------------------------------------------------------------
+# Codec observability
+# ---------------------------------------------------------------------------
+#
+# Every stage/pipeline owns a `_CodecObs` created once in __init__ —
+# the REPRO_OBS gate is resolved there, so the per-batch cost with obs
+# disabled is one perf_counter read and one no-op method call (byte
+# totals are only summed by the enabled twin).  Pipelines additionally
+# export the paper's Table metrics as derived gauges: live compression
+# ratio and encode/decode MB/s per method, computed from the running
+# byte/second totals at snapshot time.
+
+
+class _CodecObs:
+    __slots__ = ("enc_s", "dec_s", "enc_in", "enc_out", "dec_in", "dec_out")
+
+    def __init__(self, **labels) -> None:
+        self.enc_s = obs.histogram("codec.encode.s", **labels)
+        self.dec_s = obs.histogram("codec.decode.s", **labels)
+        self.enc_in = obs.counter("codec.encode.bytes_in", **labels)
+        self.enc_out = obs.counter("codec.encode.bytes_out", **labels)
+        self.dec_in = obs.counter("codec.decode.bytes_in", **labels)
+        self.dec_out = obs.counter("codec.decode.bytes_out", **labels)
+
+    def encode(self, dt: float, payloads: Sequence[bytes],
+               out: Sequence[bytes]) -> None:
+        self.enc_s.observe(dt)
+        self.enc_in.inc(sum(map(len, payloads)))
+        self.enc_out.inc(sum(map(len, out)))
+
+    def decode(self, dt: float, payloads: Sequence[bytes],
+               out: Sequence[bytes]) -> None:
+        self.dec_s.observe(dt)
+        self.dec_in.inc(sum(map(len, payloads)))
+        self.dec_out.inc(sum(map(len, out)))
+
+
+class _NullCodecObs:
+    __slots__ = ()
+
+    def encode(self, dt, payloads, out) -> None:
+        pass
+
+    def decode(self, dt, payloads, out) -> None:
+        pass
+
+
+_NULL_CODEC_OBS = _NullCodecObs()
+
+
+def _codec_obs(**labels):
+    return _CodecObs(**labels) if obs.enabled() else _NULL_CODEC_OBS
+
+
+def _pipeline_obs(method: str):
+    """Method-level obs plus the derived ratio/throughput gauges."""
+    o = _codec_obs(method=method)
+    if isinstance(o, _CodecObs):
+        obs.derived_gauge(
+            "codec.compression_ratio",
+            lambda: o.enc_in.value / o.enc_out.value, method=method)
+        obs.derived_gauge(
+            "codec.encode_mb_s",
+            lambda: (o.enc_in.value / 2**20) / o.enc_s.sum, method=method)
+        obs.derived_gauge(
+            "codec.decode_mb_s",
+            lambda: (o.dec_out.value / 2**20) / o.dec_s.sum, method=method)
+    return o
+
+
 @runtime_checkable
 class Codec(Protocol):
     """A bijective batch transform over byte payloads."""
@@ -149,6 +221,7 @@ class TokenPackCodec:
         self.tokenizer = tokenizer
         self.scheme = scheme
         self.use_device = use_device
+        self._obs = _codec_obs(stage=self.name, scheme=scheme)
 
     # -- token-level entry points (used by the token-stream storage mode) --
 
@@ -195,11 +268,17 @@ class TokenPackCodec:
     # -- Codec protocol ----------------------------------------------------
 
     def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        t0 = time.perf_counter()
         ids_list = self.tokenizer.encode_batch([p.decode("utf-8") for p in payloads])
-        return self.encode_ids_batch([np.asarray(ids, np.uint32) for ids in ids_list])
+        out = self.encode_ids_batch([np.asarray(ids, np.uint32) for ids in ids_list])
+        self._obs.encode(time.perf_counter() - t0, payloads, out)
+        return out
 
     def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return [self.tokenizer.decode_bytes(ids) for ids in self.decode_ids_batch(payloads)]
+        t0 = time.perf_counter()
+        out = [self.tokenizer.decode_bytes(ids) for ids in self.decode_ids_batch(payloads)]
+        self._obs.decode(time.perf_counter() - t0, payloads, out)
+        return out
 
 
 class ByteCompressorCodec:
@@ -212,15 +291,22 @@ class ByteCompressorCodec:
             raise ValueError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}")
         self.level = level
         self.backend = backend
+        self._obs = _codec_obs(stage=self.name, backend=backend)
 
     def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return _parallel_map(
+        t0 = time.perf_counter()
+        out = _parallel_map(
             lambda p: compress_bytes(p, level=self.level, backend=self.backend),
             payloads)
+        self._obs.encode(time.perf_counter() - t0, payloads, out)
+        return out
 
     def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return _parallel_map(
+        t0 = time.perf_counter()
+        out = _parallel_map(
             lambda p: decompress_bytes(p, backend=self.backend), payloads)
+        self._obs.decode(time.perf_counter() - t0, payloads, out)
+        return out
 
 
 class DictCodec:
@@ -247,16 +333,23 @@ class DictCodec:
         self.dictionary = bytes(dictionary)
         self.level = level
         self.backend = backend
+        self._obs = _codec_obs(stage=self.name, backend=backend)
 
     def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return _parallel_map(
+        t0 = time.perf_counter()
+        out = _parallel_map(
             lambda p: compress_bytes_dict(p, self.dictionary, level=self.level,
                                           backend=self.backend), payloads)
+        self._obs.encode(time.perf_counter() - t0, payloads, out)
+        return out
 
     def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
-        return _parallel_map(
+        t0 = time.perf_counter()
+        out = _parallel_map(
             lambda p: decompress_bytes_dict(p, self.dictionary,
                                             backend=self.backend), payloads)
+        self._obs.decode(time.perf_counter() - t0, payloads, out)
+        return out
 
 
 class PipelineCodec:
@@ -267,17 +360,22 @@ class PipelineCodec:
             raise ValueError("pipeline needs at least one stage")
         self.stages = list(stages)
         self.name = name
+        self._obs = _pipeline_obs(name)
 
     def encode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        t0 = time.perf_counter()
         out = list(payloads)
         for stage in self.stages:
             out = stage.encode_batch(out)
+        self._obs.encode(time.perf_counter() - t0, payloads, out)
         return out
 
     def decode_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        t0 = time.perf_counter()
         out = list(payloads)
         for stage in reversed(self.stages):
             out = stage.decode_batch(out)
+        self._obs.decode(time.perf_counter() - t0, payloads, out)
         return out
 
 

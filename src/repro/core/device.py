@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro import obs
 from repro.core import env
 
 
@@ -51,5 +52,12 @@ def use_device(size: int, env_var: str, default_min: int,
     a non-CPU backend must be attached and ``size`` must clear the
     crossover."""
     if force is not None:
-        return force
-    return backend_available() and size >= crossover(env_var, default_min)
+        decision = force
+    else:
+        decision = (backend_available()
+                    and size >= crossover(env_var, default_min))
+    # routing census: how often each kernel family actually leaves the
+    # host (obs.counter is a no-op stub when REPRO_OBS=0)
+    obs.counter("device.dispatch", knob=env_var.lower(),
+                path="device" if decision else "host").inc()
+    return decision

@@ -21,14 +21,19 @@ crashes every save on such hosts.
 from __future__ import annotations
 
 import os
+import time
 from pathlib import Path
 from typing import Union
+
+from repro import obs
 
 
 def fsync_file(f) -> None:
     """Flush a writable file object's buffers down to the platter."""
+    t0 = time.perf_counter()
     f.flush()
     os.fsync(f.fileno())
+    obs.histogram("durability.fsync.s").observe(time.perf_counter() - t0)
 
 
 def fsync_dir(path: Union[str, Path]) -> None:

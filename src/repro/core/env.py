@@ -187,3 +187,9 @@ declare("REPRO_LOCK_SANITIZER", _parse_flag, False,
 declare("REPRO_ANALYSIS_FROZEN_MANIFEST", _parse_str, None,
         "override path of the frozen wire-format hash manifest "
         "(repro.analysis rule REPRO003; tests point it at fixtures)")
+declare("REPRO_OBS", _parse_flag, True,
+        "0/false disables the repro.obs metrics/tracing layer; "
+        "instrument sites resolve to shared no-op stubs at creation")
+declare("REPRO_OBS_JOURNAL", _parse_int_min0, 4096,
+        "capacity (events) of the repro.obs span journal ring buffer; "
+        "oldest events are dropped first")

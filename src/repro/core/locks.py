@@ -9,6 +9,7 @@ order, and only under the rebalance lock, so two such sweeps never
 interleave).
 
     rebalance(0) < compact(10) < shard(20) < index(30) < meta(40)
+                                                       < obs(100)
 
 :func:`make_lock` / :func:`make_rlock` are drop-in constructor
 replacements for ``threading.Lock()`` / ``threading.RLock()``.  With
@@ -43,6 +44,12 @@ RANKS: Dict[str, int] = {
     "shard": 20,
     "index": 30,
     "meta": 40,
+    # Leaf rank: repro.obs instrument/registry/journal locks.  Metrics
+    # are recorded from inside every other critical section (a shard
+    # append observes its fsync latency while the shard lock is held),
+    # so obs locks must be acquirable while holding anything — and obs
+    # code never calls back out, so nothing is ever acquired under them.
+    "obs": 100,
 }
 
 

@@ -74,6 +74,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.api import PromptCompressor, parse_frame
 from repro.core.durability import fsync_dir, fsync_file, write_durable
 from repro.core.locks import make_lock, make_rlock
@@ -171,8 +172,7 @@ class _Shard:
             for blob in blobs:
                 offsets.append(f.tell())
                 f.write(blob)
-            f.flush()
-            os.fsync(f.fileno())
+            fsync_file(f)
         return offsets
 
     def publish(self, records: Sequence[dict]) -> None:
@@ -182,8 +182,7 @@ class _Shard:
         with open(self.index_path, "a") as f:
             for rec in records:
                 f.write(json.dumps(rec) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
+            fsync_file(f)
 
     def read(self, offset: int, length: int) -> bytes:
         with open(self.data_path, "rb") as f:
@@ -486,34 +485,36 @@ class ShardedPromptStore:
         entry carries key/seq/method/n_chars/blob and commits via
         `commit_batch`.
         """
-        keys = [_sha(t) for t in texts]
-        # first occurrence of each not-yet-stored key, in batch order
-        new_keys: List[str] = []
-        new_texts: List[str] = []
-        seen: set = set()
-        with self._index_lock:
-            for key, text in zip(keys, texts):
-                if key in self._index or key in seen:
-                    continue
-                seen.add(key)
-                new_keys.append(key)
-                new_texts.append(text)
-        if not new_texts:
-            return keys, {}
-        blobs = self.compressor.compress_batch(new_texts, method)
-        with self._index_lock:
-            base_seq = self._next_seq
-            self._next_seq += len(new_keys)
-        plan: Dict[int, List[dict]] = {}
-        for i, key in enumerate(new_keys):
-            plan.setdefault(self._shard_of(key), []).append({
-                "key": key,
-                "seq": base_seq + i,  # global put order, reopen-stable
-                "method": method or self.compressor.method,
-                "n_chars": len(new_texts[i]),
-                "blob": blobs[i],
-            })
-        return keys, plan
+        with obs.span("store.plan"):
+            keys = [_sha(t) for t in texts]
+            # first occurrence of each not-yet-stored key, in batch order
+            new_keys: List[str] = []
+            new_texts: List[str] = []
+            seen: set = set()
+            with self._index_lock:
+                for key, text in zip(keys, texts):
+                    if key in self._index or key in seen:
+                        continue
+                    seen.add(key)
+                    new_keys.append(key)
+                    new_texts.append(text)
+            obs.histogram("store.plan.records").observe(len(new_texts))
+            if not new_texts:
+                return keys, {}
+            blobs = self.compressor.compress_batch(new_texts, method)
+            with self._index_lock:
+                base_seq = self._next_seq
+                self._next_seq += len(new_keys)
+            plan: Dict[int, List[dict]] = {}
+            for i, key in enumerate(new_keys):
+                plan.setdefault(self._shard_of(key), []).append({
+                    "key": key,
+                    "seq": base_seq + i,  # global put order, reopen-stable
+                    "method": method or self.compressor.method,
+                    "n_chars": len(new_texts[i]),
+                    "blob": blobs[i],
+                })
+            return keys, plan
 
     def commit_batch(self, shard_id: int, entries: Sequence[dict]) -> List[dict]:
         """Stage 2 of a group commit: durably append one shard's planned
@@ -527,31 +528,33 @@ class ShardedPromptStore:
         committed there — a planned write is never lost and never lands
         in a shard its key no longer routes to."""
         out: List[dict] = []
+        obs.histogram("store.commit.records").observe(len(entries))
         pending: List[Tuple[int, List[dict]]] = [(shard_id, list(entries))]
-        while pending:
-            sid, group = pending.pop()
-            if not group:
-                continue
-            lay = self._layout
-            if sid >= lay.n_shards or any(
-                    self._shard_of(e["key"], lay.n_shards) != sid
-                    for e in group):
-                regroup: Dict[int, List[dict]] = {}
-                for e in group:
-                    regroup.setdefault(
-                        self._shard_of(e["key"], lay.n_shards), []).append(e)
-                pending.extend(regroup.items())
-                continue
-            with lay.shard_locks[sid]:
-                if self._layout is not lay:
-                    pending.append((sid, group))  # raced a rebalance: retry
+        with obs.span("store.commit"):
+            while pending:
+                sid, group = pending.pop()
+                if not group:
                     continue
-                shard = lay.shards[sid]
-                records = _index_records(
-                    group, shard.append([e["blob"] for e in group]))
-                shard.publish(records)
-                self._publish_index(records)
-                out.extend(records)
+                lay = self._layout
+                if sid >= lay.n_shards or any(
+                        self._shard_of(e["key"], lay.n_shards) != sid
+                        for e in group):
+                    regroup: Dict[int, List[dict]] = {}
+                    for e in group:
+                        regroup.setdefault(
+                            self._shard_of(e["key"], lay.n_shards), []).append(e)
+                    pending.extend(regroup.items())
+                    continue
+                with lay.shard_locks[sid]:
+                    if self._layout is not lay:
+                        pending.append((sid, group))  # raced a rebalance: retry
+                        continue
+                    shard = lay.shards[sid]
+                    records = _index_records(
+                        group, shard.append([e["blob"] for e in group]))
+                    shard.publish(records)
+                    self._publish_index(records)
+                    out.extend(records)
         return out
 
     def _publish_index(self, records: Sequence[dict]) -> None:
@@ -601,7 +604,9 @@ class ShardedPromptStore:
         return self.compressor.tokens(self._read_blob(key))
 
     def get_tokens_many(self, keys: Sequence[str]) -> List[np.ndarray]:
-        return self.compressor.tokens_batch([self._read_blob(k) for k in keys])
+        with obs.span("store.get_tokens"):
+            return self.compressor.tokens_batch(
+                [self._read_blob(k) for k in keys])
 
     def iter_tokens(self) -> Iterator[np.ndarray]:
         keys = self.keys()
@@ -728,8 +733,7 @@ class ShardedPromptStore:
         if dictionary:
             with open(new_dict_path, "wb") as f:
                 f.write(dictionary)
-                f.flush()
-                os.fsync(f.fileno())
+                fsync_file(f)
             dict_sha = hashlib.sha256(dictionary).hexdigest()
             self.compressor.register_dictionary(dictionary)
         records = _index_records(

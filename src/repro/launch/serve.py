@@ -16,11 +16,14 @@ optionally fronted by the repro.service tier.
 from __future__ import annotations
 
 import argparse
+import json
 import tempfile
+import threading
 import time
 
 import jax
 
+from repro import obs
 from repro.data.pipeline import build_store_from_corpus
 from repro.train.serve_loop import BatchServer
 from repro.train.train_loop import init_train_state
@@ -49,9 +52,27 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--rebalance", type=int, default=0, metavar="N",
                     help="re-partition the store across N shards online "
                          "before serving (0 = keep the built layout)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick mode: small request/slot/decode budgets, "
+                         "async ingest and a token cache on — exercises "
+                         "every instrumented path in a few seconds")
+    ap.add_argument("--stats-interval", type=float, default=0.0, metavar="N",
+                    help="every N seconds print the obs metric rates since "
+                         "the previous dump (0 = off)")
+    ap.add_argument("--stats-json", metavar="PATH", default=None,
+                    help="write the final repro.obs snapshot to PATH as JSON")
     args = ap.parse_args(argv)
     if args.rebalance < 0:
         ap.error(f"--rebalance ({args.rebalance}) must be >= 0")
+    if args.stats_interval < 0:
+        ap.error(f"--stats-interval ({args.stats_interval}) must be >= 0")
+    if args.smoke:
+        args.requests = min(args.requests, 4)
+        args.slots = min(args.slots, 2)
+        args.max_new = min(args.max_new, 8)
+        args.ingest_async = True
+        if args.cache_mb == 0.0:
+            args.cache_mb = 8.0
     # an oversized --max-new would otherwise silently truncate the prompt
     # to an empty or negative slice in BatchServer._fill_slots
     # (prompt_tokens[:max_len - max_new - 1]) — refuse at parse time;
@@ -63,6 +84,24 @@ def parse_args(argv=None) -> argparse.Namespace:
     return args
 
 
+def _start_stats_dumper(interval_s: float) -> threading.Event:
+    """Print obs metric rates every `interval_s` seconds until the
+    returned event is set (daemon thread; exits with the process)."""
+    stop = threading.Event()
+
+    def loop() -> None:
+        prev = obs.snapshot()
+        while not stop.wait(interval_s):
+            cur = obs.snapshot()
+            text = obs.render_diff(obs.diff(prev, cur))
+            print("\n".join("[obs] " + line for line in text.splitlines()))
+            prev = cur
+
+    threading.Thread(target=loop, name="obs-stats-dumper",
+                     daemon=True).start()
+    return stop
+
+
 def main(argv=None) -> None:
     args = parse_args(argv)
 
@@ -70,6 +109,8 @@ def main(argv=None) -> None:
     from repro.service import PromptService
 
     cfg = CONFIG.smoke()
+    stats_stop = (_start_stats_dumper(args.stats_interval)
+                  if args.stats_interval else None)
     params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
     with tempfile.TemporaryDirectory() as tmp:
         store = build_store_from_corpus(tmp, n_prompts=max(8, args.requests), seed=4,
@@ -97,6 +138,10 @@ def main(argv=None) -> None:
             server = BatchServer(params, cfg, batch_slots=args.slots,
                                  max_len=args.max_len)
             keys = service.keys()[: args.requests]
+            if args.smoke and service.cache is not None:
+                # warm pass: the admission below then serves from the
+                # token cache, the hot-prompt path of a production tier
+                service.get_tokens_many(keys)
             # admission goes through the service: cache hits skip the
             # codec decode on repeat keys
             t0 = time.perf_counter()
@@ -111,6 +156,15 @@ def main(argv=None) -> None:
                 cs = service.cache.stats()
                 print(f"[serve] token cache: {cs['hits']} hits / "
                       f"{cs['misses']} misses, {cs['bytes']} B cached")
+    if stats_stop is not None:
+        stats_stop.set()
+    if args.stats_json:
+        snap = obs.snapshot()
+        with open(args.stats_json, "w", encoding="utf-8") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[serve] obs snapshot -> {args.stats_json} "
+              f"({len(snap['counters'])} counters, {len(snap['gauges'])} "
+              f"gauges, {len(snap['histograms'])} histograms)")
 
 
 if __name__ == "__main__":

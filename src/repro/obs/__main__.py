@@ -1,0 +1,52 @@
+"""CLI: ``python -m repro.obs render SNAP.json`` pretty-prints a saved
+snapshot; ``python -m repro.obs diff BEFORE.json AFTER.json`` turns two
+snapshots into rates (counter deltas/s, histogram sample rates and
+in-window means).  Exit codes: 0 ok, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.obs import export
+
+
+def _load(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="render/diff repro.obs snapshots")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    p_render = sub.add_parser("render", help="pretty-print one snapshot")
+    p_render.add_argument("snapshot", help="snapshot JSON path")
+    p_diff = sub.add_parser("diff", help="rates between two snapshots")
+    p_diff.add_argument("before", help="earlier snapshot JSON path")
+    p_diff.add_argument("after", help="later snapshot JSON path")
+    p_diff.add_argument("--json", action="store_true",
+                        help="emit the diff as JSON instead of text")
+    args = parser.parse_args(argv)
+
+    try:
+        if args.cmd == "render":
+            print(export.render(_load(args.snapshot)))
+        else:
+            d = export.diff(_load(args.before), _load(args.after))
+            if args.json:
+                print(json.dumps(d, indent=1, sort_keys=True))
+            else:
+                print(export.render_diff(d))
+    except (OSError, ValueError, KeyError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,297 @@
+"""Thread-safe metrics primitives: counters, gauges, log2 histograms.
+
+Design constraints (ARCHITECTURE.md "Observability"):
+
+* **No per-sample allocation.**  A histogram is a fixed array of
+  integer buckets keyed by the sample's binary exponent
+  (``math.frexp``), plus exact running ``count``/``sum``/``min``/
+  ``max``.  Percentiles are estimated by walking the cumulative bucket
+  counts and reporting the geometric midpoint of the landing bucket —
+  exact to within a factor of ``sqrt(2)`` by construction, which is
+  plenty for latency accounting that spans six orders of magnitude.
+* **Every mutation takes a lock.**  CPython's ``+=`` on an attribute is
+  not atomic across preemption, and the concurrency tests assert exact
+  totals under thread hammering.  The locks come from
+  :mod:`repro.core.locks` at rank ``obs`` (the leaf rank), so the
+  lock-order sanitizer covers metric recording performed while store or
+  service locks are held.  The attribute is named ``_obs_lock`` — not
+  ``_lock`` — so the static lock-graph (REPRO001) keeps the obs node
+  distinct from the unranked ``_lock`` attributes elsewhere.
+* **Instruments are cheap to hold.**  Call sites create instruments
+  once (typically in ``__init__``) and call bound methods after; the
+  disabled-mode no-op twins in :mod:`repro.obs` have the same surface.
+
+Snapshots are plain dicts of JSON-serializable scalars; the exporter
+(:mod:`repro.obs.export`) adds process metadata and the diff logic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.locks import make_lock
+
+# Bucket i (1-based) holds samples whose frexp exponent is
+# EXP_MIN + i - 1, i.e. values in [2**(e-1), 2**e).  Bucket 0 holds
+# zeros and negatives.  The range covers 2**-41 (~1e-13: nanoseconds
+# are comfortably inside) through 2**40 (~1e12: terabyte-scale sizes).
+EXP_MIN = -40
+EXP_MAX = 40
+N_BUCKETS = EXP_MAX - EXP_MIN + 2  # [zero bucket] + one per exponent
+
+
+def bucket_index(value: float) -> int:
+    """Bucket index of ``value`` under the fixed log2 scheme."""
+    if value <= 0.0:
+        return 0
+    _, exp = math.frexp(value)  # value = m * 2**exp, m in [0.5, 1)
+    if exp < EXP_MIN:
+        exp = EXP_MIN
+    elif exp > EXP_MAX:
+        exp = EXP_MAX
+    return exp - EXP_MIN + 1
+
+
+def bucket_mid(index: int) -> float:
+    """Geometric midpoint of bucket ``index`` (0 maps to 0.0)."""
+    if index <= 0:
+        return 0.0
+    exp = index + EXP_MIN - 1
+    return math.pow(2.0, exp - 0.5)
+
+
+def canonical_name(name: str, labels: Dict[str, Any]) -> str:
+    """``name{k=v,...}`` with sorted keys; the registry key format."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    """Monotonic integer counter."""
+
+    kind = "counter"
+    __slots__ = ("name", "_obs_lock", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._obs_lock = make_lock("obs")
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._obs_lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        with self._obs_lock:
+            return self._value
+
+    def snapshot(self) -> int:
+        return self.value
+
+
+class Gauge:
+    """Last-value gauge; ``fn`` makes it derived (evaluated at
+    snapshot time — how live compression-ratio/MB/s are exported
+    without touching the hot path)."""
+
+    kind = "gauge"
+    __slots__ = ("name", "_obs_lock", "_value", "_fn")
+
+    def __init__(self, name: str, fn: Optional[Callable[[], float]] = None):
+        self.name = name
+        self._obs_lock = make_lock("obs")
+        self._value = 0.0
+        self._fn = fn
+
+    def set(self, value: float) -> None:
+        with self._obs_lock:
+            self._value = float(value)
+
+    @property
+    def value(self) -> float:
+        if self._fn is not None:
+            try:
+                return float(self._fn())
+            except (ZeroDivisionError, ValueError, TypeError):
+                return 0.0
+        with self._obs_lock:
+            return self._value
+
+    def snapshot(self) -> float:
+        return self.value
+
+
+class Histogram:
+    """Fixed log2-bucket histogram with exact count/sum/min/max.
+
+    ``observe`` is O(1) and allocation-free; percentile estimation
+    happens only in ``snapshot``/``percentile``.
+    """
+
+    kind = "histogram"
+    __slots__ = ("name", "_obs_lock", "_buckets", "_count", "_sum",
+                 "_min", "_max")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._obs_lock = make_lock("obs")
+        self._buckets = [0] * N_BUCKETS
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def observe(self, value: float) -> None:
+        idx = bucket_index(value)
+        with self._obs_lock:
+            self._buckets[idx] += 1
+            self._count += 1
+            self._sum += value
+            if value < self._min:
+                self._min = value
+            if value > self._max:
+                self._max = value
+
+    def _state(self) -> Tuple[List[int], int, float, float, float]:
+        with self._obs_lock:
+            return (list(self._buckets), self._count, self._sum,
+                    self._min, self._max)
+
+    @staticmethod
+    def _percentile(buckets: List[int], count: int, lo: float, hi: float,
+                    q: float) -> float:
+        """Walk cumulative bucket counts to the q-th percentile and
+        report the landing bucket's geometric midpoint, clamped to the
+        observed [min, max]."""
+        if count == 0:
+            return 0.0
+        target = max(1.0, math.ceil(q / 100.0 * count))
+        cum = 0
+        for idx, n in enumerate(buckets):
+            cum += n
+            if cum >= target:
+                est = bucket_mid(idx)
+                return min(max(est, lo), hi)
+        return hi
+
+    def percentile(self, q: float) -> float:
+        buckets, count, _, lo, hi = self._state()
+        return self._percentile(buckets, count, lo, hi, q)
+
+    @property
+    def count(self) -> int:
+        with self._obs_lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._obs_lock:
+            return self._sum
+
+    def snapshot(self) -> Dict[str, Any]:
+        buckets, count, total, lo, hi = self._state()
+        if count == 0:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0,
+                    "buckets": {}}
+        sparse = {}
+        for idx, n in enumerate(buckets):
+            if n:
+                key = "zero" if idx == 0 else str(idx + EXP_MIN - 1)
+                sparse[key] = n
+        return {
+            "count": count,
+            "sum": total,
+            "min": lo,
+            "max": hi,
+            "mean": total / count,
+            "p50": self._percentile(buckets, count, lo, hi, 50.0),
+            "p90": self._percentile(buckets, count, lo, hi, 90.0),
+            "p99": self._percentile(buckets, count, lo, hi, 99.0),
+            "buckets": sparse,
+        }
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class Registry:
+    """Name -> instrument map with get-or-create semantics.
+
+    A name may only ever be one kind (conflicts raise; the static rule
+    REPRO007 catches the same mistake before runtime).  ``register``
+    with ``replace=True`` supports per-instance instruments — a new
+    ``TokenCache`` re-registers its owned counters so the snapshot
+    follows the live instance.
+    """
+
+    def __init__(self):
+        self._obs_lock = make_lock("obs")
+        self._metrics: Dict[str, Any] = {}
+
+    def _get_or_create(self, cls, name: str, labels: Dict[str, Any],
+                       **kwargs) -> Any:
+        key = canonical_name(name, labels)
+        with self._obs_lock:
+            inst = self._metrics.get(key)
+            if inst is not None:
+                if not isinstance(inst, cls):
+                    raise ValueError(
+                        f"metric {key!r} already registered as "
+                        f"{inst.kind}, requested {cls.kind}")
+                return inst
+            inst = cls(key, **kwargs)
+            self._metrics[key] = inst
+            return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get_or_create(Counter, name, labels)
+
+    def gauge(self, name: str,
+              fn: Optional[Callable[[], float]] = None, **labels) -> Gauge:
+        key = canonical_name(name, labels)
+        with self._obs_lock:
+            inst = self._metrics.get(key)
+            if inst is not None and isinstance(inst, Gauge):
+                return inst
+            if inst is not None:
+                raise ValueError(
+                    f"metric {key!r} already registered as {inst.kind}, "
+                    f"requested gauge")
+            inst = Gauge(key, fn=fn)
+            self._metrics[key] = inst
+            return inst
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get_or_create(Histogram, name, labels)
+
+    def register(self, inst, replace: bool = False) -> None:
+        """Adopt an externally created instrument under its name."""
+        with self._obs_lock:
+            prior = self._metrics.get(inst.name)
+            if prior is not None and not replace:
+                raise ValueError(f"metric {inst.name!r} already registered")
+            self._metrics[inst.name] = inst
+
+    def names(self) -> List[str]:
+        with self._obs_lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """``{"counters": {...}, "gauges": {...}, "histograms": {...}}``.
+
+        The metric map is copied under the registry lock, then each
+        instrument snapshots under its own lock — no nested obs-lock
+        holds, and derived gauges run their callables lock-free.
+        """
+        with self._obs_lock:
+            items = list(self._metrics.items())
+        out: Dict[str, Dict[str, Any]] = {
+            "counters": {}, "gauges": {}, "histograms": {}}
+        for key, inst in items:
+            out[inst.kind + "s"][key] = inst.snapshot()
+        return out

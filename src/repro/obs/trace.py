@@ -1,0 +1,133 @@
+"""Span tracing: bounded ring-buffer journal + timing context manager.
+
+``obs.span("codec.compress", method="hybrid")`` is the one-liner call
+sites use; it times the enclosed block, feeds a duration histogram
+named ``codec.compress.s{method=hybrid}`` and appends one event to the
+process journal.  The journal is a ``collections.deque(maxlen=N)``
+guarded by an ``obs``-ranked lock — O(1) append, oldest events drop
+first, dumpable as JSONL for offline inspection.
+
+The disabled-mode twin (:class:`NullSpan`) still reads the clock: spans
+double as the *product's* timing source (``CompactionResult.wall_s``
+comes from ``span.elapsed_s``), so ``duration_s`` must stay correct
+with observability off.  Cost model: two ``perf_counter`` calls per
+span and nothing else — no locks, no journal, no histogram.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+from repro.core.locks import make_lock
+from repro.obs.metrics import Histogram
+
+
+class Journal:
+    """Bounded in-memory event journal (a ring: oldest drop first)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._obs_lock = make_lock("obs")
+        self._events: deque = deque(maxlen=max(self.capacity, 1))
+        self._dropped = 0
+
+    def append(self, event: Dict[str, Any]) -> None:
+        with self._obs_lock:
+            if len(self._events) == self._events.maxlen:
+                self._dropped += 1
+            self._events.append(event)
+
+    def events(self) -> List[Dict[str, Any]]:
+        with self._obs_lock:
+            return list(self._events)
+
+    @property
+    def dropped(self) -> int:
+        with self._obs_lock:
+            return self._dropped
+
+    def __len__(self) -> int:
+        with self._obs_lock:
+            return len(self._events)
+
+    def dump_jsonl(self, path: str) -> int:
+        """Write one JSON object per line; returns the event count."""
+        events = self.events()
+        with open(path, "w", encoding="utf-8") as fh:
+            for ev in events:
+                fh.write(json.dumps(ev, sort_keys=True))
+                fh.write("\n")
+        return len(events)
+
+
+class Span:
+    """Enabled-mode span: times the block, records histogram + journal."""
+
+    __slots__ = ("name", "labels", "_hist", "_journal", "_t0", "_wall0",
+                 "duration_s")
+
+    def __init__(self, name: str, labels: Dict[str, Any],
+                 hist: Histogram, journal: Optional[Journal]):
+        self.name = name
+        self.labels = labels
+        self._hist = hist
+        self._journal = journal
+        self._t0 = 0.0
+        self._wall0 = 0.0
+        self.duration_s = 0.0
+
+    def __enter__(self) -> "Span":
+        self._wall0 = time.time()
+        self._t0 = time.perf_counter()
+        return self
+
+    @property
+    def elapsed_s(self) -> float:
+        """Seconds since ``__enter__`` (live, readable mid-span)."""
+        return time.perf_counter() - self._t0
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.duration_s = time.perf_counter() - self._t0
+        self._hist.observe(self.duration_s)
+        if self._journal is not None:
+            event = {
+                "name": self.name,
+                "ts": self._wall0,
+                "dur_s": self.duration_s,
+                "thread": threading.current_thread().name,
+            }
+            if self.labels:
+                event["labels"] = dict(self.labels)
+            if exc_type is not None:
+                event["error"] = exc_type.__name__
+            self._journal.append(event)
+
+
+class NullSpan:
+    """Disabled-mode span: clock only, records nothing.
+
+    Not a singleton — spans carry per-use timing state — but
+    construction is two attribute writes and the context protocol costs
+    two ``perf_counter`` reads.
+    """
+
+    __slots__ = ("_t0", "duration_s")
+
+    def __init__(self):
+        self._t0 = 0.0
+        self.duration_s = 0.0
+
+    def __enter__(self) -> "NullSpan":
+        self._t0 = time.perf_counter()
+        return self
+
+    @property
+    def elapsed_s(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.duration_s = time.perf_counter() - self._t0

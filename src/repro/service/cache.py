@@ -23,6 +23,8 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+
 
 class TokenCache:
     """Thread-safe byte-budgeted LRU: content key -> token id array."""
@@ -34,10 +36,22 @@ class TokenCache:
         self._entries: "OrderedDict[str, np.ndarray]" = OrderedDict()
         self._bytes = 0
         self._lock = threading.Lock()
-        self._hits = 0
-        self._misses = 0
-        self._evictions = 0
-        self._oversize_rejects = 0
+        # Registry-backed counters: always real (their values feed
+        # stats() regardless of REPRO_OBS); registered globally only
+        # when obs is on, replacing any prior instance's.
+        self._hits = obs.owned_counter("cache.hits")
+        self._misses = obs.owned_counter("cache.misses")
+        self._evictions = obs.owned_counter("cache.evictions")
+        self._oversize_rejects = obs.owned_counter("cache.oversize_rejects")
+        self._invalidations = obs.owned_counter("cache.invalidations")
+        self._clears = obs.owned_counter("cache.clears")
+        obs.owned_gauge("cache.hit_rate", self._hit_rate)
+        obs.owned_gauge("cache.bytes", lambda: self._bytes)
+        obs.owned_gauge("cache.entries", lambda: len(self._entries))
+
+    def _hit_rate(self) -> float:
+        total = self._hits.value + self._misses.value
+        return self._hits.value / total if total else 0.0
 
     # -- core ----------------------------------------------------------------
 
@@ -45,10 +59,10 @@ class TokenCache:
         with self._lock:
             arr = self._entries.get(key)
             if arr is None:
-                self._misses += 1
+                self._misses.inc()
                 return None
             self._entries.move_to_end(key)
-            self._hits += 1
+            self._hits.inc()
             return arr
 
     def put(self, key: str, tokens: np.ndarray) -> None:
@@ -56,7 +70,7 @@ class TokenCache:
         with self._lock:
             if arr.nbytes > self.capacity_bytes:
                 # would evict the entire cache and still not fit
-                self._oversize_rejects += 1
+                self._oversize_rejects.inc()
                 return
             old = self._entries.pop(key, None)
             if old is not None:
@@ -66,7 +80,7 @@ class TokenCache:
             while self._bytes > self.capacity_bytes and self._entries:
                 _, victim = self._entries.popitem(last=False)
                 self._bytes -= victim.nbytes
-                self._evictions += 1
+                self._evictions.inc()
 
     # -- loader composition ---------------------------------------------------
 
@@ -110,12 +124,14 @@ class TokenCache:
             if arr is None:
                 return False
             self._bytes -= arr.nbytes
+            self._invalidations.inc()
             return True
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self._bytes = 0
+            self._clears.inc()
 
     def __len__(self) -> int:
         with self._lock:
@@ -123,14 +139,15 @@ class TokenCache:
 
     def stats(self) -> dict:
         with self._lock:
-            total = self._hits + self._misses
             return {
                 "capacity_bytes": self.capacity_bytes,
                 "bytes": self._bytes,
                 "entries": len(self._entries),
-                "hits": self._hits,
-                "misses": self._misses,
-                "evictions": self._evictions,
-                "oversize_rejects": self._oversize_rejects,
-                "hit_rate": self._hits / total if total else 0.0,
+                "hits": self._hits.value,
+                "misses": self._misses.value,
+                "evictions": self._evictions.value,
+                "oversize_rejects": self._oversize_rejects.value,
+                "invalidations": self._invalidations.value,
+                "clears": self._clears.value,
+                "hit_rate": self._hit_rate(),
             }

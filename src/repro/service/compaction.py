@@ -39,10 +39,10 @@ bit-for-bit for forensics rather than laundered through a codec).
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.core.api import parse_frame
 from repro.core.store import ShardedPromptStore, content_key
 
@@ -162,70 +162,83 @@ def compact_shard(store: ShardedPromptStore, shard_id: int,
                 return None
         except IndexError:
             return None
-        t0 = time.perf_counter()
-        recs = store.shard_records(shard_id)
-        blobs = store.read_records(shard_id, recs)
-        entries = [
-            {"key": r["key"], "seq": r["seq"], "method": r["method"],
-             "n_chars": r["n_chars"], "blob": b}
-            for r, b in zip(recs, blobs)
-        ]
-        carry_dict = _carried_dictionary(store, entries)
-        dictionary = carry_dict  # sidecar the rebuild must persist
-        chosen: Optional[str] = None
-        reencoded = False
-        if reselect and entries:
-            try:
-                texts = store.compressor.decompress_batch(blobs)
-                clean = all(content_key(t) == r["key"]
-                            for t, r in zip(texts, recs))
-            except Exception:
-                clean = False
-            if clean:
-                # keeping the current encoding keeps its sidecar too, so
-                # the incumbent is charged the dictionary's own size —
-                # same rule every dictionary candidate plays by
-                best_total = sum(len(b) for b in blobs) + len(carry_dict or b"")
-                best: Optional[Tuple[List[bytes], Optional[bytes]]] = None
-                for method in _candidate_methods(store):
-                    new_blobs = store.compressor.compress_batch(texts, method)
-                    total = sum(len(b) for b in new_blobs)
-                    if total < best_total:
-                        best_total, best, chosen = total, (new_blobs, None), method
-                if train_dict:
-                    # score dictionary candidates on a throwaway compressor:
-                    # registering every loser on the live one would pin its
-                    # bytes (and a cached pipeline) for the process lifetime.
-                    # Frames depend only on the config, so the winner's blobs
-                    # are valid as-is; swap_shard registers its dictionary.
-                    scratch = _scratch_compressor(store.compressor)
-                    for method, d in _train_dicts(store, texts).items():
-                        dict_blobs = scratch.compress_batch(
-                            texts, method, dictionary=d)
-                        total = sum(len(b) for b in dict_blobs) + len(d)
-                        if total < best_total:
-                            best_total, best, chosen = (
-                                total, (dict_blobs, d), method)
-                if best is not None:
-                    reencoded = True
-                    new_blobs, dictionary = best
-                    for e, b in zip(entries, new_blobs):
-                        e["blob"] = b
-                        e["method"] = chosen
-        swap = store.swap_shard(shard_id, entries, dictionary=dictionary)
-        return CompactionResult(
-            shard_id=shard_id,
-            n_records=swap["n_records"],
-            n_caught_up=swap["n_caught_up"],
-            bytes_before=swap["bytes_before"],
-            bytes_after=swap["bytes_after"],
-            method=chosen,
-            reencoded=reencoded,
-            wall_s=time.perf_counter() - t0,
-            dict_bytes=len(dictionary or b""),
-        )
+        # the span is also the product's timer: CompactionResult.wall_s
+        # comes from span.elapsed_s, which keeps measuring with
+        # REPRO_OBS=0 (see repro.obs.trace.NullSpan)
+        with obs.span("compaction.shard") as span:
+            result = _rebuild_shard(store, shard_id, reselect, train_dict,
+                                    span)
+        obs.counter("compaction.reclaimed_bytes").inc(result.bytes_reclaimed)
+        return result
     finally:
         lock.release()
+
+
+def _rebuild_shard(store: ShardedPromptStore, shard_id: int, reselect: bool,
+                   train_dict: bool, span) -> CompactionResult:
+    """Phases 1-4 of :func:`compact_shard`; runs with the compaction lock
+    held and the layout validated."""
+    recs = store.shard_records(shard_id)
+    blobs = store.read_records(shard_id, recs)
+    entries = [
+        {"key": r["key"], "seq": r["seq"], "method": r["method"],
+         "n_chars": r["n_chars"], "blob": b}
+        for r, b in zip(recs, blobs)
+    ]
+    carry_dict = _carried_dictionary(store, entries)
+    dictionary = carry_dict  # sidecar the rebuild must persist
+    chosen: Optional[str] = None
+    reencoded = False
+    if reselect and entries:
+        try:
+            texts = store.compressor.decompress_batch(blobs)
+            clean = all(content_key(t) == r["key"]
+                        for t, r in zip(texts, recs))
+        except Exception:
+            clean = False
+        if clean:
+            # keeping the current encoding keeps its sidecar too, so
+            # the incumbent is charged the dictionary's own size —
+            # same rule every dictionary candidate plays by
+            best_total = sum(len(b) for b in blobs) + len(carry_dict or b"")
+            best: Optional[Tuple[List[bytes], Optional[bytes]]] = None
+            for method in _candidate_methods(store):
+                new_blobs = store.compressor.compress_batch(texts, method)
+                total = sum(len(b) for b in new_blobs)
+                if total < best_total:
+                    best_total, best, chosen = total, (new_blobs, None), method
+            if train_dict:
+                # score dictionary candidates on a throwaway compressor:
+                # registering every loser on the live one would pin its
+                # bytes (and a cached pipeline) for the process lifetime.
+                # Frames depend only on the config, so the winner's blobs
+                # are valid as-is; swap_shard registers its dictionary.
+                scratch = _scratch_compressor(store.compressor)
+                for method, d in _train_dicts(store, texts).items():
+                    dict_blobs = scratch.compress_batch(
+                        texts, method, dictionary=d)
+                    total = sum(len(b) for b in dict_blobs) + len(d)
+                    if total < best_total:
+                        best_total, best, chosen = (
+                            total, (dict_blobs, d), method)
+            if best is not None:
+                reencoded = True
+                new_blobs, dictionary = best
+                for e, b in zip(entries, new_blobs):
+                    e["blob"] = b
+                    e["method"] = chosen
+    swap = store.swap_shard(shard_id, entries, dictionary=dictionary)
+    return CompactionResult(
+        shard_id=shard_id,
+        n_records=swap["n_records"],
+        n_caught_up=swap["n_caught_up"],
+        bytes_before=swap["bytes_before"],
+        bytes_after=swap["bytes_after"],
+        method=chosen,
+        reencoded=reencoded,
+        wall_s=span.elapsed_s,
+        dict_bytes=len(dictionary or b""),
+    )
 
 
 def compact_store(store: ShardedPromptStore, reselect: bool = True,
@@ -266,11 +279,12 @@ class BackgroundCompactor:
         self.train_dict = train_dict
         self._stop_event = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._lock = threading.Lock()
-        self._passes = 0
-        self._compactions = 0
-        self._bytes_reclaimed = 0
-        self._errors = 0
+        # registry-backed counters (always real; see repro.obs) — each
+        # is internally locked, so no extra compactor-wide lock is needed
+        self._passes = obs.owned_counter("compaction.passes")
+        self._compactions = obs.owned_counter("compaction.compactions")
+        self._bytes_reclaimed = obs.owned_counter("compaction.bytes_reclaimed")
+        self._errors = obs.owned_counter("compaction.errors")
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -298,16 +312,20 @@ class BackgroundCompactor:
 
     def run_pass(self) -> List[CompactionResult]:
         """One scan over all shards (also callable synchronously)."""
-        with self._lock:
-            self._passes += 1
-            sweep = (self.force_reselect_every > 0
-                     and self._passes % self.force_reselect_every == 0)
+        self._passes.inc()
+        sweep = (self.force_reselect_every > 0
+                 and self._passes.value % self.force_reselect_every == 0)
         results: List[CompactionResult] = []
+        with obs.span("compaction.pass"):
+            return self._scan_shards(sweep, results)
+
+    def _scan_shards(self, sweep: bool,
+                     results: List[CompactionResult]
+                     ) -> List[CompactionResult]:
         try:
             all_stats = self._store.all_shard_stats()  # one index pass
         except Exception:  # e.g. racing a rebalance's layout teardown
-            with self._lock:
-                self._errors += 1
+            self._errors.inc()
             return results
         for shard_id in range(len(all_stats)):
             # a concurrent rebalance may change n_shards mid-pass;
@@ -325,24 +343,21 @@ class BackgroundCompactor:
                                     reselect=self.reselect,
                                     train_dict=self.train_dict)
             except Exception:
-                with self._lock:
-                    self._errors += 1
+                self._errors.inc()
                 continue
             if res is not None:
                 results.append(res)
-                with self._lock:
-                    self._compactions += 1
-                    self._bytes_reclaimed += res.bytes_reclaimed
+                self._compactions.inc()
+                self._bytes_reclaimed.inc(res.bytes_reclaimed)
         return results
 
     def stats(self) -> dict:
-        with self._lock:
-            return {
-                "passes": self._passes,
-                "compactions": self._compactions,
-                "bytes_reclaimed": self._bytes_reclaimed,
-                "errors": self._errors,
-                "interval_s": self.interval_s,
-                "trigger_dead_ratio": self.trigger_dead_ratio,
-                "min_dead_bytes": self.min_dead_bytes,
-            }
+        return {
+            "passes": self._passes.value,
+            "compactions": self._compactions.value,
+            "bytes_reclaimed": self._bytes_reclaimed.value,
+            "errors": self._errors.value,
+            "interval_s": self.interval_s,
+            "trigger_dead_ratio": self.trigger_dead_ratio,
+            "min_dead_bytes": self.min_dead_bytes,
+        }

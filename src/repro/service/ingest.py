@@ -47,6 +47,7 @@ import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
+from repro import obs
 from repro.core.codec import codec_pool_size
 from repro.core.store import ShardedPromptStore, content_key
 
@@ -60,6 +61,7 @@ class IngestTicket:
 
     def __init__(self, keys: List[str]) -> None:
         self.keys = keys
+        self.submitted_ts = time.monotonic()
         self._event = threading.Event()
         self._error: Optional[BaseException] = None
 
@@ -139,12 +141,17 @@ class IngestQueue:
             queue.Queue() for _ in range(store.n_shards)]
         self._writers: List[threading.Thread] = []
         self._dispatcher: Optional[threading.Thread] = None
-        # metrics
-        self._n_submitted = 0
-        self._n_committed = 0
-        self._n_flushes = 0
-        self._n_backpressure_waits = 0
+        # metrics: registry-backed counters (always real; see repro.obs)
+        # plus queue-depth and submit->durable wait-time histograms
+        self._n_submitted = obs.owned_counter("ingest.submitted")
+        self._n_committed = obs.owned_counter("ingest.committed")
+        self._n_flushes = obs.owned_counter("ingest.flushes")
+        self._n_backpressure_waits = obs.owned_counter(
+            "ingest.backpressure_waits")
         self._max_depth = 0
+        self._depth_h = obs.histogram("ingest.queue_depth")
+        self._wait_h = obs.histogram("ingest.wait.s")
+        obs.owned_gauge("ingest.pending", lambda: self._pending_texts)
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -201,14 +208,15 @@ class IngestQueue:
             if not self._started or self._stopping:
                 raise RuntimeError("ingest queue is not running")
             while self._pending_texts >= self.max_pending and not self._stopping:
-                self._n_backpressure_waits += 1
+                self._n_backpressure_waits.inc()
                 self._cv.wait()
             if self._stopping:
                 raise RuntimeError("ingest queue is not running")
             self._items.append(_Submission(texts, method, ticket))
             self._pending_texts += len(texts)
-            self._n_submitted += len(texts)
+            self._n_submitted.inc(len(texts))
             self._max_depth = max(self._max_depth, self._pending_texts)
+            self._depth_h.observe(self._pending_texts)
             self._cv.notify_all()
         return ticket
 
@@ -232,11 +240,11 @@ class IngestQueue:
     def stats(self) -> dict:
         with self._cv:
             return {
-                "submitted": self._n_submitted,
-                "committed": self._n_committed,
+                "submitted": self._n_submitted.value,
+                "committed": self._n_committed.value,
                 "pending": self._pending_texts,
-                "flushes": self._n_flushes,
-                "backpressure_waits": self._n_backpressure_waits,
+                "flushes": self._n_flushes.value,
+                "backpressure_waits": self._n_backpressure_waits.value,
                 "max_queue_depth": self._max_depth,
                 "flush_batch": self.flush_batch,
                 "flush_interval_s": self.flush_interval_s,
@@ -306,7 +314,7 @@ class IngestQueue:
                 self._tail.next = flush
             self._tail = flush
             self._outstanding += 1
-            self._n_flushes += 1
+            self._n_flushes.inc()
             self._dispatching = False
             if not parts:
                 self._maybe_finish(flush)
@@ -321,11 +329,13 @@ class IngestQueue:
 
     def _maybe_finish(self, flush: Optional[_Flush]) -> None:
         """cv held: cascade prefix-ordered flush completion."""
+        now = time.monotonic()
         while (flush is not None and flush.remaining == 0
                and flush.prev_finished and not flush.finished):
             flush.finished = True
             self._outstanding -= 1
             for ticket in flush.tickets:
+                self._wait_h.observe(now - ticket.submitted_ts)
                 ticket._finish(flush.error)
             nxt = flush.next
             if nxt is not None:
@@ -353,6 +363,6 @@ class IngestQueue:
                 if err is not None and flush.error is None:
                     flush.error = err
                 elif err is None:
-                    self._n_committed += len(entries)
+                    self._n_committed.inc(len(entries))
                 flush.remaining -= 1
                 self._maybe_finish(flush)

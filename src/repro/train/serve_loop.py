@@ -14,6 +14,7 @@ decode step shape-stable).
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -21,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.store import PromptStore
 from repro.models.transformer import decode_step, forward, init_cache
@@ -52,6 +54,14 @@ class BatchServer:
         self._next_rid = 0
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, c, {"tokens": t}, pos))
+        # ms-per-token accounting (ROADMAP serving-latency item): prefill
+        # is per slot filled, decode is per wave step / #active slots.
+        # Timings are host-side dispatch+sync time — the np<->jnp
+        # conversions in both loops force the device work.
+        self._obs_prefill = obs.histogram("serve.prefill.ms_per_token")
+        self._obs_decode = obs.histogram("serve.decode.ms_per_token")
+        self._obs_steps = obs.counter("serve.decode.steps")
+        self._obs_tokens = obs.counter("serve.decode.tokens")
 
     # -- admission -----------------------------------------------------------
     #
@@ -100,6 +110,7 @@ class BatchServer:
             # this slot (shape-stable: reuses the compiled decode step with
             # a masked batch; simple and correct for the reference server)
             toks = req.prompt_tokens[: self.max_len - req.max_new_tokens - 1]
+            t0 = time.perf_counter()
             for t in toks:
                 step_tok = np.zeros((self.B, 1), np.int64)
                 step_tok[b, 0] = t
@@ -107,6 +118,9 @@ class BatchServer:
                     self.params, self.cache, jnp.asarray(step_tok),
                     int(self.pos[b]))
                 self.pos[b] += 1
+            if len(toks):
+                self._obs_prefill.observe(
+                    (time.perf_counter() - t0) * 1e3 / len(toks))
             self.slots[b] = req
 
     def step(self) -> int:
@@ -115,6 +129,7 @@ class BatchServer:
         active = [b for b in range(self.B) if self.slots[b] is not None]
         if not active:
             return 0
+        t0 = time.perf_counter()
         # NOTE: the reference server steps positions per slot; production
         # would vectorize positions — the decode fn takes a scalar pos, so
         # we step the batch at the max pos and mask per-slot in admission.
@@ -138,6 +153,10 @@ class BatchServer:
                     or int(self.pos[b]) >= self.max_len - 1):
                 req.done = True
                 self.slots[b] = None
+        self._obs_decode.observe(
+            (time.perf_counter() - t0) * 1e3 / len(active))
+        self._obs_steps.inc()
+        self._obs_tokens.inc(len(active))
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> None:

@@ -444,6 +444,68 @@ def batch(payloads):
 
 
 # ---------------------------------------------------------------------------
+# REPRO007 obs metric hygiene
+# ---------------------------------------------------------------------------
+
+def test_obs_rule_flags_direct_construction_outside_obs():
+    src = '''
+from repro.obs.metrics import Counter, Histogram
+c = Counter("svc.requests")
+h = Histogram("svc.latency")
+'''
+    found = _findings({"src/repro/service/thing.py": src}, "REPRO007")
+    assert len(found) == 2
+    assert all("direct" in f.message and "helpers" in f.message
+               for f in found)
+    # the same constructions inside the obs package are the implementation
+    assert _findings({"src/repro/obs/metrics2.py": src}, "REPRO007") == []
+
+
+def test_obs_rule_ignores_unrelated_counter_and_histogram_names():
+    src = '''
+from collections import Counter
+import numpy as np
+c = Counter("abc")
+h = np.histogram([1, 2, 3])
+'''
+    assert _findings({"src/repro/core/thing.py": src}, "REPRO007") == []
+
+
+def test_obs_rule_flags_kind_conflicts_across_files():
+    a = 'from repro import obs\nobs.counter("svc.lat")\n'
+    b = 'from repro import obs\nobs.histogram("svc.lat")\n'
+    found = _findings({"src/repro/a.py": a, "src/repro/b.py": b}, "REPRO007")
+    assert len(found) == 1
+    assert "one name, one kind" in found[0].message
+    # a span owns <name>.s, so a histogram of that name elsewhere conflicts
+    a = 'from repro import obs\nwith obs.span("op"): pass\n'
+    b = 'from repro import obs\nobs.counter("op.s")\n'
+    found = _findings({"src/repro/a.py": a, "src/repro/b.py": b}, "REPRO007")
+    assert len(found) == 1 and "'op.s'" in found[0].message
+
+
+def test_obs_rule_same_kind_reuse_is_fine():
+    a = 'from repro import obs\nobs.counter("svc.hits")\n'
+    b = 'from repro import obs\nobs.owned_counter("svc.hits")\n'
+    assert _findings({"src/repro/a.py": a, "src/repro/b.py": b},
+                     "REPRO007") == []
+
+
+def test_obs_rule_flags_perf_counter_in_service_paths_only():
+    src = 'import time\nt0 = time.perf_counter()\n'
+    found = _findings({"src/repro/service/pool.py": src}, "REPRO007")
+    assert len(found) == 1 and "obs.span" in found[0].message
+    assert _findings({"src/repro/core/codec2.py": src}, "REPRO007") == []
+
+
+def test_obs_rule_waiver():
+    src = ('import time\n'
+           't0 = time.perf_counter()'
+           '  # repro-analysis: disable=REPRO007 scheduler clock, not a metric\n')
+    assert _findings({"src/repro/service/pool.py": src}, "REPRO007") == []
+
+
+# ---------------------------------------------------------------------------
 # CLI, baseline round-trip, and the committed tree
 # ---------------------------------------------------------------------------
 
