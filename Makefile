@@ -14,9 +14,12 @@
 #   make bench-kernels the device-kernel parity gate + accelerator sweeps
 #                    (BENCH_kernel_codec.json; timings SKIP on CPU hosts)
 #   make obs-smoke   REPRO_OBS=0 codec overhead guard (scripts/obs_smoke.py)
+#   make gateway-smoke spawn a gateway subprocess, drive concurrent socket
+#                    clients, assert latency percentiles + SIGTERM drain
 PY := PYTHONPATH=src python
 
-.PHONY: analyze quick crash test bench bench-codec bench-kernels obs-smoke
+.PHONY: analyze quick crash test bench bench-codec bench-kernels obs-smoke \
+	gateway-smoke
 
 analyze:
 	$(PY) -m repro.analysis src --baseline analysis-baseline.json
@@ -41,3 +44,6 @@ bench-kernels:
 
 obs-smoke:
 	$(PY) scripts/obs_smoke.py
+
+gateway-smoke:
+	$(PY) scripts/gateway_smoke.py

@@ -1,0 +1,278 @@
+"""Gateway tier throughput: socket-framed admission under concurrent
+clients, explicit admission-control rejects, and read-replica scaling.
+
+Admission: N concurrent socket clients push `put_async(wait=True)`
+batches through a real `GatewayServer` (length-prefixed JSON frames,
+thread-pool execution, per-connection windows) at production queue
+depths, then read every key back — the row carries FAIL if any
+round-trip is not byte-identical.  A second row serves `get_tokens`
+through the same gateway, the hot replica-read op.
+
+Rejects: a gateway capped at ``max_inflight=1`` is saturated with a
+slow write while probe pings arrive; the row reports how many probes
+the admission gate bounced (`admission_reject` is immediate — the
+gateway never queues above its cap) and fails if none were.
+
+Replica scaling: one writer fills a store, then R ∈ {1, 2, 4} reader
+threads each open their own ``ShardedPromptStore(readonly=True)``
+replica (own fds, own index, no shared locks with the writer — the
+same isolation a separate process gets) and sweep `get_tokens_many`
+rounds over disjoint key slices.  Derived fields report aggregate
+reads/s and the speedup over the 1-replica baseline; the ≥2-replica
+rows are the scaling evidence.  Each thread verifies its decodes
+against the source texts, so a stale or torn replica view fails loudly.
+
+Skips gracefully (SKIP row) on a read-only store root — set
+REPRO_BENCH_STORE_ROOT to move it.  Writes
+`benchmarks/BENCH_gateway_throughput.json`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+_OUT = Path(__file__).resolve().parent / "BENCH_gateway_throughput.json"
+
+N_PROMPTS = 192
+N_SHARDS = 4
+N_CLIENTS = 4       # concurrent gateway clients
+CLIENT_BATCHES = 4  # put_async batches per client
+BATCH = 12          # texts per batch (N_CLIENTS*CLIENT_BATCHES*BATCH total)
+GET_ROUNDS = 3      # get_tokens sweeps per client over its own keys
+REJECT_PROBES = 6
+REPLICA_COUNTS = (1, 2, 4)
+REPLICA_ROUNDS = 4  # get_tokens_many sweeps per replica thread
+
+
+def _store_root() -> str:
+    return os.environ.get("REPRO_BENCH_STORE_ROOT", tempfile.gettempdir())
+
+
+def _writable(root: str) -> bool:
+    try:
+        with tempfile.TemporaryDirectory(dir=root):
+            return True
+    except OSError:
+        return False
+
+
+def _texts(n: int) -> list:
+    return [f"req {i}: roll the deployment for tenant #{i % 13}, "
+            "capture the audit trail, page on regression. " * 4
+            for i in range(n)]
+
+
+def run() -> list:
+    root = _store_root()
+    if not _writable(root):
+        return [csv_row("gateway_throughput", 0,
+                        f"SKIP:store_root_read_only:{root}")]
+
+    from repro.core.api import PromptCompressor
+    from repro.core.store import ShardedPromptStore
+    from repro.service import PromptService
+    from repro.service.gateway import GatewayClient, start_in_thread
+    from repro.tokenizer.vocab import default_tokenizer
+
+    tok = default_tokenizer()
+    rows = []
+
+    # -- concurrent-client admission through the socket front end ------------
+    with tempfile.TemporaryDirectory(dir=root) as tmp:
+        store = ShardedPromptStore(tmp, PromptCompressor(tok, method="hybrid"),
+                                   n_shards=N_SHARDS)
+        service = PromptService(store, cache_bytes=32 << 20,
+                                flush_batch=2 * BATCH, max_pending=8 * BATCH)
+        lossless = True
+        with service, start_in_thread(service, max_inflight=16,
+                                      conn_window=4) as handle:
+            results = [None] * N_CLIENTS
+            errors = []
+
+            def client(ci: int) -> None:
+                try:
+                    acked = {}
+                    with GatewayClient("127.0.0.1", handle.port) as c:
+                        for bi in range(CLIENT_BATCHES):
+                            texts = _texts(BATCH * (ci * CLIENT_BATCHES + bi
+                                                    + 1))[-BATCH:]
+                            keys = c.put_async(texts, wait=True)["keys"]
+                            acked.update(zip(keys, texts))
+                        ok = all(c.get_many(list(acked)) == list(
+                            acked.values()) for _ in range(1))
+                        t0 = time.perf_counter()
+                        for _ in range(GET_ROUNDS):
+                            for k in acked:
+                                c.get_tokens(k)
+                        dt = time.perf_counter() - t0
+                    results[ci] = (acked, ok, dt)
+                except Exception as e:  # noqa: BLE001 - surfaces as FAIL row
+                    errors.append(e)
+
+            t0 = time.perf_counter()
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(N_CLIENTS)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(120)
+            t_wall = time.perf_counter() - t0
+
+            if errors or any(r is None for r in results):
+                return rows + [csv_row("gateway_put_async_e2e", 0,
+                                       f"FAIL:client_errors:{errors}")]
+            lossless = all(ok for _, ok, _ in results)
+            n_put = sum(len(a) for a, _, _ in results)
+            n_gets = sum(GET_ROUNDS * len(a) for a, _, _ in results)
+            t_get = max(dt for _, _, dt in results)
+            if len(store) != n_put:
+                lossless = False
+
+        verdict = "" if lossless else " FAIL:lossless"
+        put_pps = n_put / t_wall
+        get_pps = n_gets / t_get
+        rows.append(csv_row(
+            "gateway_put_async_e2e", 1e6 * t_wall / n_put,
+            f"{N_CLIENTS}clients {put_pps:.0f}prompts/s durable+verified"
+            + verdict))
+        rows.append(csv_row(
+            "gateway_get_tokens", 1e6 * t_get / n_gets,
+            f"{N_CLIENTS}clients {get_pps:.0f}reads/s via socket" + verdict))
+
+    # -- admission-control rejects at a tiny inflight cap --------------------
+    with tempfile.TemporaryDirectory(dir=root) as tmp:
+        store = ShardedPromptStore(tmp, PromptCompressor(tok, method="token"),
+                                   n_shards=2)
+        # big flush_batch + long interval: put_async(wait=True) parks its
+        # executor slot until the timed flush fires, saturating the cap
+        service = PromptService(store, cache_bytes=0, flush_batch=4096,
+                                flush_interval_s=0.5, max_pending=8192)
+        rejects = accepted = 0
+        with service, start_in_thread(service, max_inflight=1,
+                                      conn_window=8) as handle:
+            blocker_done = threading.Event()
+
+            def blocker() -> None:
+                with GatewayClient("127.0.0.1", handle.port) as c:
+                    c.put_async(["occupy the only inflight slot " * 8],
+                                wait=True, timeout=30)
+                blocker_done.set()
+
+            th = threading.Thread(target=blocker)
+            th.start()
+            time.sleep(0.1)  # let the blocker reach the executor
+            t0 = time.perf_counter()
+            with GatewayClient("127.0.0.1", handle.port) as c:
+                for _ in range(REJECT_PROBES):
+                    resp = c.request("ping")
+                    if resp.get("ok"):
+                        accepted += 1
+                    elif resp.get("error") == "admission_reject":
+                        rejects += 1
+                t_probe = time.perf_counter() - t0
+                th.join(60)
+                blocker_done.wait(5)
+                recovered = c.call("ping")["pong"] is True
+        rows.append(csv_row(
+            "gateway_admission_reject", 1e6 * t_probe / REJECT_PROBES,
+            f"{rejects}/{REJECT_PROBES}rejected_immediately "
+            f"recovered={recovered}"
+            + ("" if rejects and recovered else " FAIL:no_rejects")))
+
+    # -- read-replica scaling: R readonly stores over one writer's data ------
+    scaling = {}
+    with tempfile.TemporaryDirectory(dir=root) as tmp:
+        writer = ShardedPromptStore(tmp, PromptCompressor(tok, method="hybrid"),
+                                    n_shards=N_SHARDS)
+        texts = _texts(N_PROMPTS)
+        keys = writer.put_many(texts)
+        by_key = dict(zip(keys, texts))
+        replica_fail = None
+
+        for n_rep in REPLICA_COUNTS:
+            slices = [keys[i::n_rep] for i in range(n_rep)]
+            stores = [ShardedPromptStore(tmp, PromptCompressor(
+                tok, method="hybrid"), readonly=True) for _ in range(n_rep)]
+            barrier = threading.Barrier(n_rep + 1)
+            errs = []
+
+            def reader(rs, my_keys) -> None:
+                try:
+                    rs.get_tokens_many(my_keys)  # warm per-replica index
+                    barrier.wait()
+                    for _ in range(REPLICA_ROUNDS):
+                        rs.get_tokens_many(my_keys)
+                    got = rs.get_many(my_keys)
+                    if got != [by_key[k] for k in my_keys]:
+                        raise AssertionError("replica read not lossless")
+                    barrier.wait()
+                except Exception as e:  # noqa: BLE001
+                    errs.append(e)
+                    try:
+                        barrier.abort()
+                    except Exception:
+                        pass
+
+            threads = [threading.Thread(target=reader, args=(rs, sl))
+                       for rs, sl in zip(stores, slices)]
+            for t in threads:
+                t.start()
+            barrier.wait()
+            t0 = time.perf_counter()
+            barrier.wait()
+            dt = time.perf_counter() - t0
+            for t in threads:
+                t.join(120)
+            for rs in stores:
+                rs.close()
+            if errs:
+                replica_fail = errs[0]
+                break
+            n_reads = REPLICA_ROUNDS * len(keys)  # split across replicas
+            scaling[n_rep] = n_reads / dt
+        writer.close()
+
+    if replica_fail is not None:
+        rows.append(csv_row("gateway_replica_scaling", 0,
+                            f"FAIL:replica_error:{replica_fail}"))
+    else:
+        base = scaling[1]
+        for n_rep in REPLICA_COUNTS:
+            pps = scaling[n_rep]
+            n_reads = REPLICA_ROUNDS * N_PROMPTS
+            rows.append(csv_row(
+                f"gateway_replica_read_x{n_rep}", 1e6 / pps,
+                f"{pps:.0f}reads/s scaling={pps / base:.2f}x "
+                f"({n_rep}replicas, lossless)"))
+
+    doc = {
+        "benchmark": "gateway_throughput",
+        "host_cpus": os.cpu_count(),  # replica scaling is core-bound
+        "n_clients": N_CLIENTS,
+        "client_batches": CLIENT_BATCHES,
+        "batch": BATCH,
+        "put_async_prompts_per_s": put_pps,
+        "put_async_lossless": lossless,
+        "get_tokens_reads_per_s": get_pps,
+        "admission_probes": REJECT_PROBES,
+        "admission_rejects": rejects,
+        "admission_recovered": recovered,
+        "replica_prompts": N_PROMPTS,
+        "replica_rounds": REPLICA_ROUNDS,
+        "replica_reads_per_s": {str(k): v for k, v in scaling.items()},
+        "replica_scaling": {str(k): v / scaling[1]
+                            for k, v in scaling.items()} if scaling else {},
+    }
+    try:
+        _OUT.write_text(json.dumps(doc, indent=1) + "\n")
+    except OSError:
+        pass  # benchmarks dir itself read-only: keep the csv rows
+
+    return rows

@@ -24,6 +24,7 @@ MODULES = [
     ("beyond_paper_baselines", "baselines"),
     ("store_batch_throughput", "batch_throughput"),
     ("service_throughput", "service_throughput"),
+    ("gateway_throughput", "gateway_throughput"),
     ("dist_grad_compress", "grad_compress"),
     ("codec_throughput", "codec_throughput"),
     ("kernel_codec", "kernel_throughput"),

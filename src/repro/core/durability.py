@@ -56,3 +56,16 @@ def write_durable(path: Union[str, Path], data: bytes) -> None:
     with open(path, "wb") as f:
         f.write(data)
         fsync_file(f)
+
+
+def publish_durable(path: Union[str, Path], data: bytes) -> None:
+    """Atomically publish ``data`` at ``path`` via tmp → fsync →
+    ``os.replace`` → fsync-dir.  For standalone artifacts (stats-json
+    dumps, port files) whose readers must never observe a torn
+    document; store publishers keep the sequence inline instead so
+    REPRO002 can check their interleaving with index/meta writes."""
+    path = Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    write_durable(tmp, data)
+    os.replace(tmp, path)
+    fsync_dir(path.parent)

@@ -193,3 +193,38 @@ declare("REPRO_OBS", _parse_flag, True,
 declare("REPRO_OBS_JOURNAL", _parse_int_min0, 4096,
         "capacity (events) of the repro.obs span journal ring buffer; "
         "oldest events are dropped first")
+
+
+def _parse_int_min1(raw: str) -> int:
+    """Positive int; garbage raises (read() falls back to default)."""
+    val = int(raw)
+    if val < 1:
+        raise ValueError(f"expected >= 1, got {val}")
+    return val
+
+
+def _parse_float_min0(raw: str) -> float:
+    """Non-negative float; garbage raises (read() falls back)."""
+    val = float(raw)
+    if val < 0:
+        raise ValueError(f"expected >= 0, got {val}")
+    return val
+
+
+declare("REPRO_GATEWAY_MAX_INFLIGHT", _parse_int_min1, 64,
+        "gateway admission control: max requests executing at once "
+        "across all connections; excess requests are rejected with "
+        "error=admission_reject, never buffered")
+declare("REPRO_GATEWAY_CONN_WINDOW", _parse_int_min1, 8,
+        "gateway per-connection in-flight window; a client pipelining "
+        "past it is stalled by TCP backpressure (the reader loop stops "
+        "consuming), propagating the ingest queue's max_pending")
+declare("REPRO_GATEWAY_FRAME_MAX", _parse_int_min1, 16 << 20,
+        "max accepted gateway frame payload (bytes); larger frames "
+        "close the connection with error=frame_too_large")
+declare("REPRO_GATEWAY_DRAIN_S", _parse_float_min0, 5.0,
+        "graceful-drain budget on SIGTERM: seconds the gateway waits "
+        "for in-flight requests before forcing shutdown")
+declare("REPRO_GATEWAY_REFRESH_S", _parse_float_min0, 0.5,
+        "read-replica poll interval: how often a replica gateway "
+        "re-checks store.json / shard indexes for writer publishes")

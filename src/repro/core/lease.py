@@ -1,0 +1,170 @@
+"""Cross-process store ownership: ``fcntl.flock`` leases on a store root.
+
+A store root is owned by at most ONE writer process at a time.  The
+writer holds an exclusive ``flock`` on ``<root>/store.lease`` for the
+lifetime of its :class:`~repro.core.store.ShardedPromptStore`; read-only
+replicas (``ShardedPromptStore(readonly=True)``) never touch the lease
+and follow the writer's generation swaps through ``store.json``.
+
+Why ``flock`` and not a pid file: the kernel releases the lock the
+instant the holder's last fd closes — including SIGKILL, OOM, or a
+power-cycle of the container — so a standby that blocks on the lease
+takes over the moment the writer dies, with no stale-pid heuristics and
+no janitor.  The lease *file* is never deleted; its contents (holder
+pid) are advisory debugging info only, the lock itself is the truth.
+
+Within one process the lease is refcounted per root: a second writable
+open of the same root shares the held lock instead of self-deadlocking
+on a second fd (``flock`` locks conflict *between fds*, even in one
+process).  This preserves the historical "one process owns a root"
+contract for in-process reopen patterns while excluding other
+processes.
+
+On platforms without ``fcntl`` (Windows) the lease degrades to the
+in-process registry: same-process exclusivity still holds, cross-process
+exclusivity is advisory only.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Dict, Optional, Union
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX hosts
+    fcntl = None  # type: ignore[assignment]
+
+LEASE_NAME = "store.lease"
+
+#: how often a "wait"-mode acquire re-polls the lock (non-blocking
+#: attempts rather than a blocking flock, so timeouts work and the
+#: in-process registry stays consistent between attempts)
+_POLL_S = 0.05
+
+
+class StoreLeaseHeld(RuntimeError):
+    """Another process holds the writer lease for this store root."""
+
+
+def lease_path(root: Union[str, Path]) -> Path:
+    return Path(root) / LEASE_NAME
+
+
+class _Entry:
+    __slots__ = ("fd", "count")
+
+    def __init__(self, fd: int) -> None:
+        self.fd = fd
+        self.count = 1
+
+
+_registry_lock = threading.Lock()
+_leases: Dict[str, _Entry] = {}
+
+
+class StoreLease:
+    """Handle on one acquisition of a root's writer lease.  ``release()``
+    decrements the per-process refcount; the flock drops when the last
+    in-process holder releases (or the process dies)."""
+
+    def __init__(self, key: str, path: Path) -> None:
+        self._key = key
+        self.path = path
+        self._released = False
+
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        with _registry_lock:
+            entry = _leases.get(self._key)
+            if entry is None:  # pragma: no cover - double-release safety
+                return
+            entry.count -= 1
+            if entry.count == 0:
+                del _leases[self._key]
+                if fcntl is not None:
+                    try:
+                        fcntl.flock(entry.fd, fcntl.LOCK_UN)
+                    except OSError:  # pragma: no cover - fd already dead
+                        pass
+                os.close(entry.fd)
+
+    def __enter__(self) -> "StoreLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"<StoreLease {self.path} released={self._released}>"
+
+
+def holder_pid(root: Union[str, Path]) -> Optional[int]:
+    """Advisory pid recorded by the current/most recent holder (the
+    flock, not this value, decides ownership)."""
+    try:
+        raw = lease_path(root).read_text().strip()
+        return int(raw.split()[0]) if raw else None
+    except (OSError, ValueError):
+        return None
+
+
+def _try_flock(fd: int) -> bool:
+    if fcntl is None:
+        return True  # degraded mode: in-process exclusivity only
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        return True
+    except OSError:
+        return False
+
+
+def acquire_store_lease(root: Union[str, Path], mode: str = "try",
+                        timeout_s: Optional[float] = None) -> StoreLease:
+    """Acquire the writer lease for ``root``.
+
+    ``mode="try"`` raises :class:`StoreLeaseHeld` immediately when
+    another process holds it; ``mode="wait"`` polls until the holder
+    dies or releases (a standby's takeover path), raising
+    ``TimeoutError`` if ``timeout_s`` elapses first.
+    """
+    if mode not in ("try", "wait"):
+        raise ValueError(f"lease mode must be 'try' or 'wait', got {mode!r}")
+    path = lease_path(root)
+    key = os.path.realpath(str(path))
+    deadline = (time.monotonic() + timeout_s) if timeout_s is not None else None
+    while True:
+        with _registry_lock:
+            entry = _leases.get(key)
+            if entry is not None:  # this process already owns it: share
+                entry.count += 1
+                return StoreLease(key, path)
+            fd = os.open(str(path), os.O_RDWR | os.O_CREAT, 0o644)
+            if _try_flock(fd):
+                # advisory holder info; the flock is the source of truth,
+                # so this needs no durability discipline
+                try:
+                    os.ftruncate(fd, 0)
+                    os.write(fd, f"{os.getpid()}\n".encode())
+                except OSError:  # pragma: no cover - best effort
+                    pass
+                _leases[key] = _Entry(fd)
+                return StoreLease(key, path)
+            os.close(fd)
+            pid = holder_pid(root)
+        if mode == "try":
+            raise StoreLeaseHeld(
+                f"store root {root} is owned by another process"
+                + (f" (pid {pid})" if pid else "")
+                + "; open with readonly=True for a replica, or lease='wait' "
+                "to stand by for takeover")
+        if deadline is not None and time.monotonic() >= deadline:
+            raise TimeoutError(
+                f"timed out waiting {timeout_s}s for the store lease on "
+                f"{root}" + (f" (held by pid {pid})" if pid else ""))
+        time.sleep(_POLL_S)

@@ -57,8 +57,18 @@ Concurrency (the contract the `repro.service` tier builds on):
 * `keys()` orders by `seq`, so iteration order is put order and
   reopen-stable even when shard commits complete out of order.
 
-One process owns a store root at a time; cross-process coordination is
-out of scope for this tier.
+Cross-process ownership: exactly ONE process opens a root read-write at
+a time, enforced by an ``fcntl.flock`` on ``<root>/store.lease``
+(`repro.core.lease`) — the writer owns ingest, compaction, and
+rebalancing, and its death (even SIGKILL) releases the lease so a
+standby can take over.  Any number of *other* processes open the same
+root with ``readonly=True``: a replica never takes the lease, never
+mutates, and follows the writer through the atomic ``store.json``
+commit point — ``refresh()`` re-reads the meta + shard indexes when
+they change on disk, so a replica tracks compaction generation swaps,
+rebalances, and new ingest without any writer↔replica channel beyond
+the filesystem.  Within one process the lease is refcounted, so the
+historical open-twice-in-one-process pattern still works.
 """
 
 from __future__ import annotations
@@ -77,6 +87,7 @@ import numpy as np
 from repro import obs
 from repro.core.api import PromptCompressor, parse_frame
 from repro.core.durability import fsync_dir, fsync_file, write_durable
+from repro.core.lease import acquire_store_lease
 from repro.core.locks import make_lock, make_rlock
 
 _META_NAME = "store.json"
@@ -225,30 +236,91 @@ class ShardedPromptStore:
 
     def __init__(self, root: str | Path,
                  compressor: Optional[PromptCompressor] = None,
-                 n_shards: Optional[int] = None):
+                 n_shards: Optional[int] = None, *,
+                 readonly: bool = False,
+                 lease: Optional[str] = "try"):
+        """Open (or create) the store at ``root``.
+
+        ``readonly=True`` opens a read-replica: no lease, no mutation, no
+        GC — the process follows the owning writer's ``store.json`` via
+        `refresh`.  A writable open takes the cross-process writer lease:
+        ``lease="try"`` (default) raises `StoreLeaseHeld` when another
+        process owns the root, ``lease="wait"`` blocks until it is free
+        (a standby's takeover path), ``lease=None`` skips the lease
+        entirely (single-process embedders that manage their own
+        exclusion)."""
         self.root = Path(root)
-        self.root.mkdir(parents=True, exist_ok=True)
-        self.compressor = compressor or PromptCompressor()
-        self._meta_lock = make_lock("meta")
-        self._rebalance_lock = make_lock("rebalance")
-        # files a committed rebalance still owes an unlink for (crash
-        # between its meta commit and its cleanup): carried in store.json
-        # as "sweep" so a reopen can finish the job — by-name intent
-        # beats guessing whether an old gen-0 file is ours or a backup
-        self._pending_sweep: List[str] = []
-        n, gens, dict_shas = self._resolve_layout(n_shards)
-        shards = [_Shard(*self._shard_paths(i, gens[i], n)) for i in range(n)]
-        self._layout = _Layout(n, shards, gens, dict_shas)
-        self._load_dict_sidecars()
-        self._gc_stale_files()
-        self._index_lock = make_rlock("index")
-        self._index: Dict[str, dict] = {}
-        self._next_seq = 0
-        self._load_index()
+        self._readonly = bool(readonly)
+        self._lease = None
+        if self._readonly:
+            if not ((self.root / _META_NAME).exists()
+                    or (self.root / "data.bin").exists()):
+                raise ValueError(
+                    f"no store at {self.root}: a read-only replica cannot "
+                    "create one — start the writer first")
+        else:
+            self.root.mkdir(parents=True, exist_ok=True)
+            if lease is not None and lease != "none":
+                self._lease = acquire_store_lease(self.root, mode=lease)
+        try:
+            self.compressor = compressor or PromptCompressor()
+            self._meta_lock = make_lock("meta")
+            self._rebalance_lock = make_lock("rebalance")
+            # files a committed rebalance still owes an unlink for (crash
+            # between its meta commit and its cleanup): carried in store.json
+            # as "sweep" so a reopen can finish the job — by-name intent
+            # beats guessing whether an old gen-0 file is ours or a backup
+            self._pending_sweep: List[str] = []
+            n, gens, dict_shas = self._resolve_layout(n_shards)
+            shards = [_Shard(*self._shard_paths(i, gens[i], n))
+                      for i in range(n)]
+            self._layout = _Layout(n, shards, gens, dict_shas)
+            self._load_dict_sidecars()
+            if not self._readonly:
+                self._gc_stale_files()
+            self._index_lock = make_rlock("index")
+            self._index: Dict[str, dict] = {}
+            self._next_seq = 0
+            self._load_index()
+            self._disk_sig = self._read_disk_sig() if self._readonly else None
+        except BaseException:
+            self.close()
+            raise
 
     @property
     def n_shards(self) -> int:
         return self._layout.n_shards
+
+    @property
+    def readonly(self) -> bool:
+        return self._readonly
+
+    def close(self) -> None:
+        """Release the writer lease (if held).  Reads/writes through a
+        closed store still work in-process; only the cross-process claim
+        is dropped, so close exactly when another process may take over."""
+        lease, self._lease = getattr(self, "_lease", None), None
+        if lease is not None:
+            lease.release()
+
+    def __enter__(self) -> "ShardedPromptStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # pragma: no cover - interpreter-shutdown timing
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _assert_writable(self, op: str) -> None:
+        if self._readonly:
+            raise RuntimeError(
+                f"{op} on a read-only replica: this process follows the "
+                "writer's store.json and must not mutate the root; open "
+                "without readonly=True (winning the store.lease) to write")
 
     # -- layout ---------------------------------------------------------------
 
@@ -272,6 +344,10 @@ class ShardedPromptStore:
             return n, gens, dicts
         if (self.root / "data.bin").exists():
             return 1, [0], [None]  # legacy single-file store, predates store.json
+        if self._readonly:  # raced the writer's first meta publish
+            raise ValueError(
+                f"no store at {self.root}: a read-only replica cannot "
+                "create one — start the writer first")
         n = self.DEFAULT_SHARDS if requested is None else int(requested)
         if n < 1:
             raise ValueError("n_shards must be >= 1")
@@ -329,12 +405,12 @@ class ShardedPromptStore:
         return self.root / (f"shard-{i:03d}.dict" if gen == 0
                             else f"shard-{i:03d}.g{gen:04d}.dict")
 
-    def _load_dict_sidecars(self) -> None:
+    def _load_dict_sidecars(self, lay: Optional[_Layout] = None) -> None:
         """Verify and register every meta-referenced dictionary sidecar.
         A missing or bit-flipped sidecar makes its shard's dict frames
         undecodable, so the open path fails loudly instead of deferring
         the error to some later get()."""
-        lay = self._layout
+        lay = self._layout if lay is None else lay
         for i, sha in enumerate(lay.dict_shas):
             if not sha:
                 continue
@@ -437,6 +513,81 @@ class ShardedPromptStore:
             self._index[rec["key"]] = rec
         self._next_seq = records[-1]["seq"] + 1 if records else 0
 
+    # -- read-replica generation follow ---------------------------------------
+
+    def _read_disk_sig(self) -> Optional[tuple]:
+        """Cheap change fingerprint of the on-disk store: the meta file's
+        identity (``os.replace`` gives every publish a fresh inode) plus
+        each live shard index's size (plain ingest appends lines without
+        touching the meta).  Compared, never parsed — any mismatch just
+        triggers a full reload."""
+        try:
+            st = (self.root / _META_NAME).stat()
+            sig = [(st.st_ino, st.st_mtime_ns, st.st_size)]
+        except OSError:
+            sig = [None]  # legacy single-file store has no meta
+        lay = self._layout
+        for i in range(lay.n_shards):
+            try:
+                sig.append(lay.shards[i].index_path.stat().st_size)
+            except OSError:
+                sig.append(None)
+        return tuple(sig)
+
+    def refresh(self, force: bool = False) -> bool:
+        """Re-read ``store.json`` + shard indexes if they changed on disk
+        (or unconditionally with ``force=True``), swapping in a fresh
+        `_Layout` and index — how a read-only replica follows the
+        writer's ingest, compaction generation swaps, and rebalances.
+        Returns True when a reload happened.  Writer stores refuse: their
+        in-memory state IS the authority the disk reflects."""
+        if not self._readonly:
+            raise RuntimeError(
+                "refresh() is for read-only replicas; a writer's in-memory "
+                "state is authoritative and never reloads from disk")
+        with self._rebalance_lock:
+            sig = self._read_disk_sig()
+            if not force and sig == self._disk_sig:
+                return False
+            # a compaction/rebalance may swap files mid-reload; each retry
+            # re-reads the meta so the last attempt sees a settled layout
+            for attempt in range(3):
+                try:
+                    self._reload_locked()
+                    break
+                except (OSError, ValueError, KeyError, json.JSONDecodeError):
+                    if attempt == 2:
+                        raise
+                    time.sleep(0.02)
+            # the pre-reload signature: if the writer published again
+            # mid-reload we re-detect the change next poll (conservative)
+            self._disk_sig = sig
+            obs.counter("store.replica.refresh").inc()
+            return True
+
+    def _reload_locked(self) -> None:
+        """One reload attempt (caller holds `_rebalance_lock`): read meta,
+        build + verify the new layout fully off to the side, then install
+        it under the index lock in one swap so readers never observe a
+        half-loaded replica."""
+        n, gens, dict_shas = self._resolve_layout(None)
+        shards = [_Shard(*self._shard_paths(i, gens[i], n)) for i in range(n)]
+        new_lay = _Layout(n, shards, gens, dict_shas)
+        # dictionaries register before the swap: no reader may see a
+        # dict-compressed frame whose dictionary is not yet resolvable
+        self._load_dict_sidecars(new_lay)
+        records: List[dict] = []
+        for shard in shards:
+            for pos, rec in enumerate(shard.load_index()):
+                rec.setdefault("seq", pos)
+                records.append(rec)
+        records.sort(key=lambda r: r["seq"])
+        index = {rec["key"]: rec for rec in records}
+        with self._index_lock:
+            self._layout = new_lay
+            self._index = index
+            self._next_seq = records[-1]["seq"] + 1 if records else 0
+
     # -- bookkeeping ----------------------------------------------------------
 
     def __len__(self) -> int:
@@ -485,6 +636,7 @@ class ShardedPromptStore:
         entry carries key/seq/method/n_chars/blob and commits via
         `commit_batch`.
         """
+        self._assert_writable("plan_batch/put")
         with obs.span("store.plan"):
             keys = [_sha(t) for t in texts]
             # first occurrence of each not-yet-stored key, in batch order
@@ -527,6 +679,7 @@ class ShardedPromptStore:
         lock), the entries are re-grouped under the current routing and
         committed there — a planned write is never lost and never lands
         in a shard its key no longer routes to."""
+        self._assert_writable("commit_batch")
         out: List[dict] = []
         obs.histogram("store.commit.records").observe(len(entries))
         pending: List[Tuple[int, List[dict]]] = [(shard_id, list(entries))]
@@ -573,7 +726,12 @@ class ShardedPromptStore:
         # record lookup and file read are atomic w.r.t. a compaction swap
         # (which retargets offsets and the backing file together) and a
         # rebalance (whose layout swap invalidates the captured _Layout —
-        # retry re-routes against the new shard count)
+        # retry re-routes against the new shard count).  On a read-only
+        # replica a missing key or a vanished generation file may just
+        # mean the writer moved on since the last poll: reload from disk
+        # and retry (bounded), outside the shard lock — `refresh` takes
+        # the rebalance-ranked lock, which must precede shard locks.
+        refreshes = 0
         while True:
             lay = self._layout
             sid = self._shard_of(key, lay.n_shards)
@@ -581,8 +739,21 @@ class ShardedPromptStore:
                 if self._layout is not lay:
                     continue
                 with self._index_lock:
-                    rec = self._index[key]
-                return lay.shards[sid].read(rec["offset"], rec["length"])
+                    rec = self._index.get(key)
+                if rec is None:
+                    if not self._readonly:
+                        raise KeyError(key)
+                else:
+                    try:
+                        return lay.shards[sid].read(
+                            rec["offset"], rec["length"])
+                    except OSError:
+                        if not self._readonly:
+                            raise
+            if refreshes >= 3:
+                raise KeyError(key)
+            refreshes += 1
+            self.refresh(force=True)
 
     def get(self, key: str, verify: bool = True) -> str:
         text = self.compressor.decompress(self._read_blob(key))
@@ -719,6 +890,7 @@ class ShardedPromptStore:
         bytes_after includes the new sidecar, so callers comparing totals
         charge the dictionary its own weight.
         """
+        self._assert_writable("swap_shard")
         lay = self._layout
         entries = sorted(entries, key=lambda e: e["seq"])
         planned_seqs = {e["seq"] for e in entries}
@@ -836,6 +1008,7 @@ class ShardedPromptStore:
         Returns {n_shards_before, n_shards_after, n_records, n_caught_up,
         n_reencoded, bytes_before, bytes_after, wall_s}.
         """
+        self._assert_writable("rebalance")
         n_new = int(n_shards)
         if n_new < 1:
             raise ValueError("n_shards must be >= 1")
@@ -1025,5 +1198,8 @@ class PromptStore(ShardedPromptStore):
 
     def __init__(self, root: str | Path,
                  compressor: Optional[PromptCompressor] = None,
-                 n_shards: int = 1):
-        super().__init__(root, compressor, n_shards=n_shards)
+                 n_shards: int = 1, *,
+                 readonly: bool = False,
+                 lease: Optional[str] = "try"):
+        super().__init__(root, compressor, n_shards=n_shards,
+                         readonly=readonly, lease=lease)

@@ -16,15 +16,13 @@ optionally fronted by the repro.service tier.
 from __future__ import annotations
 
 import argparse
-import json
 import tempfile
-import threading
 import time
 
 import jax
 
-from repro import obs
 from repro.data.pipeline import build_store_from_corpus
+from repro.launch.statsdump import start_stats_dumper, write_snapshot
 from repro.train.serve_loop import BatchServer
 from repro.train.train_loop import init_train_state
 
@@ -84,24 +82,6 @@ def parse_args(argv=None) -> argparse.Namespace:
     return args
 
 
-def _start_stats_dumper(interval_s: float) -> threading.Event:
-    """Print obs metric rates every `interval_s` seconds until the
-    returned event is set (daemon thread; exits with the process)."""
-    stop = threading.Event()
-
-    def loop() -> None:
-        prev = obs.snapshot()
-        while not stop.wait(interval_s):
-            cur = obs.snapshot()
-            text = obs.render_diff(obs.diff(prev, cur))
-            print("\n".join("[obs] " + line for line in text.splitlines()))
-            prev = cur
-
-    threading.Thread(target=loop, name="obs-stats-dumper",
-                     daemon=True).start()
-    return stop
-
-
 def main(argv=None) -> None:
     args = parse_args(argv)
 
@@ -109,7 +89,9 @@ def main(argv=None) -> None:
     from repro.service import PromptService
 
     cfg = CONFIG.smoke()
-    stats_stop = (_start_stats_dumper(args.stats_interval)
+    stats_stop = (start_stats_dumper(args.stats_interval,
+                                     json_path=args.stats_json,
+                                     prefix="[obs] ")
                   if args.stats_interval else None)
     params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
     with tempfile.TemporaryDirectory() as tmp:
@@ -159,12 +141,9 @@ def main(argv=None) -> None:
     if stats_stop is not None:
         stats_stop.set()
     if args.stats_json:
-        snap = obs.snapshot()
-        with open(args.stats_json, "w", encoding="utf-8") as f:
-            json.dump(snap, f, indent=1, sort_keys=True)
-        print(f"[serve] obs snapshot -> {args.stats_json} "
-              f"({len(snap['counters'])} counters, {len(snap['gauges'])} "
-              f"gauges, {len(snap['histograms'])} histograms)")
+        # atomic tmp+rename publish: a scraper tailing the file can never
+        # observe a torn JSON document
+        write_snapshot(args.stats_json, prefix="[serve] ")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""Obs snapshot dumping shared by the launchers (serve, gateway).
+
+`write_snapshot` publishes the current ``repro.obs`` snapshot ATOMICALLY
+(tmp + fsync + rename via ``core.durability.publish_durable``): a
+scraper tailing ``--stats-json`` must never observe a torn JSON
+document, which a plain ``open(...).write`` allows whenever the scrape
+races the dump.  `start_stats_dumper` is the periodic variant — it
+prints the metric *rates* since the previous dump and (optionally)
+republishes the snapshot file each interval.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from typing import Optional
+
+from repro import obs
+from repro.core.durability import publish_durable
+
+
+def write_snapshot(path: str, prefix: str = "") -> dict:
+    """Atomically publish the current obs snapshot as JSON at ``path``.
+    Returns the snapshot written."""
+    snap = obs.snapshot()
+    publish_durable(
+        path, (json.dumps(snap, indent=1, sort_keys=True) + "\n").encode())
+    if prefix:
+        print(f"{prefix}obs snapshot -> {path} "
+              f"({len(snap['counters'])} counters, {len(snap['gauges'])} "
+              f"gauges, {len(snap['histograms'])} histograms)")
+    return snap
+
+
+def start_stats_dumper(interval_s: float, json_path: Optional[str] = None,
+                       prefix: str = "[obs] ") -> threading.Event:
+    """Print obs metric rates every ``interval_s`` seconds — and, when
+    ``json_path`` is given, atomically republish the snapshot there —
+    until the returned event is set (daemon thread; exits with the
+    process)."""
+    stop = threading.Event()
+
+    def loop() -> None:
+        prev = obs.snapshot()
+        while not stop.wait(interval_s):
+            cur = obs.snapshot()
+            text = obs.render_diff(obs.diff(prev, cur))
+            print("\n".join(prefix + line for line in text.splitlines()))
+            if json_path:
+                write_snapshot(json_path)
+            prev = cur
+
+    threading.Thread(target=loop, name="obs-stats-dumper",
+                     daemon=True).start()
+    return stop

@@ -10,12 +10,13 @@ See ARCHITECTURE.md "Service tier".
 from repro.service.cache import TokenCache
 from repro.service.compaction import (BackgroundCompactor, CompactionResult,
                                       compact_shard, compact_store)
-from repro.service.ingest import IngestQueue, IngestTicket
+from repro.service.ingest import IngestError, IngestQueue, IngestTicket
 from repro.service.service import PromptService
 
 __all__ = [
     "BackgroundCompactor",
     "CompactionResult",
+    "IngestError",
     "IngestQueue",
     "IngestTicket",
     "PromptService",

@@ -12,7 +12,9 @@ different codec pipeline — no invalidation protocol is needed.
 
 Sizing is by payload bytes (`np.ndarray.nbytes`), not entry count, since
 prompt token streams span ~30 to ~200k ids (paper §4.1).  Cached arrays
-are shared, not copied — treat them as read-only.
+are shared, not copied — and ENFORCED read-only: `put` clears the numpy
+writeable flag, so a caller that tries to mutate a served array gets a
+ValueError instead of silently corrupting every later hit for that key.
 """
 
 from __future__ import annotations
@@ -67,6 +69,10 @@ class TokenCache:
 
     def put(self, key: str, tokens: np.ndarray) -> None:
         arr = np.asarray(tokens)
+        # cached arrays are handed out shared across every later hit;
+        # freeze so a caller mutating one raises instead of corrupting
+        # the entry for everyone else
+        arr.flags.writeable = False
         with self._lock:
             if arr.nbytes > self.capacity_bytes:
                 # would evict the entire cache and still not fit

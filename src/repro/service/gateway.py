@@ -1,0 +1,536 @@
+"""Socket gateway: the network front end of the service tier.
+
+One writer gateway (owning the store lease) and N read-replica gateways
+front a shared store root; clients speak a length-prefixed JSON frame
+protocol over TCP:
+
+    frame   := uint32_be(len(payload)) payload
+    payload := JSON object, UTF-8
+
+    request : {"op": <op>, "id": <any>, ...op fields}
+    response: {"id": <echoed>, "ok": true, ...result}
+            | {"id": <echoed>, "ok": false, "error": <code>,
+               "message": <human text>}
+
+Ops: ``ping``, ``put`` (synchronous durable put_many), ``put_async``
+(queue + ticket; ``wait: true`` blocks until durable), ``wait`` (redeem
+a ticket id), ``get``, ``get_tokens``, ``stats`` (``snapshot: true``
+embeds the full obs snapshot), ``refresh`` (replica: re-poll the
+writer's store.json).
+
+Admission control — the gateway never buffers unboundedly:
+
+* **global max in-flight** (``REPRO_GATEWAY_MAX_INFLIGHT``): a request
+  arriving while that many are executing is REJECTED immediately
+  (``error=admission_reject``), not queued — shedding load beats
+  building an invisible queue in front of the ingest queue's own
+  bounded backpressure;
+* **per-connection window** (``REPRO_GATEWAY_CONN_WINDOW``): the
+  connection's reader loop stops consuming frames while a window's
+  worth are in flight, so a pipelining client is stalled by TCP flow
+  control — which is how the ingest queue's ``max_pending`` propagates
+  all the way back to the client socket instead of being absorbed by
+  server-side buffering.
+
+Graceful drain: SIGTERM/SIGINT stops accepting connections, lets
+in-flight requests finish (bounded by ``REPRO_GATEWAY_DRAIN_S``),
+drains the ingest queue so every acknowledged ticket is durable, then
+exits.  Requests executing blocking store/service calls run on a
+thread pool sized to the in-flight cap; the asyncio loop itself only
+frames, admits, and responds.
+
+Instrumented through ``repro.obs``: per-op request-latency histograms
+(``gateway.request.s{op=...}``), an in-flight gauge, and counters for
+requests, admission rejects, errors, and connections.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import itertools
+import json
+import signal
+import socket
+import struct
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro import obs
+from repro.core import env
+from repro.service.service import PromptService
+
+_HDR = struct.Struct(">I")
+
+#: ticket ids kept redeemable per gateway (oldest pruned first)
+_TICKET_BACKLOG = 1024
+
+#: ops a read-only replica gateway refuses outright
+_WRITE_OPS = frozenset({"put", "put_async", "wait"})
+
+#: known ops (bounds the label cardinality of the request histogram)
+_OPS = frozenset({"ping", "put", "put_async", "wait", "get", "get_tokens",
+                  "stats", "refresh"})
+
+
+class GatewayError(RuntimeError):
+    """A gateway request failed; ``code`` is the protocol error code."""
+
+    def __init__(self, message: str, code: str = "error") -> None:
+        super().__init__(message)
+        self.code = code
+
+
+def _frame(doc: Dict[str, Any]) -> bytes:
+    payload = json.dumps(doc).encode("utf-8")
+    return _HDR.pack(len(payload)) + payload
+
+
+class GatewayServer:
+    """Asyncio TCP server fronting one `PromptService`.
+
+    ``readonly=True`` marks a replica gateway: write ops are refused at
+    the front door (the store would refuse them anyway) and ``refresh``
+    is served.  ``port=0`` binds an ephemeral port, published on
+    ``self.port`` once running."""
+
+    def __init__(self, service: PromptService, host: str = "127.0.0.1",
+                 port: int = 0, *, max_inflight: Optional[int] = None,
+                 conn_window: Optional[int] = None,
+                 frame_max: Optional[int] = None,
+                 drain_s: Optional[float] = None,
+                 readonly: bool = False) -> None:
+        self.service = service
+        self.host = host
+        self.port = port
+        self.readonly = bool(readonly)
+        self.max_inflight = (env.read("REPRO_GATEWAY_MAX_INFLIGHT")
+                             if max_inflight is None else int(max_inflight))
+        self.conn_window = (env.read("REPRO_GATEWAY_CONN_WINDOW")
+                            if conn_window is None else int(conn_window))
+        self.frame_max = (env.read("REPRO_GATEWAY_FRAME_MAX")
+                          if frame_max is None else int(frame_max))
+        self.drain_s = (env.read("REPRO_GATEWAY_DRAIN_S")
+                        if drain_s is None else float(drain_s))
+        if min(self.max_inflight, self.conn_window, self.frame_max) < 1:
+            raise ValueError("max_inflight, conn_window and frame_max must "
+                             "be >= 1")
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._done: Optional[asyncio.Event] = None
+        self._draining = False
+        self._inflight = 0          # event-loop-thread only
+        self._open_conns = 0        # event-loop-thread only
+        self._executor = ThreadPoolExecutor(
+            max_workers=self.max_inflight, thread_name_prefix="gateway-exec")
+        self._tickets: "OrderedDict[str, Any]" = OrderedDict()
+        self._tickets_lock = threading.Lock()
+        self._ticket_ids = itertools.count(1)
+        self._requests = obs.owned_counter("gateway.requests")
+        self._rejects = obs.owned_counter("gateway.admission_rejects")
+        self._errors = obs.owned_counter("gateway.request_errors")
+        self._conns = obs.owned_counter("gateway.connections")
+        obs.owned_gauge("gateway.inflight", lambda: self._inflight)
+        obs.owned_gauge("gateway.open_connections", lambda: self._open_conns)
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def run(self, ready_cb=None, install_signals: bool = True) -> None:
+        """Serve until drained (blocks).  ``ready_cb(self)`` fires once
+        the socket is bound (``self.port`` is final); ``install_signals``
+        wires SIGTERM/SIGINT to graceful drain."""
+        asyncio.run(self._main(ready_cb, install_signals))
+
+    async def _main(self, ready_cb, install_signals: bool) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._done = asyncio.Event()
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        if install_signals:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._loop.add_signal_handler(
+                        sig, lambda: asyncio.ensure_future(self.shutdown()))
+                except (NotImplementedError, RuntimeError):
+                    pass  # pragma: no cover - non-main-thread / platform
+        if ready_cb is not None:
+            ready_cb(self)
+        try:
+            await self._done.wait()
+        finally:
+            # in-flight work has settled (or overstayed the drain budget)
+            self._executor.shutdown(wait=False)
+
+    async def shutdown(self) -> None:
+        """Graceful drain: stop accepting, let in-flight requests finish
+        (bounded by ``drain_s``), flush the ingest queue, release run()."""
+        if self._draining:
+            return
+        self._draining = True
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        deadline = self._loop.time() + self.drain_s
+        while self._inflight > 0 and self._loop.time() < deadline:
+            await asyncio.sleep(0.02)
+        try:
+            # every ticket acknowledged before the drain becomes durable
+            await self._loop.run_in_executor(None, self.service.drain)
+        except Exception:  # pragma: no cover - service already stopped
+            pass
+        self._done.set()
+
+    # -- connection handling --------------------------------------------------
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        if self._draining:
+            writer.close()
+            return
+        self._conns.inc()
+        self._open_conns += 1
+        window = asyncio.Semaphore(self.conn_window)
+        wlock = asyncio.Lock()
+        tasks: set = set()
+        try:
+            while True:
+                try:
+                    hdr = await reader.readexactly(_HDR.size)
+                except (asyncio.IncompleteReadError, ConnectionResetError):
+                    break
+                (length,) = _HDR.unpack(hdr)
+                if length > self.frame_max:
+                    await self._send(writer, wlock, {
+                        "ok": False, "error": "frame_too_large",
+                        "message": f"frame of {length} bytes exceeds the "
+                                   f"{self.frame_max}-byte limit"})
+                    break
+                try:
+                    payload = await reader.readexactly(length)
+                except (asyncio.IncompleteReadError, ConnectionResetError):
+                    break
+                try:
+                    req = json.loads(payload)
+                    if not isinstance(req, dict):
+                        raise ValueError("frame payload must be an object")
+                except ValueError as e:
+                    await self._send(writer, wlock, {
+                        "ok": False, "error": "bad_frame", "message": str(e)})
+                    break
+                # per-connection backpressure: while a full window is in
+                # flight this await parks the reader loop, the kernel
+                # socket buffer fills, and the CLIENT stalls — bounded
+                # buffering end to end
+                await window.acquire()
+                if self._draining:
+                    window.release()
+                    await self._send(writer, wlock, {
+                        "id": req.get("id"), "ok": False, "error": "draining",
+                        "message": "gateway is draining for shutdown"})
+                    continue
+                if self._inflight >= self.max_inflight:
+                    window.release()
+                    self._rejects.inc()
+                    await self._send(writer, wlock, {
+                        "id": req.get("id"), "ok": False,
+                        "error": "admission_reject",
+                        "message": f"{self.max_inflight} requests already "
+                                   "in flight; retry with backoff"})
+                    continue
+                self._inflight += 1
+                task = asyncio.ensure_future(
+                    self._serve_one(req, writer, wlock, window))
+                tasks.add(task)
+                task.add_done_callback(tasks.discard)
+        except (ConnectionResetError, OSError):  # pragma: no cover - peer
+            pass
+        finally:
+            if tasks:
+                await asyncio.gather(*tasks, return_exceptions=True)
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, OSError):  # pragma: no cover
+                pass
+            self._open_conns -= 1
+
+    async def _serve_one(self, req: dict, writer: asyncio.StreamWriter,
+                         wlock: asyncio.Lock,
+                         window: asyncio.Semaphore) -> None:
+        try:
+            resp = await self._loop.run_in_executor(
+                self._executor, self._execute, req)
+        except Exception as e:  # pragma: no cover - _execute catches its own
+            resp = {"ok": False, "error": type(e).__name__, "message": str(e)}
+        finally:
+            self._inflight -= 1
+            window.release()
+        resp.setdefault("id", req.get("id"))
+        await self._send(writer, wlock, resp)
+
+    async def _send(self, writer: asyncio.StreamWriter, wlock: asyncio.Lock,
+                    doc: dict) -> None:
+        # one response frame at a time per connection; drain() honors the
+        # peer's receive window so slow readers backpressure us too
+        async with wlock:
+            try:
+                writer.write(_frame(doc))
+                await writer.drain()
+            except (ConnectionResetError, OSError):  # pragma: no cover
+                pass
+
+    # -- request execution (thread pool) --------------------------------------
+
+    def _execute(self, req: dict) -> dict:
+        op = req.get("op")
+        self._requests.inc()
+        label = op if op in _OPS else "unknown"
+        try:
+            with obs.span("gateway.request", op=label):
+                if op not in _OPS:
+                    raise GatewayError(f"unknown op {op!r}", "unknown_op")
+                if self.readonly and op in _WRITE_OPS:
+                    raise GatewayError(
+                        f"{op} on a read-replica gateway; send writes to "
+                        "the lease-holding writer", "read_only")
+                out = getattr(self, f"_op_{op}")(req)
+            out["ok"] = True
+            return out
+        except GatewayError as e:
+            self._errors.inc()
+            return {"ok": False, "error": e.code, "message": str(e)}
+        except KeyError as e:
+            self._errors.inc()
+            return {"ok": False, "error": "not_found",
+                    "message": f"no such key: {e.args[0] if e.args else e}"}
+        except TimeoutError as e:
+            self._errors.inc()
+            return {"ok": False, "error": "timeout", "message": str(e)}
+        except Exception as e:
+            self._errors.inc()
+            return {"ok": False, "error": type(e).__name__, "message": str(e)}
+
+    @staticmethod
+    def _req_texts(req: dict) -> List[str]:
+        texts = req.get("texts")
+        if texts is None:
+            texts = [req["text"]] if "text" in req else None
+        if not texts or not all(isinstance(t, str) for t in texts):
+            raise GatewayError("op needs 'texts': [str, ...] or 'text': str",
+                               "bad_request")
+        return list(texts)
+
+    @staticmethod
+    def _req_keys(req: dict) -> List[str]:
+        keys = req.get("keys")
+        if keys is None:
+            keys = [req["key"]] if "key" in req else None
+        if not keys or not all(isinstance(k, str) for k in keys):
+            raise GatewayError("op needs 'keys': [str, ...] or 'key': str",
+                               "bad_request")
+        return list(keys)
+
+    def _op_ping(self, req: dict) -> dict:
+        return {"pong": True, "readonly": self.readonly}
+
+    def _op_put(self, req: dict) -> dict:
+        keys = self.service.put_many(self._req_texts(req), req.get("method"))
+        return {"keys": keys, "durable": True}
+
+    def _op_put_async(self, req: dict) -> dict:
+        ticket = self.service.put_async(self._req_texts(req),
+                                        req.get("method"))
+        if req.get("wait"):
+            return {"keys": ticket.wait(float(req.get("timeout", 30.0))),
+                    "durable": True}
+        with self._tickets_lock:
+            tid = str(next(self._ticket_ids))
+            self._tickets[tid] = ticket
+            while len(self._tickets) > _TICKET_BACKLOG:
+                self._tickets.popitem(last=False)
+        return {"keys": ticket.keys, "ticket": tid, "durable": False}
+
+    def _op_wait(self, req: dict) -> dict:
+        tid = str(req.get("ticket", ""))
+        with self._tickets_lock:
+            ticket = self._tickets.get(tid)
+        if ticket is None:
+            raise GatewayError(
+                f"unknown ticket {tid!r} (expired or never issued)",
+                "unknown_ticket")
+        return {"keys": ticket.wait(float(req.get("timeout", 30.0))),
+                "durable": True}
+
+    def _op_get(self, req: dict) -> dict:
+        return {"texts": self.service.get_many(self._req_keys(req))}
+
+    def _op_get_tokens(self, req: dict) -> dict:
+        arrs = self.service.get_tokens_many(self._req_keys(req))
+        return {"tokens": [np.asarray(a).tolist() for a in arrs]}
+
+    def _op_stats(self, req: dict) -> dict:
+        out = {"service": self.service.stats(),
+               "gateway": self.gateway_stats()}
+        if req.get("snapshot"):
+            out["obs"] = obs.snapshot()
+        return {"stats": out}
+
+    def _op_refresh(self, req: dict) -> dict:
+        store = self.service.store
+        if not getattr(store, "readonly", False):
+            raise GatewayError("refresh is a replica op; the writer's "
+                               "in-memory state is authoritative",
+                               "not_a_replica")
+        return {"refreshed": store.refresh(force=bool(req.get("force",
+                                                              True)))}
+
+    def gateway_stats(self) -> dict:
+        return {
+            "inflight": self._inflight,
+            "open_connections": self._open_conns,
+            "requests": self._requests.value,
+            "admission_rejects": self._rejects.value,
+            "request_errors": self._errors.value,
+            "connections": self._conns.value,
+            "max_inflight": self.max_inflight,
+            "conn_window": self.conn_window,
+            "draining": self._draining,
+            "readonly": self.readonly,
+        }
+
+
+class GatewayHandle:
+    """An in-process gateway running on a daemon thread (tests and
+    benchmarks; real deployments use ``launch/gateway.py``)."""
+
+    def __init__(self, server: GatewayServer,
+                 thread: threading.Thread) -> None:
+        self.server = server
+        self._thread = thread
+
+    @property
+    def port(self) -> int:
+        return self.server.port
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        loop = self.server._loop
+        if loop is not None and loop.is_running():
+            asyncio.run_coroutine_threadsafe(
+                self.server.shutdown(), loop).result(timeout)
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "GatewayHandle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+def start_in_thread(service: PromptService, **kwargs) -> GatewayHandle:
+    """Run a `GatewayServer` on a background thread; returns once the
+    socket is bound (``handle.port`` is final)."""
+    server = GatewayServer(service, **kwargs)
+    ready = threading.Event()
+    failure: List[BaseException] = []
+
+    def _run() -> None:
+        try:
+            server.run(ready_cb=lambda _s: ready.set(),
+                       install_signals=False)
+        except BaseException as e:  # startup failure: surface to caller
+            failure.append(e)
+            ready.set()
+
+    thread = threading.Thread(target=_run, name="gateway", daemon=True)
+    thread.start()
+    if not ready.wait(10.0) or failure:
+        raise RuntimeError(
+            f"gateway failed to start: {failure[0] if failure else 'timeout'}")
+    return GatewayHandle(server, thread)
+
+
+class GatewayClient:
+    """Blocking client for the frame protocol (one request/response at a
+    time per client; open one client per concurrent stream, or pipeline
+    raw frames yourself to exercise the connection window)."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0) -> None:
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._rfile = self._sock.makefile("rb")
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+
+    def request(self, op: str, **fields) -> dict:
+        """Send one request, return the raw response document."""
+        doc = {"op": op, "id": next(self._ids), **fields}
+        with self._lock:
+            self._sock.sendall(_frame(doc))
+            return self._read_response()
+
+    def _read_response(self) -> dict:
+        hdr = self._rfile.read(_HDR.size)
+        if hdr is None or len(hdr) < _HDR.size:
+            raise ConnectionError("gateway closed the connection")
+        (length,) = _HDR.unpack(hdr)
+        payload = self._rfile.read(length)
+        if payload is None or len(payload) < length:
+            raise ConnectionError("gateway closed mid-frame")
+        return json.loads(payload)
+
+    def call(self, op: str, **fields) -> dict:
+        """`request` + raise `GatewayError` on ``ok: false``."""
+        resp = self.request(op, **fields)
+        if not resp.get("ok"):
+            raise GatewayError(
+                f"{resp.get('error', 'error')}: {resp.get('message', '')}",
+                resp.get("error", "error"))
+        return resp
+
+    # -- convenience wrappers --------------------------------------------------
+
+    def ping(self) -> dict:
+        return self.call("ping")
+
+    def put(self, texts: Sequence[str],
+            method: Optional[str] = None) -> List[str]:
+        return self.call("put", texts=list(texts), method=method)["keys"]
+
+    def put_async(self, texts: Sequence[str], method: Optional[str] = None,
+                  wait: bool = False, timeout: float = 30.0) -> dict:
+        return self.call("put_async", texts=list(texts), method=method,
+                         wait=wait, timeout=timeout)
+
+    def wait(self, ticket: str, timeout: float = 30.0) -> List[str]:
+        return self.call("wait", ticket=ticket, timeout=timeout)["keys"]
+
+    def get(self, key: str) -> str:
+        return self.call("get", key=key)["texts"][0]
+
+    def get_many(self, keys: Sequence[str]) -> List[str]:
+        return self.call("get", keys=list(keys))["texts"]
+
+    def get_tokens(self, key: str) -> np.ndarray:
+        return np.asarray(self.call("get_tokens", key=key)["tokens"][0])
+
+    def stats(self, snapshot: bool = False) -> dict:
+        return self.call("stats", snapshot=snapshot)["stats"]
+
+    def refresh(self) -> bool:
+        return self.call("refresh")["refreshed"]
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+            self._sock.close()
+        except OSError:  # pragma: no cover
+            pass
+
+    def __enter__(self) -> "GatewayClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -52,6 +52,14 @@ from repro.core.codec import codec_pool_size
 from repro.core.store import ShardedPromptStore, content_key
 
 
+class IngestError(RuntimeError):
+    """A flush failed and this ticket's texts did not commit.  Raised by
+    `IngestTicket.wait` as a FRESH instance per call — every ticket of a
+    failed flush shares one underlying cause (``__cause__``), but never
+    one exception object, so concurrent waiters can't mutate each
+    other's tracebacks."""
+
+
 class IngestTicket:
     """Handle for one `submit()`: the content keys are known immediately
     (they are content addresses); `wait()` blocks until this submission's
@@ -72,7 +80,12 @@ class IngestTicket:
         if not self._event.wait(timeout):
             raise TimeoutError("ingest ticket not durable within timeout")
         if self._error is not None:
-            raise self._error
+            # wrap per call: re-raising the flush's one exception object
+            # from N waiters would let them race on its traceback
+            raise IngestError(
+                f"ingest flush failed; this ticket's {len(self.keys)} "
+                f"text(s) were not committed: {self._error}"
+            ) from self._error
         return self.keys
 
     def _finish(self, error: Optional[BaseException]) -> None:

@@ -68,6 +68,12 @@ class PromptService:
     # -- lifecycle -------------------------------------------------------------
 
     def start(self) -> "PromptService":
+        if self._stopped:
+            raise RuntimeError(
+                "service is stopped: a PromptService cannot restart — its "
+                "ingest dispatcher and compactor threads are gone, so a "
+                "restarted handle would accept work nothing drains; build "
+                "a fresh PromptService over the store instead")
         if self._started:
             raise RuntimeError("service already started")
         self._started = True
@@ -94,6 +100,9 @@ class PromptService:
             self.compactor.stop()
 
     def __enter__(self) -> "PromptService":
+        if self._stopped:
+            # delegate so the zombie-restart message lives in one place
+            return self.start()
         return self.start() if not self._started else self
 
     def __exit__(self, *exc) -> None:
@@ -106,6 +115,10 @@ class PromptService:
         """Queue texts for ingest; never blocks on fsync (only on
         backpressure).  Degrades to a synchronous, already-durable ticket
         when the service was built with `ingest_async=False`."""
+        if self._stopped:
+            raise RuntimeError(
+                "put_async on a stopped service: the ingest dispatcher is "
+                "gone, so queued texts would never commit")
         if self.ingest is not None:
             return self.ingest.submit(texts, method)
         keys = self.store.put_many(texts, method)

@@ -57,7 +57,9 @@ def _snapshot(root: Path) -> dict:
 
 def _live_files(store) -> set:
     lay = store._layout
-    names = {"store.json"}
+    # store.lease is permanent once a writer has opened the root: the
+    # flock (not the file) is ownership, so it is never GC'd
+    names = {"store.json", "store.lease"}
     for i in range(lay.n_shards):
         data, idx = store._shard_paths(i, lay.gens[i], lay.n_shards)
         if data.exists():

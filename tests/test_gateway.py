@@ -1,0 +1,427 @@
+"""Gateway + multi-process store ownership: the socket frame protocol,
+admission control and per-connection backpressure, the fcntl store
+lease (writer / standby / replica roles), read-replica generation
+follow, and the writer-kill -> standby-takeover crash path."""
+
+import json
+import os
+import signal
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.api import PromptCompressor
+from repro.core.lease import (StoreLeaseHeld, acquire_store_lease,
+                              lease_path)
+from repro.core.store import ShardedPromptStore
+from repro.service import PromptService
+from repro.service.gateway import (GatewayClient, GatewayError,
+                                   start_in_thread)
+from repro.tokenizer.vocab import default_tokenizer
+
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+def _texts(n, tag="gw", rep=8):
+    return [f"{tag} prompt {i}: page the oncall, roll the deploy back, "
+            f"then file the postmortem. " * rep for i in range(n)]
+
+
+def _store(root, tok, method="hybrid", n_shards=2, **kw):
+    return ShardedPromptStore(root, PromptCompressor(tok, method=method),
+                              n_shards=n_shards, **kw)
+
+
+def _service(store, **kw):
+    kw.setdefault("flush_batch", 4)
+    kw.setdefault("flush_interval_s", 0.05)
+    return PromptService(store, **kw).start()
+
+
+# -- frame protocol + core ops (in-process server) ----------------------------
+
+
+def test_gateway_ops_roundtrip(tmp_path, tok):
+    store = _store(tmp_path, tok)
+    svc = _service(store)
+    texts = _texts(6)
+    with start_in_thread(svc) as h:
+        with GatewayClient("127.0.0.1", h.port) as c:
+            assert c.ping()["pong"] is True
+            keys = c.put(texts[:3])
+            assert c.get_many(keys) == texts[:3]          # lossless
+            r = c.put_async([texts[3]], wait=True)
+            assert r["durable"] and c.get(r["keys"][0]) == texts[3]
+            r = c.put_async(texts[4:6])                   # ticketed
+            assert not r["durable"]
+            assert c.wait(r["ticket"]) == r["keys"]
+            assert c.get_many(r["keys"]) == texts[4:6]
+            toks = c.get_tokens(keys[0])
+            assert np.array_equal(toks,
+                                  np.asarray(store.get_tokens(keys[0])))
+            st = c.stats(snapshot=True)
+            assert st["service"]["store"]["n_prompts"] == 6
+            assert st["gateway"]["requests"] >= 8
+            lat = {k: v for k, v in st["obs"]["histograms"].items()
+                   if k.startswith("gateway.request.s")}
+            assert any(v["count"] > 0 and v["p50"] > 0
+                       for v in lat.values())
+            with pytest.raises(GatewayError) as ei:
+                c.get("0" * 64)
+            assert ei.value.code == "not_found"
+            with pytest.raises(GatewayError) as ei:
+                c.wait("no-such-ticket")
+            assert ei.value.code == "unknown_ticket"
+            with pytest.raises(GatewayError) as ei:
+                c.call("frobnicate")
+            assert ei.value.code == "unknown_op"
+    svc.stop()
+    store.close()
+
+
+def test_gateway_frame_limits_and_bad_frames(tmp_path, tok):
+    store = _store(tmp_path, tok)
+    svc = _service(store, ingest_async=False)
+    with start_in_thread(svc, frame_max=1024) as h:
+        # oversized frame: error response, then the connection closes
+        with GatewayClient("127.0.0.1", h.port) as c:
+            resp = c.request("ping", junk="x" * 4096)
+            assert resp["error"] == "frame_too_large"
+            with pytest.raises(ConnectionError):
+                c.request("ping")
+        # non-JSON payload: bad_frame, then close
+        sock = socket.create_connection(("127.0.0.1", h.port), timeout=10)
+        try:
+            sock.sendall(struct.pack(">I", 4) + b"}{!x")
+            rf = sock.makefile("rb")
+            (length,) = struct.unpack(">I", rf.read(4))
+            assert json.loads(rf.read(length))["error"] == "bad_frame"
+            assert rf.read(4) == b""                      # closed
+        finally:
+            sock.close()
+    svc.stop()
+    store.close()
+
+
+def test_gateway_admission_reject(tmp_path, tok):
+    """With max_inflight=1, a request arriving while one executes is
+    rejected immediately — never queued behind it."""
+    store = _store(tmp_path, tok)
+    svc = _service(store, flush_interval_s=0.4, flush_batch=1024)
+    with start_in_thread(svc, max_inflight=1, conn_window=4) as h:
+        occupied = threading.Event()
+        done: list = []
+
+        def slow_put():
+            with GatewayClient("127.0.0.1", h.port) as c1:
+                occupied.set()
+                # blocks in ticket.wait until the 0.4s flush interval
+                done.append(c1.put_async(["slow " * 20], wait=True))
+
+        t = threading.Thread(target=slow_put)
+        t.start()
+        occupied.wait(5)
+        time.sleep(0.1)                       # let the put reach _execute
+        with GatewayClient("127.0.0.1", h.port) as c2:
+            with pytest.raises(GatewayError) as ei:
+                c2.ping()
+            assert ei.value.code == "admission_reject"
+            t.join(10)
+            assert done and done[0]["durable"]
+            assert c2.ping()["pong"] is True  # slot free again
+            st = c2.stats()
+            assert st["gateway"]["admission_rejects"] >= 1
+    svc.stop()
+    store.close()
+
+
+# -- store lease --------------------------------------------------------------
+
+
+def _flock_free(root) -> bool:
+    """True iff the lease flock is currently acquirable.  A fresh fd in
+    the SAME process conflicts with a held flock (locks attach to open
+    file descriptions), so this probes real kernel state."""
+    fcntl = pytest.importorskip("fcntl")
+    fd = os.open(str(lease_path(root)), os.O_RDWR)
+    try:
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            return False
+        fcntl.flock(fd, fcntl.LOCK_UN)
+        return True
+    finally:
+        os.close(fd)
+
+
+def test_lease_refcounted_within_process(tmp_path, tok):
+    root = tmp_path / "store"
+    s1 = _store(root, tok)
+    s1.put("lease probe " * 8)
+    # historical same-process reopen pattern still works: the second
+    # writable open shares the held lease instead of self-deadlocking
+    # on a second flock fd
+    s2 = _store(root, tok)
+    assert len(s2) == 1
+    s2.close()
+    # s1 still owns the root after s2's release (refcount, not drop)
+    assert lease_path(root).exists()
+    assert not _flock_free(root)
+    s1.close()
+    assert _flock_free(root)                  # last holder released
+
+
+def test_lease_cross_process_conflict(tmp_path, tok):
+    root = tmp_path / "store"
+    store = _store(root, tok)
+    probe = (
+        "import sys; sys.path.insert(0, {src!r})\n"
+        "from repro.core.lease import acquire_store_lease, StoreLeaseHeld\n"
+        "try:\n"
+        "    acquire_store_lease({root!r}, mode='try')\n"
+        "    print('ACQUIRED')\n"
+        "except StoreLeaseHeld:\n"
+        "    print('HELD')\n"
+    ).format(src=_SRC, root=str(root))
+    out = subprocess.run([sys.executable, "-c", probe],
+                         capture_output=True, text=True, timeout=60)
+    assert out.stdout.strip() == "HELD", out.stderr
+    store.close()
+    out = subprocess.run([sys.executable, "-c", probe],
+                         capture_output=True, text=True, timeout=60)
+    assert out.stdout.strip() == "ACQUIRED", out.stderr
+
+
+def test_lease_none_skips_ownership(tmp_path, tok):
+    store = _store(tmp_path / "s", tok, lease=None)
+    store.put("no lease " * 8)
+    assert not lease_path(tmp_path / "s").exists()
+    store.close()
+
+
+# -- read replicas ------------------------------------------------------------
+
+
+def test_replica_follows_writer(tmp_path, tok):
+    root = tmp_path / "store"
+    writer = _store(root, tok, n_shards=2)
+    texts = _texts(10, tag="rep")
+    keys = writer.put_many(texts[:6])
+    replica = _store(root, tok, readonly=True)
+    assert replica.readonly and not writer.readonly
+    assert replica.get_many(keys) == texts[:6]            # byte-identical
+    # mutators refuse
+    for call in (lambda: replica.put("nope"),
+                 lambda: replica.put_many(["nope"]),
+                 lambda: replica.rebalance(4),
+                 lambda: replica.swap_shard(0, [])):
+        with pytest.raises(RuntimeError, match="read-only replica"):
+            call()
+    with pytest.raises(RuntimeError, match="replicas"):
+        writer.refresh()
+    # new ingest becomes visible on refresh (no meta change needed)
+    keys += writer.put_many(texts[6:])
+    assert replica.refresh() is True
+    assert replica.get_many(keys) == texts
+    assert replica.refresh() is False                     # nothing new
+    # compaction generation swap (with dict sidecar training)
+    from repro.service.compaction import compact_store
+    compact_store(writer, reselect=True, train_dict=True)
+    assert replica.refresh() is True
+    assert replica._layout.gens == writer._layout.gens
+    assert replica.get_many(keys) == texts
+    # online rebalance: replica follows the layout change too
+    writer.rebalance(3)
+    assert replica.refresh() is True
+    assert replica.n_shards == 3
+    assert replica.get_many(keys) == texts
+    for a, b in zip(replica.get_tokens_many(keys),
+                    writer.get_tokens_many(keys)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    replica.close()
+    writer.close()
+
+
+def test_replica_requires_existing_store(tmp_path, tok):
+    with pytest.raises(ValueError, match="replica"):
+        _store(tmp_path / "nope", tok, readonly=True)
+
+
+def test_replica_gateway_rejects_writes(tmp_path, tok):
+    root = tmp_path / "store"
+    writer = _store(root, tok)
+    texts = _texts(4, tag="rgw")
+    keys = writer.put_many(texts)
+    replica = _store(root, tok, readonly=True)
+    rsvc = PromptService(replica, ingest_async=False).start()
+    with start_in_thread(rsvc, readonly=True) as h:
+        with GatewayClient("127.0.0.1", h.port) as c:
+            assert c.ping()["readonly"] is True
+            assert c.get_many(keys) == texts
+            for op, kw in (("put", {"texts": ["x"]}),
+                           ("put_async", {"texts": ["x"]}),
+                           ("wait", {"ticket": "1"})):
+                with pytest.raises(GatewayError) as ei:
+                    c.call(op, **kw)
+                assert ei.value.code == "read_only"
+            # refresh is the replica op; writer gateways refuse it
+            writer.put_many(_texts(2, tag="rgw2"))
+            assert c.refresh() is True
+            assert len(c.stats()["service"]["store"]) > 0
+    rsvc.stop()
+    replica.close()
+    writer.close()
+
+
+# -- crash: writer SIGKILL -> standby takeover --------------------------------
+
+
+def _spawn_gateway(root: Path, port_file: Path, *extra: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + (os.pathsep + env["PYTHONPATH"]
+                                if env.get("PYTHONPATH") else "")
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.gateway",
+         "--store-dir", str(root), "--port", "0",
+         "--port-file", str(port_file), *extra],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+
+
+def _wait_port(proc, port_file: Path, timeout=30.0) -> dict:
+    t0 = time.monotonic()
+    while not port_file.exists():
+        if proc.poll() is not None:
+            raise AssertionError(
+                f"gateway died at startup:\n{proc.stdout.read()}")
+        if time.monotonic() - t0 > timeout:
+            proc.kill()
+            raise AssertionError("gateway did not become ready")
+        time.sleep(0.05)
+    return json.loads(port_file.read_text())
+
+
+@pytest.mark.slow
+@pytest.mark.crash
+def test_writer_kill_standby_takeover(tmp_path, tok):
+    """SIGKILL the writer gateway mid-ingest: the kernel releases the
+    flock, the blocked standby acquires it and serves the store — with
+    every durably acknowledged text byte-identical."""
+    root = tmp_path / "store"
+    writer = _spawn_gateway(root, tmp_path / "w.json", "--shards", "2",
+                            "--flush-batch", "4")
+    try:
+        winfo = _wait_port(writer, tmp_path / "w.json")
+        texts = _texts(8, tag="kill")
+        with GatewayClient(winfo["host"], winfo["port"]) as c:
+            keys = c.put(texts)                   # synchronous: durable
+            # standby blocks on the lease while the writer is alive
+            standby = _spawn_gateway(root, tmp_path / "s.json",
+                                     "--role", "standby")
+            try:
+                time.sleep(1.0)
+                assert not (tmp_path / "s.json").exists(), \
+                    "standby must not serve while the writer holds the lease"
+                # mid-ingest kill: async tickets in flight, never waited
+                c.put_async(_texts(6, tag="doomed"))
+                os.kill(writer.pid, signal.SIGKILL)
+                writer.wait(timeout=10)
+                # the kernel released the flock with the process
+                sinfo = _wait_port(standby, tmp_path / "s.json")
+                assert sinfo["role"] == "standby"
+                with GatewayClient(sinfo["host"], sinfo["port"]) as c2:
+                    assert c2.ping()["readonly"] is False
+                    # every durably acknowledged text reopens byte-identical
+                    assert c2.get_many(keys) == texts
+                    # the takeover writer owns ingest now
+                    r = c2.put_async(["takeover " * 10], wait=True)
+                    assert c2.get(r["keys"][0]) == "takeover " * 10
+                standby.send_signal(signal.SIGTERM)
+                assert standby.wait(timeout=20) == 0
+            finally:
+                if standby.poll() is None:
+                    standby.kill()
+    finally:
+        if writer.poll() is None:
+            writer.kill()
+
+
+@pytest.mark.crash
+def test_lease_released_on_process_death(tmp_path, tok):
+    """The flock dies with the process: after SIGKILL, a fresh writable
+    open succeeds immediately and the store is intact."""
+    root = tmp_path / "store"
+    writer = _spawn_gateway(root, tmp_path / "w.json", "--build-corpus", "6")
+    winfo = _wait_port(writer, tmp_path / "w.json")
+    with GatewayClient(winfo["host"], winfo["port"]) as c:
+        keys = c.put(_texts(3, tag="lease"))
+        texts = c.get_many(keys)
+    os.kill(writer.pid, signal.SIGKILL)
+    writer.wait(timeout=10)
+    lease = acquire_store_lease(root, mode="wait", timeout_s=10)
+    lease.release()
+    reopened = _store(root, tok)
+    assert reopened.get_many(keys) == texts
+    assert reopened.verify_all()["failure"] == 0
+    reopened.close()
+
+
+# -- concurrency: backpressure under many clients -----------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.concurrency
+def test_gateway_concurrent_clients_backpressure(tmp_path, tok):
+    """Many client threads push through a small conn_window / max_pending
+    configuration (lock sanitizer on via the marker): every acknowledged
+    batch is durable and byte-identical, nothing is lost or doubled."""
+    store = _store(tmp_path, tok, n_shards=2)
+    svc = _service(store, flush_batch=8, max_pending=16)
+    n_clients, n_batches = 4, 6
+    errors: list = []
+    acked: dict = {}
+    lock = threading.Lock()
+    with start_in_thread(svc, max_inflight=8, conn_window=2) as h:
+
+        def client(ci: int) -> None:
+            try:
+                with GatewayClient("127.0.0.1", h.port) as c:
+                    for bi in range(n_batches):
+                        batch = _texts(4, tag=f"c{ci}b{bi}", rep=4)
+                        r = c.put_async(batch, wait=True, timeout=60)
+                        with lock:
+                            acked.update(zip(r["keys"], batch))
+            except Exception as e:  # noqa: BLE001 - collected for assert
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        assert not errors, errors
+        with GatewayClient("127.0.0.1", h.port) as c:
+            assert len(acked) == n_clients * n_batches * 4
+            keys = list(acked)
+            for i in range(0, len(keys), 16):
+                chunk = keys[i:i + 16]
+                assert c.get_many(chunk) == [acked[k] for k in chunk]
+            st = c.stats()
+            assert st["gateway"]["requests"] >= n_clients * n_batches
+    svc.stop()
+    store.close()
+    assert len(store) == len(acked)

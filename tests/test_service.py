@@ -11,8 +11,9 @@ import pytest
 
 from repro.core.api import PromptCompressor
 from repro.core.store import ShardedPromptStore, content_key
-from repro.service import (BackgroundCompactor, IngestQueue, PromptService,
-                           TokenCache, compact_shard, compact_store)
+from repro.service import (BackgroundCompactor, IngestError, IngestQueue,
+                           PromptService, TokenCache, compact_shard,
+                           compact_store)
 from repro.tokenizer.vocab import default_tokenizer
 
 
@@ -145,13 +146,35 @@ def test_ingest_error_propagates_and_queue_survives(tmp_path, tok):
     store = _store(tmp_path, tok)
     with IngestQueue(store, flush_batch=4) as q:
         bad = q.submit(["doomed " * 5], method="no-such-method")
-        with pytest.raises(ValueError, match="method"):
+        with pytest.raises(IngestError, match="method") as ei:
             bad.wait(20)
+        assert isinstance(ei.value.__cause__, ValueError)
         ok = q.submit(["fine " * 5])          # queue still alive after error
         ok.wait(20)
         assert ok.keys[0] in store
     with pytest.raises(RuntimeError, match="not running"):
         q.submit(["too late"])
+
+
+def test_ingest_error_distinct_instances_per_ticket(tmp_path, tok):
+    """Every ticket of a failed flush (and every wait() on one ticket)
+    raises a FRESH IngestError — concurrent waiters must never share one
+    exception object whose traceback they'd race to mutate.  The shared
+    part is the cause: one underlying flush error."""
+    store = _store(tmp_path, tok)
+    with IngestQueue(store, flush_batch=64,
+                     flush_interval_s=10.0) as q:
+        t1 = q.submit(["doomed a " * 5], method="no-such-method")
+        t2 = q.submit(["doomed b " * 5], method="no-such-method")
+        q.flush()                             # both land in ONE flush
+        errs = []
+        for t in (t1, t2, t1):                # third: re-wait same ticket
+            with pytest.raises(IngestError) as ei:
+                t.wait(20)
+            errs.append(ei.value)
+    assert errs[0] is not errs[1]
+    assert errs[0] is not errs[2]
+    assert errs[0].__cause__ is errs[1].__cause__  # one flush, one cause
 
 
 # -- compaction ---------------------------------------------------------------
@@ -364,6 +387,50 @@ def test_service_lifecycle_stop_idempotent(tmp_path, tok):
     svc.stop()                                # idempotent
     with pytest.raises(RuntimeError):
         svc.start()
+
+
+def test_service_no_zombie_restart_after_stop(tmp_path, tok):
+    """start()/__enter__/put_async after stop() must raise, not hand back
+    a service whose dispatcher and compactor threads are dead (work
+    submitted to that zombie would queue forever, undrained)."""
+    store = _store(tmp_path, tok)
+    svc = PromptService(store)
+    svc.start()
+    svc.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        svc.start()
+    with pytest.raises(RuntimeError, match="stopped"):
+        with svc:
+            pass                              # pragma: no cover
+    with pytest.raises(RuntimeError, match="stopped"):
+        svc.put_async(["too late " * 4])
+    # the sync-degrade path must refuse too: no queue, but the contract
+    # (stopped service accepts no writes) is the same
+    sync_svc = PromptService(store, ingest_async=False)
+    sync_svc.start()
+    sync_svc.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        sync_svc.put_async(["too late " * 4])
+
+
+def test_cache_serves_read_only_arrays(tmp_path, tok):
+    """Cached token arrays are shared across hits; a caller mutating one
+    must get a ValueError, and the cached entry must stay intact."""
+    store = _store(tmp_path, tok)
+    with PromptService(store, ingest_async=False) as svc:
+        key = svc.put("mutation probe " * 8)
+        arr = svc.get_tokens(key)             # miss: loads + caches
+        with pytest.raises(ValueError):
+            arr[0] = 999999
+        again = svc.get_tokens(key)           # hit: same shared array
+        assert again is arr
+        assert np.array_equal(np.asarray(store.get_tokens(key)), arr)
+    # direct TokenCache.put enforces the same freeze
+    cache = TokenCache(1 << 20)
+    src = np.arange(8, dtype=np.int64)
+    cache.put("k", src)
+    with pytest.raises(ValueError):
+        cache.get("k")[0] = 7
 
 
 # -- concurrency (slow tier) --------------------------------------------------
