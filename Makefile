@@ -16,10 +16,14 @@
 #   make obs-smoke   REPRO_OBS=0 codec overhead guard (scripts/obs_smoke.py)
 #   make gateway-smoke spawn a gateway subprocess, drive concurrent socket
 #                    clients, assert latency percentiles + SIGTERM drain
+#   make chaos       seeded chaos harness x5 seeds: live writer/standby/replica
+#                    fleet under fault injection + SIGKILL takeover; asserts
+#                    zero acked-write loss, quarantine + degraded reads, and
+#                    fault/retry counters in the obs snapshot (scripts/chaos.py)
 PY := PYTHONPATH=src python
 
 .PHONY: analyze quick crash test bench bench-codec bench-kernels obs-smoke \
-	gateway-smoke
+	gateway-smoke chaos
 
 analyze:
 	$(PY) -m repro.analysis src --baseline analysis-baseline.json
@@ -47,3 +51,6 @@ obs-smoke:
 
 gateway-smoke:
 	$(PY) scripts/gateway_smoke.py
+
+chaos:
+	for s in 0 1 2 3 4; do $(PY) scripts/chaos.py --seed $$s || exit 1; done

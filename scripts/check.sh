@@ -85,3 +85,11 @@ PYEOF
 # latency percentiles in the obs snapshot, a graceful SIGTERM drain
 # (exit 0), and an atomically published --stats-json that parses.
 python scripts/gateway_smoke.py
+
+# Chaos smoke (~30s, fixed seed): writer + standby + replica fleet under
+# a seeded fault schedule — one SIGKILL takeover, one injected fsync
+# fault, one injected shard corruption.  Asserts zero acked-write loss,
+# quarantine + degraded reads (never store-wide failure), and the
+# fault/retry/quarantine counters in the obs snapshots.  `make chaos`
+# runs the full harness across seeds 0-4.
+python scripts/chaos.py --smoke --seed 0

@@ -1,7 +1,8 @@
 """repro.analysis — AST-based invariant checker for this repo.
 
-Six rules, each enforcing an invariant the code's correctness argument
-already depends on (see ARCHITECTURE.md "Static analysis & invariants"):
+Eight rules, each enforcing an invariant the code's correctness
+argument already depends on (see ARCHITECTURE.md "Static analysis &
+invariants"):
 
 | id       | invariant                                                |
 |----------|----------------------------------------------------------|
@@ -11,6 +12,8 @@ already depends on (see ARCHITECTURE.md "Static analysis & invariants"):
 | REPRO004 | Pallas kernel fns stay pure (no host state / shapes)     |
 | REPRO005 | REPRO_* env reads go through repro.core.env              |
 | REPRO006 | codec-pool tasks never submit back into the pool         |
+| REPRO007 | obs metrics go through repro.obs helpers, names coherent |
+| REPRO008 | failpoints.fire() uses literal names declared in SITES   |
 
 Run as ``python -m repro.analysis src/`` (or ``make analyze``).  Waive
 a single false positive inline with ``# repro-analysis:

@@ -107,8 +107,8 @@ def all_rules() -> Dict[str, Callable[[], Rule]]:
     # rule modules register on import; pull them in here so the registry
     # is complete no matter which entry point asked
     from repro.analysis import (rules_durability, rules_env,  # noqa: F401
-                                rules_frozen, rules_kernels, rules_locks,
-                                rules_obs, rules_pool)
+                                rules_faults, rules_frozen, rules_kernels,
+                                rules_locks, rules_obs, rules_pool)
     return dict(_RULES)
 
 

@@ -1,0 +1,125 @@
+"""REPRO008 — failpoint-site hygiene for repro.core.failpoints.
+
+The fault-injection layer is only deterministic if the site catalog and
+the ``fire()`` call sites agree: a spec like
+``REPRO_FAULTS="store.replace=nth:2,crash"`` silently injects nothing
+if the name drifted from the code.  ``fire()`` validates at runtime,
+but only on paths that actually execute — this rule closes the gap
+statically:
+
+* **``fire()`` takes a string literal.**  A computed site name can't be
+  checked against the catalog here and can't be grepped by someone
+  writing a fault spec; the whole point of the registry is that
+  ``SITES`` in ``repro/core/failpoints.py`` is the complete, searchable
+  truth.
+* **The literal is a declared site.**  Unknown names would raise
+  ``RuntimeError`` at runtime — on the injection path, which by
+  definition only runs under fault testing; catch the typo before that.
+* **Every declared site is fired somewhere.**  A catalog entry with no
+  call site is dead: specs targeting it match-and-arm but never inject,
+  which reads as "the code survived the fault" when the fault never
+  happened.  (Cross-module, like the REPRO001 lock graph: assumes the
+  usual full-``src`` scan.)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.core import Finding, ParsedFile, Rule, register
+
+RULE_ID = "REPRO008"
+
+_FAILPOINTS_PATH = "src/repro/core/failpoints.py"
+
+
+def _sites_catalog(files: Sequence[ParsedFile]) -> Optional[Dict[str, int]]:
+    """Statically parse ``SITES`` (name -> declaration line) out of the
+    failpoints module; None when it is not in the scanned set."""
+    for f in files:
+        if f.path != _FAILPOINTS_PATH:
+            continue
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Assign):
+                targets = [t.id for t in node.targets
+                           if isinstance(t, ast.Name)]
+            elif isinstance(node, ast.AnnAssign) \
+                    and isinstance(node.target, ast.Name):
+                targets = [node.target.id]
+            else:
+                continue
+            if "SITES" not in targets or not isinstance(node.value, ast.Dict):
+                continue
+            sites: Dict[str, int] = {}
+            for key in node.value.keys:
+                if isinstance(key, ast.Constant) \
+                        and isinstance(key.value, str):
+                    sites[key.value] = key.lineno
+            return sites
+    return None
+
+
+def _fire_call(call: ast.Call, fire_names: Set[str]) -> bool:
+    """True if `call` is ``failpoints.fire(...)`` or a bare ``fire(...)``
+    bound by ``from repro.core.failpoints import fire``."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute) and fn.attr == "fire" \
+            and isinstance(fn.value, ast.Name) \
+            and fn.value.id == "failpoints":
+        return True
+    return isinstance(fn, ast.Name) and fn.id in fire_names
+
+
+def _fire_imports(tree: ast.Module) -> Set[str]:
+    """Local names ``fire`` is bound to by from-imports of the module."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) \
+                and node.module == "repro.core.failpoints":
+            for alias in node.names:
+                if alias.name == "fire":
+                    names.add(alias.asname or alias.name)
+    return names
+
+
+@register
+class FailpointSiteRule(Rule):
+    id = RULE_ID
+    title = "failpoints.fire() uses literal names declared in SITES"
+
+    def run(self, files: Sequence[ParsedFile]) -> List[Finding]:
+        findings: List[Finding] = []
+        sites = _sites_catalog(files)
+        fired: Set[str] = set()
+        for f in files:
+            if f.path == _FAILPOINTS_PATH:
+                continue  # fire() internals reference sites dynamically
+            fire_names = _fire_imports(f.tree)
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call) \
+                        or not _fire_call(node, fire_names):
+                    continue
+                arg = node.args[0] if node.args else None
+                if not (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)):
+                    findings.append(Finding(
+                        RULE_ID, f.path, node.lineno,
+                        "failpoints.fire() with a non-literal site name; "
+                        "use a string literal from SITES so fault specs "
+                        "stay greppable and statically checkable"))
+                    continue
+                fired.add(arg.value)
+                if sites is not None and arg.value not in sites:
+                    findings.append(Finding(
+                        RULE_ID, f.path, node.lineno,
+                        f"unknown failpoint site {arg.value!r}; declare "
+                        f"it in repro.core.failpoints.SITES"))
+        if sites is not None and fired:
+            for name in sorted(set(sites) - fired):
+                findings.append(Finding(
+                    RULE_ID, _FAILPOINTS_PATH, sites[name],
+                    f"failpoint site {name!r} is declared but never "
+                    f"fired; a spec targeting it arms but injects "
+                    f"nothing — remove the entry or add the fire() call"))
+        return findings

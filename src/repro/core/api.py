@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import packing
+from repro.core import failpoints, packing
 from repro.core.codec import PipelineCodec, TokenPackCodec, method_pipeline
 from repro.core.zstd_backend import (BACKENDS, DEFAULT_LEVEL, compress_bytes,
                                      decompress_bytes, decompress_bytes_dict)
@@ -329,6 +329,7 @@ class PromptCompressor:
         """Decode a batch of frames; frames are grouped by (method,
         backend, dict fingerprint) so each pipeline decodes its group in
         one batched pass."""
+        failpoints.fire("codec.decompress")
         infos = [parse_frame(b) for b in blobs]
         out: List[Optional[str]] = [None] * len(blobs)
         groups: Dict[tuple, List[int]] = {}
@@ -354,6 +355,7 @@ class PromptCompressor:
         tokens hands them to model input staging without a host round
         trip (the byte-stage undo stays on host; only the final unpack
         uploads)."""
+        failpoints.fire("codec.tokens")
         infos = [parse_frame(b) for b in blobs]
         out: List[Optional[np.ndarray]] = [None] * len(blobs)
         groups: Dict[tuple, List[int]] = {}

@@ -26,10 +26,12 @@ from pathlib import Path
 from typing import Union
 
 from repro import obs
+from repro.core import failpoints
 
 
 def fsync_file(f) -> None:
     """Flush a writable file object's buffers down to the platter."""
+    failpoints.fire("durability.fsync_file")
     t0 = time.perf_counter()
     f.flush()
     os.fsync(f.fileno())
@@ -37,7 +39,10 @@ def fsync_file(f) -> None:
 
 
 def fsync_dir(path: Union[str, Path]) -> None:
-    """Best-effort fsync of a directory (persists renames/creates in it)."""
+    """Best-effort fsync of a directory (persists renames/creates in it).
+    The failpoint fires *outside* the best-effort absorption below: real
+    directory-fsync errors are survivable, injected crashes are not."""
+    failpoints.fire("durability.fsync_dir")
     try:
         fd = os.open(str(path), os.O_RDONLY)
     except OSError:
@@ -52,7 +57,16 @@ def fsync_dir(path: Union[str, Path]) -> None:
 
 def write_durable(path: Union[str, Path], data: bytes) -> None:
     """Write ``data`` to ``path`` and fsync the file (not the parent —
-    publishers fsync the parent after their ``os.replace``)."""
+    publishers fsync the parent after their ``os.replace``).  This is
+    the cooperating torn-write site: a ``torn`` fault persists a prefix
+    of ``data`` before the crash propagates, so recovery code sees a
+    genuinely half-written file, not a clean absence."""
+    try:
+        failpoints.fire("durability.write_durable")
+    except failpoints.TornWrite as torn:
+        with open(path, "wb") as f:
+            f.write(data[:torn.keep(len(data))])
+        raise
     with open(path, "wb") as f:
         f.write(data)
         fsync_file(f)
@@ -67,5 +81,6 @@ def publish_durable(path: Union[str, Path], data: bytes) -> None:
     path = Path(path)
     tmp = path.with_name(path.name + ".tmp")
     write_durable(tmp, data)
+    failpoints.fire("durability.publish")
     os.replace(tmp, path)
     fsync_dir(path.parent)

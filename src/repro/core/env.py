@@ -228,3 +228,17 @@ declare("REPRO_GATEWAY_DRAIN_S", _parse_float_min0, 5.0,
 declare("REPRO_GATEWAY_REFRESH_S", _parse_float_min0, 0.5,
         "read-replica poll interval: how often a replica gateway "
         "re-checks store.json / shard indexes for writer publishes")
+declare("REPRO_FAULTS", _parse_str, "",
+        "fault-injection spec 'pattern=schedule,action[;...]' armed at "
+        "the named failpoint sites (repro.core.failpoints.SITES); "
+        "empty = nothing injected")
+declare("REPRO_FAULTS_SEED", _parse_int_min0, 0,
+        "seed for the per-rule RNG behind probabilistic (p:) fault "
+        "schedules; same seed + same hit order = same fault sequence")
+declare("REPRO_GATEWAY_RETRIES", _parse_int_min0, 4,
+        "GatewayClient retry budget per call(): total attempts for "
+        "retryable failures (connection loss, admission_reject, "
+        "timeout); 0 disables retries")
+declare("REPRO_GATEWAY_RETRY_BASE_S", _parse_float_min0, 0.05,
+        "GatewayClient backoff base: sleep base*2^attempt plus "
+        "seeded jitter between retries, capped at 2s")

@@ -1,0 +1,375 @@
+"""Deterministic fault injection: named failpoints at I/O boundaries.
+
+Every place the system touches the outside world — fsync, the
+``os.replace`` commit points, the gateway socket, lease acquisition,
+codec decode — calls :func:`fire` with a **registered site name** from
+:data:`SITES`.  With nothing armed, a fire is two dict lookups; with a
+rule armed (programmatically via :func:`arm` / :func:`injected`, or from
+the environment via ``REPRO_FAULTS``), the rule's seeded schedule
+decides whether this hit faults, and its action decides how:
+
+========== ==============================================================
+action     effect at the site
+========== ==============================================================
+``crash``   raise :class:`FailpointCrash` (a ``BaseException``, so
+            blanket ``except Exception`` recovery code cannot swallow a
+            simulated process death — the crash-injection suites assert
+            on-disk state afterwards)
+``torn``    raise :class:`TornWrite`; the *cooperating* site
+            (``durability.write_durable``) first writes a prefix of the
+            payload, simulating a power cut mid-write
+``error``   raise :class:`FailpointError` (a ``ConnectionError`` →
+            ``OSError``), indistinguishable from a real I/O failure to
+            retry/recovery paths — this is the one they must handle
+``latency`` sleep for the configured seconds (slow-disk / slow-network)
+``count``   never faults; just counts hits — how the crash suites
+            enumerate fault points before crashing at each one
+========== ==============================================================
+
+Schedules are deterministic given a seed and the hit order: ``nth:N``
+fires exactly once on the Nth matching hit (1-based), ``p:F`` draws from
+a per-rule ``random.Random`` seeded from ``REPRO_FAULTS_SEED`` (or the
+``seed=`` argument), ``always`` fires every hit.
+
+The spec grammar (one rule per ``;``)::
+
+    REPRO_FAULTS="durability.fsync_file=nth:3,crash;gateway.send=p:0.05,error"
+
+A pattern is an ``fnmatch`` glob, optionally ``|``-alternated
+(``durability.*|store.replace``); alternation shares ONE hit counter
+across all matched sites, which is how a single rule reproduces the old
+combined fsync+replace fault counter of ``tests/test_crash_injection``.
+
+The site catalog is an *auditable registry*: :func:`fire` rejects names
+not in :data:`SITES`, patterns that match no site are rejected at arm
+time, and the static checker (``repro.analysis`` rule REPRO008) verifies
+every ``fire()`` call site in the tree uses a literal, registered name —
+so :data:`SITES` is always the complete inventory of injection points.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import random
+import threading
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.core import env
+from repro.core.locks import make_lock
+
+# ---------------------------------------------------------------------------
+# The site catalog.  Literal dict so repro.analysis REPRO008 can read it
+# statically; fire() enforces membership at runtime.
+# ---------------------------------------------------------------------------
+
+SITES: Dict[str, str] = {
+    "durability.fsync_file": "file fsync in durability.fsync_file",
+    "durability.fsync_dir": "directory fsync in durability.fsync_dir",
+    "durability.write_durable": "payload write in durability.write_durable "
+                                "(the torn-write site)",
+    "durability.publish": "os.replace commit in durability.publish_durable",
+    "store.replace": "an os.replace commit point in core.store (meta, "
+                     "index, generation and sidecar publishes)",
+    "checkpoint.replace": "os.replace commit in dist.checkpoint save",
+    "lease.acquire": "flock acquisition in core.lease.acquire_store_lease",
+    "gateway.send": "GatewayClient frame send on the client socket",
+    "gateway.recv": "GatewayClient response read on the client socket",
+    "codec.decompress": "blob decode entry in core.api decompress_batch",
+    "codec.tokens": "token decode entry in core.api tokens_batch",
+}
+
+
+class FailpointCrash(BaseException):
+    """Simulated process death at a failpoint.
+
+    Deliberately a ``BaseException`` (like ``KeyboardInterrupt``): crash
+    tests assert that *on-disk* state recovers, so no library-level
+    ``except Exception`` may swallow the simulated crash in flight.
+    """
+
+
+class TornWrite(FailpointCrash):
+    """Crash mid-write: the cooperating site persists ``keep(len))``
+    bytes of the payload before re-raising — a torn file, not a clean
+    old-or-new one."""
+
+    def __init__(self, site: str, hit: int, frac: float = 0.5):
+        super().__init__(
+            f"injected torn write at failpoint {site!r} "
+            f"(hit #{hit}, keeping {frac:.0%} of the payload)")
+        self.site = site
+        self.frac = frac
+
+    def keep(self, n_bytes: int) -> int:
+        """How many payload bytes survive the simulated power cut."""
+        return max(0, min(n_bytes - 1, int(n_bytes * self.frac)))
+
+
+class FailpointError(ConnectionError):
+    """Injected *recoverable* I/O failure.  A ``ConnectionError`` (and
+    therefore an ``OSError``): retry and degradation paths must treat it
+    exactly like the real thing."""
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+_SCHEDULES = ("nth", "p", "always")
+_ACTIONS = ("crash", "torn", "error", "latency", "count")
+
+
+def _parse_schedule(raw: str) -> Tuple:
+    if raw == "always":
+        return ("always",)
+    kind, sep, arg = raw.partition(":")
+    if kind == "nth" and sep:
+        n = int(arg)
+        if n < 1:
+            raise ValueError(f"nth schedule is 1-based, got nth:{n}")
+        return ("nth", n)
+    if kind == "p" and sep:
+        p = float(arg)
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"probability must be in [0, 1], got p:{p}")
+        return ("p", p)
+    raise ValueError(
+        f"unknown failpoint schedule {raw!r} "
+        f"(expected nth:N, p:F, or always)")
+
+
+def _parse_action(raw: str) -> Tuple:
+    kind, sep, arg = raw.partition(":")
+    if kind in ("crash", "error", "count"):
+        if sep:
+            raise ValueError(f"action {kind!r} takes no argument, got {raw!r}")
+        return (kind,)
+    if kind == "torn":
+        frac = float(arg) if sep else 0.5
+        if not 0.0 <= frac < 1.0:
+            raise ValueError(f"torn fraction must be in [0, 1), got {raw!r}")
+        return ("torn", frac)
+    if kind == "latency" and sep:
+        s = float(arg)
+        if s < 0:
+            raise ValueError(f"latency seconds must be >= 0, got {raw!r}")
+        return ("latency", s)
+    raise ValueError(
+        f"unknown failpoint action {raw!r} "
+        f"(expected crash, torn[:frac], error, latency:S, or count)")
+
+
+def _validate_pattern(pattern: str) -> None:
+    for part in pattern.split("|"):
+        if not part:
+            raise ValueError(f"empty alternation in pattern {pattern!r}")
+        if any(ch in part for ch in "*?["):
+            if not any(fnmatch.fnmatchcase(s, part) for s in SITES):
+                raise ValueError(
+                    f"failpoint pattern {part!r} matches no registered "
+                    f"site (known: {sorted(SITES)})")
+        elif part not in SITES:
+            raise ValueError(
+                f"unregistered failpoint site {part!r} in pattern "
+                f"(known: {sorted(SITES)})")
+
+
+class FaultRule:
+    """One armed rule: pattern + seeded schedule + action, with a hit
+    counter shared across every site the pattern matches."""
+
+    def __init__(self, pattern: str, schedule: str, action: str, *,
+                 seed: int = 0, index: int = 0):
+        _validate_pattern(pattern)
+        self.pattern = pattern
+        self.schedule = _parse_schedule(schedule)
+        self.action = _parse_action(action)
+        # Distinct deterministic stream per (seed, rule index): two p:
+        # rules armed from one spec don't mirror each other's draws.
+        self._rng = random.Random((seed * 1_000_003 + index) ^ 0x5EED)
+        self._parts = pattern.split("|")
+        self.hits = 0
+        self.fired = 0
+
+    def matches(self, site: str) -> bool:
+        return any(fnmatch.fnmatchcase(site, p) for p in self._parts)
+
+    def _should_fire(self) -> bool:
+        """Called with the registry lock held, after ``hits`` was bumped
+        for the current matching hit."""
+        kind = self.schedule[0]
+        if kind == "always":
+            return True
+        if kind == "nth":
+            return self.hits == self.schedule[1]
+        return self._rng.random() < self.schedule[1]
+
+    def describe(self) -> Dict[str, Any]:
+        return {"pattern": self.pattern,
+                "schedule": ":".join(str(x) for x in self.schedule),
+                "action": ":".join(str(x) for x in self.action),
+                "hits": self.hits, "fired": self.fired}
+
+    def __repr__(self) -> str:
+        return f"<FaultRule {self.describe()!r}>"
+
+
+def parse_spec(spec: str, *, seed: int = 0) -> List[FaultRule]:
+    """Parse ``pattern=schedule,action[;...]`` into rules (unarmed)."""
+    rules: List[FaultRule] = []
+    for i, clause in enumerate(c.strip() for c in spec.split(";")):
+        if not clause:
+            continue
+        pattern, sep, rest = clause.partition("=")
+        schedule, sep2, action = rest.partition(",")
+        if not sep or not sep2:
+            raise ValueError(
+                f"bad failpoint clause {clause!r} "
+                f"(expected pattern=schedule,action)")
+        rules.append(FaultRule(pattern.strip(), schedule.strip(),
+                               action.strip(), seed=seed, index=i))
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# The armed-rule registry
+# ---------------------------------------------------------------------------
+
+_LOCK = make_lock("faults")
+_manual: List[FaultRule] = []
+_env_rules: List[FaultRule] = []
+_env_raw: Optional[str] = None   # REPRO_FAULTS value the env rules came from
+_active: List[FaultRule] = []    # _manual + _env_rules, rebuilt on change
+
+
+def _rebuild() -> None:
+    global _active
+    _active = _manual + _env_rules
+
+
+def _sync_env() -> None:
+    """Re-arm the env-sourced rules whenever ``REPRO_FAULTS`` changes.
+    A malformed spec raises on every fire — loud by design: silently
+    running a chaos schedule with zero faults armed would pass every
+    assertion for the wrong reason."""
+    global _env_raw, _env_rules
+    raw = env.read("REPRO_FAULTS")
+    if raw == _env_raw:
+        return
+    with _LOCK:
+        raw = env.read("REPRO_FAULTS")
+        if raw == _env_raw:
+            return
+        seed = env.read("REPRO_FAULTS_SEED")
+        _env_rules = parse_spec(raw, seed=seed) if raw else []
+        _env_raw = raw
+        _rebuild()
+
+
+def fire(site: str) -> None:
+    """Hit the named failpoint.  No-op unless an armed rule matches and
+    its schedule elects this hit; then the rule's action applies (see
+    module docstring).  Unregistered names raise ``RuntimeError`` even
+    when nothing is armed — the catalog stays honest."""
+    if site not in SITES:
+        raise RuntimeError(
+            f"unregistered failpoint site {site!r}; add it to "
+            f"repro.core.failpoints.SITES (known: {sorted(SITES)})")
+    _sync_env()
+    if not _active:
+        return
+    to_apply: List[FaultRule] = []
+    with _LOCK:
+        for rule in _active:
+            if rule.matches(site):
+                rule.hits += 1
+                if rule._should_fire():
+                    rule.fired += 1
+                    to_apply.append(rule)
+    for rule in to_apply:
+        _apply(site, rule)
+
+
+def _apply(site: str, rule: FaultRule) -> None:
+    kind = rule.action[0]
+    if kind == "count":
+        return
+    from repro import obs
+
+    obs.counter("faults.fired", site=site, action=kind).inc()
+    if kind == "latency":
+        time.sleep(rule.action[1])
+        return
+    if kind == "torn":
+        raise TornWrite(site, rule.hits, frac=rule.action[1])
+    if kind == "error":
+        raise FailpointError(
+            f"injected I/O error at failpoint {site!r} (hit #{rule.hits})")
+    raise FailpointCrash(
+        f"injected crash at failpoint {site!r} (hit #{rule.hits})")
+
+
+def arm(pattern: str, schedule: str, action: str, *,
+        seed: int = 0) -> FaultRule:
+    """Arm one rule programmatically; returns it (see :func:`disarm`)."""
+    with _LOCK:
+        rule = FaultRule(pattern, schedule, action,
+                         seed=seed, index=len(_manual))
+        _manual.append(rule)
+        _rebuild()
+    return rule
+
+
+def arm_spec(spec: str, *, seed: int = 0) -> List[FaultRule]:
+    """Arm every rule in a ``REPRO_FAULTS``-grammar spec string."""
+    rules = parse_spec(spec, seed=seed)
+    with _LOCK:
+        _manual.extend(rules)
+        _rebuild()
+    return rules
+
+
+def disarm(rule: FaultRule) -> None:
+    with _LOCK:
+        if rule in _manual:
+            _manual.remove(rule)
+            _rebuild()
+
+
+def disarm_all() -> None:
+    """Drop every programmatically armed rule (env rules re-sync from
+    ``REPRO_FAULTS`` on the next fire)."""
+    with _LOCK:
+        _manual.clear()
+        _rebuild()
+
+
+@contextmanager
+def injected(spec: str, *, seed: int = 0) -> Iterator[List[FaultRule]]:
+    """``with injected("site=nth:2,crash"): ...`` — armed for the body,
+    disarmed on exit even when the injected fault propagates."""
+    rules = arm_spec(spec, seed=seed)
+    try:
+        yield rules
+    finally:
+        with _LOCK:
+            for rule in rules:
+                if rule in _manual:
+                    _manual.remove(rule)
+            _rebuild()
+
+
+def active() -> List[FaultRule]:
+    """Snapshot of every armed rule (manual + env)."""
+    _sync_env()
+    with _LOCK:
+        return list(_active)
+
+
+def stats() -> Dict[str, Any]:
+    """Hit/fire counters per armed rule, for stats endpoints and tests."""
+    with _LOCK:
+        return {"n_rules": len(_active),
+                "rules": [r.describe() for r in _active]}

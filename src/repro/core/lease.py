@@ -38,6 +38,8 @@ try:
 except ImportError:  # pragma: no cover - non-POSIX hosts
     fcntl = None  # type: ignore[assignment]
 
+from repro.core import failpoints
+
 LEASE_NAME = "store.lease"
 
 #: how often a "wait"-mode acquire re-polls the lock (non-blocking
@@ -135,6 +137,7 @@ def acquire_store_lease(root: Union[str, Path], mode: str = "try",
     """
     if mode not in ("try", "wait"):
         raise ValueError(f"lease mode must be 'try' or 'wait', got {mode!r}")
+    failpoints.fire("lease.acquire")
     path = lease_path(root)
     key = os.path.realpath(str(path))
     deadline = (time.monotonic() + timeout_s) if timeout_s is not None else None

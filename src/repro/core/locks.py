@@ -44,6 +44,12 @@ RANKS: Dict[str, int] = {
     "shard": 20,
     "index": 30,
     "meta": 40,
+    # Near-leaf: the failpoint rule registry (repro.core.failpoints).
+    # fire() runs inside arbitrary critical sections (an fsync under the
+    # shard lock, a meta publish under the meta lock), so its lock must
+    # out-rank every store lock; it stays below obs because _apply
+    # records a metric, and obs never calls back into failpoints.
+    "faults": 90,
     # Leaf rank: repro.obs instrument/registry/journal locks.  Metrics
     # are recorded from inside every other critical section (a shard
     # append observes its fsync latency while the shard lock is held),

@@ -85,6 +85,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import obs
+from repro.core import failpoints
 from repro.core.api import PromptCompressor, parse_frame
 from repro.core.durability import fsync_dir, fsync_file, write_durable
 from repro.core.lease import acquire_store_lease
@@ -145,6 +146,27 @@ def content_key(text: str) -> str:
     without compressing, which is how ingest tickets know their keys at
     submit time."""
     return _sha(text)
+
+
+class ShardQuarantined(RuntimeError):
+    """Degraded-read refusal: the requested key failed the scrubber's
+    integrity sweep and its shard is quarantined.  Every *healthy* key —
+    in this shard and every other — keeps serving; only the provably
+    corrupt records refuse, each raise naming the full casualty list so
+    operators can repair or resync (``repro.service.scrub``) instead of
+    discovering losses one read at a time."""
+
+    def __init__(self, shard_id: int, key: str, reason: str,
+                 bad_keys: Sequence[str]):
+        self.shard_id = shard_id
+        self.key = key
+        self.reason = reason
+        self.bad_keys = tuple(sorted(bad_keys))
+        super().__init__(
+            f"key {key} is quarantined in shard {shard_id} "
+            f"({reason or 'integrity failure'}); {len(self.bad_keys)} "
+            f"key(s) affected — healthy shards still serve; run repair "
+            f"or resync from a replica root")
 
 
 class _Shard:
@@ -271,6 +293,12 @@ class ShardedPromptStore:
             # as "sweep" so a reopen can finish the job — by-name intent
             # beats guessing whether an old gen-0 file is ours or a backup
             self._pending_sweep: List[str] = []
+            # scrubber-declared casualties (guarded by `_index_lock`):
+            # key -> shard id it was quarantined in, and shard id ->
+            # reason.  In-memory only: a reopen re-verifies from scratch
+            # rather than trusting a stale casualty list.
+            self._bad_keys: Dict[str, int] = {}
+            self._quar_shards: Dict[int, str] = {}
             n, gens, dict_shas = self._resolve_layout(n_shards)
             shards = [_Shard(*self._shard_paths(i, gens[i], n))
                       for i in range(n)]
@@ -294,6 +322,12 @@ class ShardedPromptStore:
     @property
     def readonly(self) -> bool:
         return self._readonly
+
+    @property
+    def meta_generation(self) -> int:
+        """Monotonic meta-commit counter (bumps on every ``store.json``
+        publish).  Replica staleness = writer gen − replica gen."""
+        return self._meta_gen
 
     def close(self) -> None:
         """Release the writer lease (if held).  Reads/writes through a
@@ -341,8 +375,11 @@ class ShardedPromptStore:
             if len(dicts) != n:
                 raise ValueError(f"corrupt store meta: {len(dicts)} dicts for {n} shards")
             self._pending_sweep = [str(s) for s in meta.get("sweep", [])]
+            # pre-meta_gen stores read as generation 0; every commit bumps
+            self._meta_gen = int(meta.get("meta_gen", 0))
             return n, gens, dicts
         if (self.root / "data.bin").exists():
+            self._meta_gen = 0
             return 1, [0], [None]  # legacy single-file store, predates store.json
         if self._readonly:  # raced the writer's first meta publish
             raise ValueError(
@@ -351,9 +388,12 @@ class ShardedPromptStore:
         n = self.DEFAULT_SHARDS if requested is None else int(requested)
         if n < 1:
             raise ValueError("n_shards must be >= 1")
-        doc = {"version": 1, "n_shards": n, "gens": [0] * n}
+        self._meta_gen = 1
+        doc = {"version": 1, "n_shards": n, "gens": [0] * n,
+               "meta_gen": self._meta_gen}
         tmp = self.root / (".{}.tmp".format(_META_NAME))
         write_durable(tmp, (json.dumps(doc) + "\n").encode())
+        failpoints.fire("store.replace")
         os.replace(tmp, meta_path)
         fsync_dir(self.root)
         return n, [0] * n, [None] * n
@@ -366,8 +406,11 @@ class ShardedPromptStore:
         # repro-analysis: disable=REPRO001 the meta lock exists to serialize exactly this publish; only swap/rebalance commit points take it, readers never do
         with self._meta_lock:
             lay = self._layout
+            # monotonic commit counter: bumped on every meta publish, so
+            # replica staleness is measurable as writer_gen - replica_gen
+            self._meta_gen += 1
             doc = {"version": 1, "n_shards": lay.n_shards,
-                   "gens": list(lay.gens)}
+                   "gens": list(lay.gens), "meta_gen": self._meta_gen}
             if any(lay.dict_shas):
                 doc["dicts"] = list(lay.dict_shas)
             if self._pending_sweep:
@@ -376,10 +419,12 @@ class ShardedPromptStore:
             with open(tmp, "w") as f:
                 f.write(json.dumps(doc) + "\n")
                 fsync_file(f)
+            failpoints.fire("store.replace")
             os.replace(tmp, self.root / _META_NAME)
             # directory fsync persists the rename AND the same-dir create
             # of any new-generation shard files this commit points at
             fsync_dir(self.root)
+            obs.gauge("store.meta_gen").set(float(self._meta_gen))
 
     def _shard_paths(self, i: int, gen: int,
                      n_shards: Optional[int] = None) -> Tuple[Path, Path]:
@@ -563,6 +608,7 @@ class ShardedPromptStore:
             # mid-reload we re-detect the change next poll (conservative)
             self._disk_sig = sig
             obs.counter("store.replica.refresh").inc()
+            obs.gauge("store.meta_gen").set(float(self._meta_gen))
             return True
 
     def _reload_locked(self) -> None:
@@ -731,6 +777,7 @@ class ShardedPromptStore:
         # mean the writer moved on since the last poll: reload from disk
         # and retry (bounded), outside the shard lock — `refresh` takes
         # the rebalance-ranked lock, which must precede shard locks.
+        self._check_quarantine(key)
         refreshes = 0
         while True:
             lay = self._layout
@@ -783,6 +830,75 @@ class ShardedPromptStore:
         keys = self.keys()
         for i in range(0, len(keys), _ITER_BATCH):
             yield from self.get_tokens_many(keys[i:i + _ITER_BATCH])
+
+    # -- quarantine (used by repro.service.scrub) ------------------------------
+
+    def _check_quarantine(self, key: str) -> None:
+        with self._index_lock:
+            sid = self._bad_keys.get(key)
+            if sid is None:
+                return
+            reason = self._quar_shards.get(sid, "integrity failure")
+            casualties = [k for k, s in self._bad_keys.items() if s == sid]
+        obs.counter("store.degraded_read").inc()
+        raise ShardQuarantined(sid, key, reason, casualties)
+
+    def quarantine_shard(self, shard_id: int, bad_keys: Sequence[str],
+                         reason: str = "") -> None:
+        """Declare `bad_keys` in `shard_id` corrupt: reads of those keys
+        raise :class:`ShardQuarantined` (every other key keeps serving —
+        the degraded-read contract) and the compactor skips the shard so
+        the corrupt generation survives as forensics until repair.
+        Idempotent; repeated calls merge casualty lists."""
+        with self._index_lock:
+            for key in bad_keys:
+                self._bad_keys[key] = shard_id
+            if reason or shard_id not in self._quar_shards:
+                self._quar_shards[shard_id] = reason or "integrity failure"
+            n = len(self._quar_shards)
+        obs.counter("store.quarantine").inc()
+        obs.gauge("store.quarantined_shards").set(float(n))
+
+    def clear_quarantine(self, shard_id: int) -> List[str]:
+        """Lift `shard_id`'s quarantine (repair committed a rebuilt
+        generation).  Returns the keys that were held."""
+        with self._index_lock:
+            held = [k for k, s in self._bad_keys.items() if s == shard_id]
+            for k in held:
+                del self._bad_keys[k]
+            self._quar_shards.pop(shard_id, None)
+            n = len(self._quar_shards)
+        obs.gauge("store.quarantined_shards").set(float(n))
+        return held
+
+    def is_quarantined(self, shard_id: int) -> bool:
+        with self._index_lock:
+            return shard_id in self._quar_shards
+
+    def quarantined(self) -> Dict[int, dict]:
+        """{shard_id: {"reason", "bad_keys"}} snapshot for stats/repair."""
+        with self._index_lock:
+            out: Dict[int, dict] = {
+                sid: {"reason": reason, "bad_keys": []}
+                for sid, reason in self._quar_shards.items()}
+            for key, sid in self._bad_keys.items():
+                out[sid]["bad_keys"].append(key)
+        for doc in out.values():
+            doc["bad_keys"].sort()
+        return out
+
+    def drop_keys(self, keys: Sequence[str]) -> int:
+        """Remove `keys` from the in-memory index (repair's last resort
+        for unrecoverable records: the loss becomes an honest KeyError
+        instead of a quarantine held forever).  The on-disk index drops
+        them at the repair's `swap_shard` commit."""
+        self._assert_writable("drop_keys")
+        dropped = 0
+        with self._index_lock:
+            for key in keys:
+                if self._index.pop(key, None) is not None:
+                    dropped += 1
+        return dropped
 
     # -- compaction hooks (used by repro.service.compaction) ------------------
 
@@ -1149,6 +1265,8 @@ class ShardedPromptStore:
         lay = self._layout
         with self._index_lock:
             recs = list(self._index.values())
+            quar_shards = sorted(self._quar_shards)
+            quar_keys = len(self._bad_keys)
         stored = sum(r["length"] for r in recs)
         original = sum(r["n_chars"] for r in recs)
         per_shard = [0] * lay.n_shards
@@ -1177,6 +1295,11 @@ class ShardedPromptStore:
             "dead_bytes": max(file_bytes - stored, 0),
             "gens": list(lay.gens),
             "dicts": sum(1 for s in lay.dict_shas if s),
+            # commit counter + casualty list: staleness is writer meta_gen
+            # minus replica meta_gen; quarantine is the degraded-read set
+            "meta_gen": self._meta_gen,
+            "quarantined_shards": quar_shards,
+            "quarantined_keys": quar_keys,
         }
 
     def verify_all(self) -> dict:

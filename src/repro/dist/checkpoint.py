@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import failpoints
 from repro.core.durability import fsync_dir, write_durable
 from repro.dist._util import path_names
 
@@ -131,6 +132,7 @@ def save_checkpoint(
 
     if final.exists():
         shutil.rmtree(final)
+    failpoints.fire("checkpoint.replace")
     os.replace(tmp, final)
     fsync_dir(root)
 

@@ -73,6 +73,10 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--compact-interval", type=float, default=0.0,
                     help="background compaction scan interval in seconds "
                          "(0 = no background compactor)")
+    ap.add_argument("--scrub-interval", type=float, default=0.0,
+                    help="background integrity-scrub interval in seconds "
+                         "(0 = no scrubber); failing shards are "
+                         "quarantined, reads degrade per key")
     ap.add_argument("--max-inflight", type=int, default=None,
                     help="admission cap (default REPRO_GATEWAY_MAX_INFLIGHT)")
     ap.add_argument("--conn-window", type=int, default=None,
@@ -98,7 +102,8 @@ def parse_args(argv=None) -> argparse.Namespace:
     if args.build_corpus and args.role != "writer":
         ap.error("--build-corpus is writer-only: replicas and standbys "
                  "never mutate the store")
-    for name in ("stats_interval", "cache_mb", "compact_interval"):
+    for name in ("stats_interval", "cache_mb", "compact_interval",
+                 "scrub_interval"):
         if getattr(args, name) < 0:
             ap.error(f"--{name.replace('_', '-')} must be >= 0")
     return args
@@ -180,7 +185,15 @@ def main(argv=None) -> None:
         max_pending=args.max_pending,
         compact_interval_s=(args.compact_interval or None
                             if not readonly else None),
+        scrub_interval_s=(args.scrub_interval or None
+                          if not readonly else None),
     )
+    if env.read("REPRO_FAULTS"):
+        # deterministic chaos: say so in the log, loudly, so a fault spec
+        # leaking into a real deployment is visible at startup
+        print(f"[gateway] FAULT INJECTION ARMED: "
+              f"REPRO_FAULTS={env.read('REPRO_FAULTS')!r} "
+              f"seed={env.read('REPRO_FAULTS_SEED')}", flush=True)
     refresh_s = (env.read("REPRO_GATEWAY_REFRESH_S")
                  if args.refresh_s is None else args.refresh_s)
     refresher = (_start_replica_refresher(store, refresh_s)

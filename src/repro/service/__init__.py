@@ -2,25 +2,36 @@
 
 Turns the passive store library into a long-running service: async
 ingest with group commit (`ingest`), background per-shard compaction
-with codec stage reselection (`compaction`), a byte-budgeted serve-path
-token cache (`cache`), and the composed lifecycle (`service`).
-See ARCHITECTURE.md "Service tier".
+with codec stage reselection (`compaction`), background integrity
+scrubbing with quarantine + repair (`scrub`), a byte-budgeted
+serve-path token cache (`cache`), and the composed lifecycle
+(`service`).  See ARCHITECTURE.md "Service tier" and "Fault tolerance".
 """
 
 from repro.service.cache import TokenCache
 from repro.service.compaction import (BackgroundCompactor, CompactionResult,
                                       compact_shard, compact_store)
 from repro.service.ingest import IngestError, IngestQueue, IngestTicket
+from repro.service.scrub import (BackgroundScrubber, RepairResult,
+                                 ScrubResult, repair_shard, repair_store,
+                                 scrub_shard, scrub_store)
 from repro.service.service import PromptService
 
 __all__ = [
     "BackgroundCompactor",
+    "BackgroundScrubber",
     "CompactionResult",
     "IngestError",
     "IngestQueue",
     "IngestTicket",
     "PromptService",
+    "RepairResult",
+    "ScrubResult",
     "TokenCache",
     "compact_shard",
     "compact_store",
+    "repair_shard",
+    "repair_store",
+    "scrub_shard",
+    "scrub_store",
 ]

@@ -147,6 +147,12 @@ def compact_shard(store: ShardedPromptStore, shard_id: int,
     4. `swap_shard` — catch-up + new generation (+ dict sidecar) + atomic
        meta commit.
     """
+    if store.is_quarantined(shard_id):
+        # the scrubber owns this shard now: rewriting generations would
+        # launder the corrupt blobs it preserved as forensics — repair
+        # (repro.service.scrub) lifts the quarantine, then compaction
+        # resumes
+        return None
     try:
         lock = store.compaction_lock(shard_id)
     except IndexError:  # raced a shrinking rebalance

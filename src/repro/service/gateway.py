@@ -10,7 +10,18 @@ protocol over TCP:
     request : {"op": <op>, "id": <any>, ...op fields}
     response: {"id": <echoed>, "ok": true, ...result}
             | {"id": <echoed>, "ok": false, "error": <code>,
-               "message": <human text>}
+               "message": <human text>, "retryable": <bool>}
+
+Every error response carries a ``retryable`` verdict — the server-side
+retry taxonomy (ARCHITECTURE.md "Fault tolerance").  Transient rejects
+(``admission_reject``, ``timeout``, ``draining``) are safe to retry
+because every op is idempotent (puts are content-addressed; ``wait``
+re-attaches to its server-side ticket across reconnects); contract
+violations (``bad_frame``, ``unknown_op``, ``read_only``, ``not_found``,
+``shard_quarantined``, ...) will fail identically forever and must not
+be retried.  ``GatewayClient`` obeys the verdict with seeded
+exponential backoff (``REPRO_GATEWAY_RETRIES`` /
+``REPRO_GATEWAY_RETRY_BASE_S``) and transparent reconnects.
 
 Ops: ``ping``, ``put`` (synchronous durable put_many), ``put_async``
 (queue + ticket; ``wait: true`` blocks until durable), ``wait`` (redeem
@@ -49,10 +60,12 @@ from __future__ import annotations
 import asyncio
 import itertools
 import json
+import random
 import signal
 import socket
 import struct
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence
@@ -60,7 +73,8 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro import obs
-from repro.core import env
+from repro.core import env, failpoints
+from repro.core.store import ShardQuarantined
 from repro.service.service import PromptService
 
 _HDR = struct.Struct(">I")
@@ -75,18 +89,47 @@ _WRITE_OPS = frozenset({"put", "put_async", "wait"})
 _OPS = frozenset({"ping", "put", "put_async", "wait", "get", "get_tokens",
                   "stats", "refresh"})
 
+#: error codes a client may retry: the condition is transient AND every
+#: op is idempotent (content-addressed puts; ticket-keyed wait).  All
+#: other codes are contract violations that retry identically forever.
+_RETRYABLE = frozenset({"admission_reject", "timeout", "draining"})
+
 
 class GatewayError(RuntimeError):
-    """A gateway request failed; ``code`` is the protocol error code."""
+    """A gateway request failed; ``code`` is the protocol error code and
+    ``retryable`` the server's taxonomy verdict for it."""
 
-    def __init__(self, message: str, code: str = "error") -> None:
+    def __init__(self, message: str, code: str = "error",
+                 retryable: bool = False) -> None:
         super().__init__(message)
         self.code = code
+        self.retryable = bool(retryable)
+
+
+class GatewayConnectionLost(ConnectionError):
+    """The gateway connection died mid-request.  Carries enough context
+    to debug a torn exchange: which op, which request id, and how many
+    response bytes had arrived when the peer vanished."""
+
+    def __init__(self, detail: str, *, op: str = "?",
+                 request_id: Any = None, bytes_read: int = 0) -> None:
+        super().__init__(
+            f"{detail} (op={op!r} id={request_id!r} "
+            f"bytes_read={bytes_read})")
+        self.op = op
+        self.request_id = request_id
+        self.bytes_read = bytes_read
 
 
 def _frame(doc: Dict[str, Any]) -> bytes:
     payload = json.dumps(doc).encode("utf-8")
     return _HDR.pack(len(payload)) + payload
+
+
+def _error_doc(code: str, message: str, **extra: Any) -> Dict[str, Any]:
+    """An ``ok: false`` response stamped with the retry-taxonomy verdict."""
+    return {"ok": False, "error": code, "message": message,
+            "retryable": code in _RETRYABLE, **extra}
 
 
 class GatewayServer:
@@ -204,10 +247,10 @@ class GatewayServer:
                     break
                 (length,) = _HDR.unpack(hdr)
                 if length > self.frame_max:
-                    await self._send(writer, wlock, {
-                        "ok": False, "error": "frame_too_large",
-                        "message": f"frame of {length} bytes exceeds the "
-                                   f"{self.frame_max}-byte limit"})
+                    await self._send(writer, wlock, _error_doc(
+                        "frame_too_large",
+                        f"frame of {length} bytes exceeds the "
+                        f"{self.frame_max}-byte limit"))
                     break
                 try:
                     payload = await reader.readexactly(length)
@@ -218,8 +261,8 @@ class GatewayServer:
                     if not isinstance(req, dict):
                         raise ValueError("frame payload must be an object")
                 except ValueError as e:
-                    await self._send(writer, wlock, {
-                        "ok": False, "error": "bad_frame", "message": str(e)})
+                    await self._send(writer, wlock,
+                                     _error_doc("bad_frame", str(e)))
                     break
                 # per-connection backpressure: while a full window is in
                 # flight this await parks the reader loop, the kernel
@@ -228,18 +271,17 @@ class GatewayServer:
                 await window.acquire()
                 if self._draining:
                     window.release()
-                    await self._send(writer, wlock, {
-                        "id": req.get("id"), "ok": False, "error": "draining",
-                        "message": "gateway is draining for shutdown"})
+                    await self._send(writer, wlock, _error_doc(
+                        "draining", "gateway is draining for shutdown",
+                        id=req.get("id")))
                     continue
                 if self._inflight >= self.max_inflight:
                     window.release()
                     self._rejects.inc()
-                    await self._send(writer, wlock, {
-                        "id": req.get("id"), "ok": False,
-                        "error": "admission_reject",
-                        "message": f"{self.max_inflight} requests already "
-                                   "in flight; retry with backoff"})
+                    await self._send(writer, wlock, _error_doc(
+                        "admission_reject",
+                        f"{self.max_inflight} requests already in flight; "
+                        "retry with backoff", id=req.get("id")))
                     continue
                 self._inflight += 1
                 task = asyncio.ensure_future(
@@ -265,7 +307,7 @@ class GatewayServer:
             resp = await self._loop.run_in_executor(
                 self._executor, self._execute, req)
         except Exception as e:  # pragma: no cover - _execute catches its own
-            resp = {"ok": False, "error": type(e).__name__, "message": str(e)}
+            resp = _error_doc(type(e).__name__, str(e))
         finally:
             self._inflight -= 1
             window.release()
@@ -302,17 +344,24 @@ class GatewayServer:
             return out
         except GatewayError as e:
             self._errors.inc()
-            return {"ok": False, "error": e.code, "message": str(e)}
+            return _error_doc(e.code, str(e))
+        except ShardQuarantined as e:
+            # degraded-read contract: the error names the casualties so a
+            # client can route healthy keys elsewhere in the same batch
+            self._errors.inc()
+            return _error_doc("shard_quarantined", str(e),
+                              shard=e.shard_id, key=e.key,
+                              bad_keys=list(e.bad_keys))
         except KeyError as e:
             self._errors.inc()
-            return {"ok": False, "error": "not_found",
-                    "message": f"no such key: {e.args[0] if e.args else e}"}
+            return _error_doc(
+                "not_found", f"no such key: {e.args[0] if e.args else e}")
         except TimeoutError as e:
             self._errors.inc()
-            return {"ok": False, "error": "timeout", "message": str(e)}
+            return _error_doc("timeout", str(e))
         except Exception as e:
             self._errors.inc()
-            return {"ok": False, "error": type(e).__name__, "message": str(e)}
+            return _error_doc(type(e).__name__, str(e))
 
     @staticmethod
     def _req_texts(req: dict) -> List[str]:
@@ -392,6 +441,8 @@ class GatewayServer:
         return {
             "inflight": self._inflight,
             "open_connections": self._open_conns,
+            # replica staleness = writer's store_generation − this one's
+            "store_generation": self.service.store.meta_generation,
             "requests": self._requests.value,
             "admission_rejects": self._rejects.value,
             "request_errors": self._errors.value,
@@ -453,42 +504,169 @@ def start_in_thread(service: PromptService, **kwargs) -> GatewayHandle:
     return GatewayHandle(server, thread)
 
 
+class RetryPolicy:
+    """Client retry budget: up to ``retries`` re-attempts after the
+    first try, exponential backoff from ``base_s`` doubling up to
+    ``max_s``, jittered by a seeded RNG so a chaos run replays the exact
+    same sleep schedule.  Defaults come from ``REPRO_GATEWAY_RETRIES`` /
+    ``REPRO_GATEWAY_RETRY_BASE_S`` / ``REPRO_FAULTS_SEED``."""
+
+    def __init__(self, retries: Optional[int] = None,
+                 base_s: Optional[float] = None, max_s: float = 2.0,
+                 seed: Optional[int] = None) -> None:
+        self.retries = (env.read("REPRO_GATEWAY_RETRIES")
+                        if retries is None else int(retries))
+        self.base_s = (env.read("REPRO_GATEWAY_RETRY_BASE_S")
+                       if base_s is None else float(base_s))
+        self.max_s = float(max_s)
+        self._rng = random.Random(env.read("REPRO_FAULTS_SEED")
+                                  if seed is None else seed)
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (0-based): full-jitter
+        over the upper half of the exponential window."""
+        span = min(self.max_s, self.base_s * (2.0 ** attempt))
+        return span * (0.5 + self._rng.random() / 2.0)
+
+
 class GatewayClient:
     """Blocking client for the frame protocol (one request/response at a
     time per client; open one client per concurrent stream, or pipeline
-    raw frames yourself to exercise the connection window)."""
+    raw frames yourself to exercise the connection window).
 
-    def __init__(self, host: str, port: int, timeout: float = 30.0) -> None:
-        self._sock = socket.create_connection((host, port), timeout=timeout)
-        self._rfile = self._sock.makefile("rb")
+    ``call`` and every convenience wrapper are resilient: connection
+    loss triggers a transparent reconnect, and error responses the
+    server marks ``retryable`` (admission rejects, timeouts, drains)
+    are retried with seeded exponential backoff — safe because every op
+    is idempotent.  ``request`` stays a single raw attempt.  Pass
+    ``retries=0`` to observe single-attempt protocol behavior."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0, *,
+                 retries: Optional[int] = None,
+                 retry_base_s: Optional[float] = None,
+                 retry_seed: Optional[int] = None) -> None:
+        self._host = host
+        self._port = port
+        self._timeout = float(timeout)
+        self.policy = RetryPolicy(retries=retries, base_s=retry_base_s,
+                                  seed=retry_seed)
+        self._sock: Optional[socket.socket] = None
+        self._rfile = None
         self._ids = itertools.count(1)
         self._lock = threading.Lock()
+        self._connect()
+
+    # -- connection management -------------------------------------------------
+
+    def _connect(self) -> None:
+        self._sock = socket.create_connection((self._host, self._port),
+                                              timeout=self._timeout)
+        self._rfile = self._sock.makefile("rb")
+
+    def _drop_locked(self) -> None:
+        """Tear down a (possibly torn) connection; the next request
+        reconnects lazily.  Caller holds ``self._lock``."""
+        try:
+            if self._rfile is not None:
+                self._rfile.close()
+            if self._sock is not None:
+                self._sock.close()
+        except OSError:  # pragma: no cover - already dead
+            pass
+        self._sock = None
+        self._rfile = None
 
     def request(self, op: str, **fields) -> dict:
-        """Send one request, return the raw response document."""
+        """Send one request, return the raw response document.  Exactly
+        one attempt — no retry, no backoff; ``call`` layers those.  A
+        dead connection is re-established first (the reconnect half of
+        resilience lives here so raw-protocol users heal too)."""
         doc = {"op": op, "id": next(self._ids), **fields}
         with self._lock:
-            self._sock.sendall(_frame(doc))
-            return self._read_response()
+            if self._sock is None:
+                self._connect()
+                obs.counter("gateway.client.reconnects").inc()
+            try:
+                failpoints.fire("gateway.send")
+                self._sock.sendall(_frame(doc))
+            except OSError as e:
+                self._drop_locked()
+                raise GatewayConnectionLost(
+                    f"send failed: {e}", op=op,
+                    request_id=doc["id"]) from e
+            try:
+                return self._read_response(op, doc["id"])
+            except GatewayConnectionLost:
+                self._drop_locked()
+                raise
+            except OSError as e:
+                self._drop_locked()
+                raise GatewayConnectionLost(
+                    f"receive failed: {e}", op=op,
+                    request_id=doc["id"]) from e
 
-    def _read_response(self) -> dict:
+    def _read_response(self, op: str = "?", request_id: Any = None) -> dict:
+        failpoints.fire("gateway.recv")
         hdr = self._rfile.read(_HDR.size)
-        if hdr is None or len(hdr) < _HDR.size:
-            raise ConnectionError("gateway closed the connection")
+        n_hdr = len(hdr) if hdr else 0
+        if n_hdr < _HDR.size:
+            raise GatewayConnectionLost(
+                "gateway closed the connection", op=op,
+                request_id=request_id, bytes_read=n_hdr)
         (length,) = _HDR.unpack(hdr)
         payload = self._rfile.read(length)
-        if payload is None or len(payload) < length:
-            raise ConnectionError("gateway closed mid-frame")
+        n_payload = len(payload) if payload else 0
+        if n_payload < length:
+            raise GatewayConnectionLost(
+                "gateway closed mid-frame", op=op, request_id=request_id,
+                bytes_read=n_hdr + n_payload)
         return json.loads(payload)
 
-    def call(self, op: str, **fields) -> dict:
-        """`request` + raise `GatewayError` on ``ok: false``."""
-        resp = self.request(op, **fields)
-        if not resp.get("ok"):
-            raise GatewayError(
+    # -- resilient call --------------------------------------------------------
+
+    def call(self, op: str, *, deadline_s: Optional[float] = None,
+             **fields) -> dict:
+        """`request` + raise `GatewayError` on ``ok: false`` — wrapped
+        in the retry loop: reconnect-and-retry on connection loss, and
+        backoff-and-retry on responses the server marks ``retryable``,
+        bounded by the retry budget and the optional per-op deadline."""
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + float(deadline_s))
+        attempt = 0
+        while True:
+            try:
+                resp = self.request(op, **fields)
+            except GatewayConnectionLost:
+                if not self._sleep_before_retry(attempt, deadline):
+                    raise
+                attempt += 1
+                continue
+            if resp.get("ok"):
+                return resp
+            err = GatewayError(
                 f"{resp.get('error', 'error')}: {resp.get('message', '')}",
-                resp.get("error", "error"))
-        return resp
+                resp.get("error", "error"),
+                retryable=bool(resp.get("retryable")))
+            if not err.retryable or not self._sleep_before_retry(attempt,
+                                                                 deadline):
+                raise err
+            attempt += 1
+
+    def _sleep_before_retry(self, attempt: int,
+                            deadline: Optional[float]) -> bool:
+        """True iff budget and deadline allow retry ``attempt`` — after
+        sleeping the backoff (clipped so we never sleep past deadline)."""
+        if attempt >= self.policy.retries:
+            return False
+        pause = self.policy.backoff_s(attempt)
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return False
+            pause = min(pause, remaining)
+        time.sleep(pause)
+        obs.counter("gateway.client.retries").inc()
+        return True
 
     # -- convenience wrappers --------------------------------------------------
 
@@ -523,11 +701,8 @@ class GatewayClient:
         return self.call("refresh")["refreshed"]
 
     def close(self) -> None:
-        try:
-            self._rfile.close()
-            self._sock.close()
-        except OSError:  # pragma: no cover
-            pass
+        with self._lock:
+            self._drop_locked()
 
     def __enter__(self) -> "GatewayClient":
         return self

@@ -1,0 +1,283 @@
+"""Background integrity scrubbing + quarantine repair: the self-healing
+half of the store's fault-tolerance story (ARCHITECTURE.md "Fault
+tolerance").
+
+The paper's production claim is 100% lossless reconstruction; a bit that
+rots *after* the ingest-time fsync silently breaks it until the key is
+next read.  The scrubber closes that window: it walks every shard
+decoding every record and checking its sha256 content key (the same
+verification ``get()`` does, run proactively), and a shard with any
+failing record is **quarantined** via
+:meth:`~repro.core.store.ShardedPromptStore.quarantine_shard`:
+
+* reads of the provably-corrupt keys raise
+  :class:`~repro.core.store.ShardQuarantined` naming the full casualty
+  list — every healthy key, in that shard and every other, keeps
+  serving (the degraded-read contract: corruption is never allowed to
+  escalate into a store-wide failure);
+* the background compactor skips the shard, preserving the corrupt
+  generation as forensics instead of laundering it through a rebuild;
+* :func:`repair_shard` heals it: survivors are re-committed through the
+  normal ``swap_shard`` generation swap, casualties are re-fetched from
+  a ``source`` store (a replica root opened read-only) when one is
+  given, and only records no copy of survives are dropped — an honest
+  ``KeyError`` thereafter instead of a quarantine held forever.
+
+Scrub state machine per shard::
+
+    healthy --scrub finds bad record--> quarantined --repair--> healthy
+       ^                                     |  (casualties without a
+       +----- scrub pass finds no rot -------+   source are dropped)
+
+:class:`BackgroundScrubber` is the ``BackgroundCompactor`` sibling the
+service tier wires in (``PromptService(scrub_interval_s=...)``); both
+follow the same lifecycle (daemon thread, ``stop()`` joins, counters via
+``repro.obs.owned_counter``).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro import obs
+from repro.core.store import ShardedPromptStore, content_key
+
+#: per-record decode is the slow fallback; batches amortize the pipeline
+_SCRUB_BATCH = 64
+
+
+@dataclass
+class ScrubResult:
+    shard_id: int
+    n_records: int
+    bad_keys: List[str] = field(default_factory=list)
+    quarantined: bool = False
+    wall_s: float = 0.0
+
+    @property
+    def clean(self) -> bool:
+        return not self.bad_keys
+
+
+@dataclass
+class RepairResult:
+    shard_id: int
+    n_survivors: int
+    n_resynced: int      # casualties recovered from the source store
+    n_dropped: int       # casualties no copy of survives
+    repaired: bool       # False: could not run (lock/layout race)
+
+
+def _verify(store: ShardedPromptStore, recs: List[dict],
+            blobs: List[bytes]) -> List[str]:
+    """Keys in `recs` whose blob fails decode or hash check.  The fast
+    path decodes a whole batch; any batch-level failure falls back to
+    per-record decode so one rotten frame doesn't condemn its batch."""
+    bad: List[str] = []
+    for start in range(0, len(recs), _SCRUB_BATCH):
+        chunk = recs[start:start + _SCRUB_BATCH]
+        chunk_blobs = blobs[start:start + _SCRUB_BATCH]
+        try:
+            texts = store.compressor.decompress_batch(chunk_blobs)
+        except Exception:
+            texts = None
+        if texts is None:
+            for rec, blob in zip(chunk, chunk_blobs):
+                try:
+                    text = store.compressor.decompress(blob)
+                except Exception:
+                    bad.append(rec["key"])
+                    continue
+                if content_key(text) != rec["key"]:
+                    bad.append(rec["key"])
+        else:
+            bad.extend(rec["key"] for rec, text in zip(chunk, texts)
+                       if content_key(text) != rec["key"])
+    return bad
+
+
+def scrub_shard(store: ShardedPromptStore, shard_id: int) -> ScrubResult:
+    """Verify every live record of one shard; quarantine on any failure.
+    Safe to run concurrently with ingest and reads (snapshot + read use
+    the store's own locking); an already-quarantined shard is re-scanned
+    so repeated rot extends the casualty list."""
+    with obs.span("scrub.shard", shard=str(shard_id)) as span:
+        recs = store.shard_records(shard_id)
+        try:
+            blobs = store.read_records(shard_id, recs)
+        except OSError:
+            # raced a compaction/rebalance generation unlink: the records
+            # now live in a fresh file the next pass will scan
+            return ScrubResult(shard_id, 0, wall_s=span.elapsed_s)
+        bad = _verify(store, recs, blobs)
+        obs.counter("scrub.records").inc(len(recs))
+        if bad:
+            obs.counter("scrub.corrupt_records").inc(len(bad))
+            store.quarantine_shard(shard_id, bad, "scrub integrity failure")
+        return ScrubResult(shard_id, len(recs), bad_keys=bad,
+                           quarantined=bool(bad), wall_s=span.elapsed_s)
+
+
+def scrub_store(store: ShardedPromptStore) -> List[ScrubResult]:
+    """One full scrub pass (skips nothing; also callable synchronously)."""
+    out: List[ScrubResult] = []
+    for shard_id in range(store.n_shards):
+        if shard_id >= store.n_shards:  # shrunk by a concurrent rebalance
+            break
+        out.append(scrub_shard(store, shard_id))
+    return out
+
+
+def repair_shard(store: ShardedPromptStore, shard_id: int,
+                 source: Optional[ShardedPromptStore] = None) -> RepairResult:
+    """Heal a quarantined shard.
+
+    Survivors (records that still verify) are re-committed as a fresh
+    generation through the store's normal ``swap_shard`` crash-safe
+    protocol.  Each casualty is re-fetched from ``source`` — typically a
+    replica root opened ``readonly=True`` — and re-compressed; casualties
+    the source cannot produce are dropped from the index (the loss
+    surfaces as ``KeyError``, never as silent wrong bytes).  Lifts the
+    quarantine on commit.  Mirrors ``compact_shard``'s locking: returns
+    ``repaired=False`` when another rebuild holds the shard or a
+    rebalance replaced the layout mid-acquire."""
+    try:
+        lock = store.compaction_lock(shard_id)
+    except IndexError:  # raced a shrinking rebalance
+        return RepairResult(shard_id, 0, 0, 0, repaired=False)
+    if not lock.acquire(blocking=False):
+        return RepairResult(shard_id, 0, 0, 0, repaired=False)
+    try:
+        try:
+            if store.compaction_lock(shard_id) is not lock:
+                return RepairResult(shard_id, 0, 0, 0, repaired=False)
+        except IndexError:
+            return RepairResult(shard_id, 0, 0, 0, repaired=False)
+        with obs.span("scrub.repair", shard=str(shard_id)):
+            return _repair_locked(store, shard_id, source)
+    finally:
+        lock.release()
+
+
+def _repair_locked(store: ShardedPromptStore, shard_id: int,
+                   source: Optional[ShardedPromptStore]) -> RepairResult:
+    recs = store.shard_records(shard_id)
+    blobs = store.read_records(shard_id, recs)
+    bad = set(_verify(store, recs, blobs))
+    entries = [
+        {"key": r["key"], "seq": r["seq"], "method": r["method"],
+         "n_chars": r["n_chars"], "blob": b}
+        for r, b in zip(recs, blobs) if r["key"] not in bad
+    ]
+    n_survivors = len(entries)
+    resynced: List[str] = []
+    dropped: List[str] = []
+    by_key = {r["key"]: r for r in recs}
+    for key in sorted(bad):
+        text: Optional[str] = None
+        if source is not None:
+            try:
+                text = source.get(key)
+            except Exception:
+                text = None
+        if text is None:
+            dropped.append(key)
+            continue
+        rec = by_key[key]
+        blob = store.compressor.compress(text, rec["method"])
+        entries.append({"key": key, "seq": rec["seq"],
+                        "method": rec["method"], "n_chars": len(text),
+                        "blob": blob})
+        resynced.append(key)
+    # casualties leave the index BEFORE the swap: swap_shard's catch-up
+    # would otherwise copy the corrupt blobs (still indexed, not in the
+    # planned seq set) straight into the healed generation
+    if dropped:
+        store.drop_keys(dropped)
+        obs.counter("scrub.dropped_records").inc(len(dropped))
+    # surviving frames may reference the shard's dictionary sidecar; the
+    # healed generation must re-persist it or they rot on reopen (same
+    # carry rule as compaction)
+    from repro.service.compaction import _carried_dictionary
+
+    store.swap_shard(shard_id, sorted(entries, key=lambda e: e["seq"]),
+                     dictionary=_carried_dictionary(store, entries))
+    store.clear_quarantine(shard_id)
+    obs.counter("scrub.repairs").inc()
+    if resynced:
+        obs.counter("scrub.resynced_records").inc(len(resynced))
+    return RepairResult(shard_id, n_survivors, len(resynced), len(dropped),
+                        repaired=True)
+
+
+def repair_store(store: ShardedPromptStore,
+                 source: Optional[ShardedPromptStore] = None
+                 ) -> List[RepairResult]:
+    """Repair every quarantined shard."""
+    return [repair_shard(store, sid, source=source)
+            for sid in sorted(store.quarantined())]
+
+
+class BackgroundScrubber:
+    """Periodic integrity sweep thread — the ``BackgroundCompactor``
+    sibling.  Every ``interval_s`` it scrubs each shard; quarantines are
+    declared but NOT auto-repaired (repair drops unrecoverable records,
+    a destructive step an operator or the chaos harness triggers
+    explicitly via :func:`repair_shard` / ``PromptService.repair``)."""
+
+    def __init__(self, store: ShardedPromptStore,
+                 interval_s: float = 30.0) -> None:
+        self._store = store
+        self.interval_s = float(interval_s)
+        self._stop_event = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._passes = obs.owned_counter("scrub.passes")
+        self._quarantines = obs.owned_counter("scrub.quarantines")
+        self._errors = obs.owned_counter("scrub.errors")
+
+    def start(self) -> "BackgroundScrubber":
+        if self._thread is not None:
+            raise RuntimeError("scrubber already started")
+        self._thread = threading.Thread(target=self._loop,
+                                        name="shard-scrubber", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop_event.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _loop(self) -> None:
+        while not self._stop_event.wait(self.interval_s):
+            self.run_pass()
+
+    def run_pass(self) -> List[ScrubResult]:
+        """One scrub sweep over all shards (also callable synchronously)."""
+        self._passes.inc()
+        results: List[ScrubResult] = []
+        with obs.span("scrub.pass"):
+            for shard_id in range(self._store.n_shards):
+                if self._stop_event.is_set():
+                    break
+                was_quarantined = self._store.is_quarantined(shard_id)
+                try:
+                    res = scrub_shard(self._store, shard_id)
+                except Exception:  # racing a rebalance teardown
+                    self._errors.inc()
+                    continue
+                results.append(res)
+                if res.quarantined and not was_quarantined:
+                    self._quarantines.inc()
+        return results
+
+    def stats(self) -> dict:
+        return {
+            "passes": self._passes.value,
+            "quarantines": self._quarantines.value,
+            "errors": self._errors.value,
+            "interval_s": self.interval_s,
+        }

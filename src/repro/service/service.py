@@ -6,6 +6,8 @@ Composes the three service components around one `ShardedPromptStore`:
     ├── IngestQueue            async write path (put_async; group commit,
     │                          per-shard parallel fsync, backpressure)
     ├── BackgroundCompactor    dead-byte reclaim + codec stage reselection
+    ├── BackgroundScrubber     integrity sweep -> quarantine + degraded
+    │                          reads (repro.service.scrub)
     └── TokenCache             serve-path get_tokens LRU (byte budget)
 
 Read/write API is a superset of the store's (`put/put_many/get/get_many/
@@ -32,6 +34,9 @@ from repro.service.cache import TokenCache
 from repro.service.compaction import (BackgroundCompactor, CompactionResult,
                                       compact_shard, compact_store)
 from repro.service.ingest import IngestQueue, IngestTicket
+from repro.service.scrub import (BackgroundScrubber, RepairResult,
+                                 ScrubResult, repair_shard, repair_store,
+                                 scrub_shard, scrub_store)
 
 
 class PromptService:
@@ -48,6 +53,7 @@ class PromptService:
         compact_min_dead_bytes: int = 4096,
         compact_reselect: bool = True,
         compact_train_dict: bool = True,
+        scrub_interval_s: Optional[float] = None,
     ) -> None:
         self.store = store
         self.cache = TokenCache(cache_bytes) if cache_bytes > 0 else None
@@ -62,6 +68,9 @@ class PromptService:
             reselect=compact_reselect,
             train_dict=compact_train_dict)
             if compact_interval_s is not None else None)
+        self.scrubber = (BackgroundScrubber(store,
+                                            interval_s=scrub_interval_s)
+                         if scrub_interval_s is not None else None)
         self._started = False
         self._stopped = False
 
@@ -81,6 +90,8 @@ class PromptService:
             self.ingest.start()
         if self.compactor is not None:
             self.compactor.start()
+        if self.scrubber is not None:
+            self.scrubber.start()
         return self
 
     def drain(self) -> None:
@@ -98,6 +109,8 @@ class PromptService:
             self.ingest.stop()
         if self.compactor is not None:
             self.compactor.stop()
+        if self.scrubber is not None:
+            self.scrubber.stop()
 
     def __enter__(self) -> "PromptService":
         if self._stopped:
@@ -188,6 +201,24 @@ class PromptService:
         ingest keeps flowing — stale plans re-route)."""
         return self.store.rebalance(n_shards)
 
+    def scrub(self, shard_id: Optional[int] = None) -> List[ScrubResult]:
+        """Synchronous integrity sweep (all shards, or one); failing
+        shards are quarantined — see ``repro.service.scrub``."""
+        if shard_id is not None:
+            return [scrub_shard(self.store, shard_id)]
+        return scrub_store(self.store)
+
+    def repair(self, shard_id: Optional[int] = None,
+               source: Optional[ShardedPromptStore] = None
+               ) -> List[RepairResult]:
+        """Heal quarantined shards: re-commit survivors, resync
+        casualties from ``source`` (a replica/backup root), drop the
+        rest.  Destructive for unrecoverable records — explicit call
+        only, never automatic."""
+        if shard_id is not None:
+            return [repair_shard(self.store, shard_id, source=source)]
+        return repair_store(self.store, source=source)
+
     def stats(self) -> dict:
         """One snapshot across every component."""
         return {
@@ -196,4 +227,6 @@ class PromptService:
             "ingest": self.ingest.stats() if self.ingest is not None else None,
             "compaction": (self.compactor.stats()
                            if self.compactor is not None else None),
+            "scrub": (self.scrubber.stats()
+                      if self.scrubber is not None else None),
         }

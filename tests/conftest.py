@@ -1,13 +1,14 @@
 """Shared pytest wiring: the runtime lock-order sanitizer is on for
-every test carrying the ``concurrency`` or ``crash`` marker (the tests
-that actually interleave store lock paths), via ``REPRO_LOCK_SANITIZER``
-— see ``repro.core.locks``.  Stores built inside those tests get
-sanitized locks; the flag is restored afterwards so unmarked tests
-measure the production (unwrapped) primitives."""
+every test carrying the ``concurrency``, ``crash``, or ``chaos`` marker
+(the tests that actually interleave store lock paths), via
+``REPRO_LOCK_SANITIZER`` — see ``repro.core.locks``.  Stores built
+inside those tests get sanitized locks (chaos gateways inherit the flag
+through the subprocess env); the flag is restored afterwards so
+unmarked tests measure the production (unwrapped) primitives."""
 
 import os
 
-_SANITIZED_MARKERS = ("concurrency", "crash")
+_SANITIZED_MARKERS = ("concurrency", "crash", "chaos")
 _SAVED = object()
 
 

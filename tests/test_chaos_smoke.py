@@ -1,0 +1,32 @@
+"""CI anchor for the chaos harness: ``scripts/chaos.py --smoke`` at a
+fixed seed must exit 0.  The harness itself does the asserting (zero
+acked-write loss across a SIGKILL takeover, quarantine + degraded reads
+after an injected corruption, fault/retry counters visible in the obs
+snapshots); this test pins it into the tier-1 suite under the ``chaos``
+marker so a regression in the fault-tolerance stack fails `make test`,
+not just `make quick`.  Deselect with ``-m "not chaos"``; the full
+multi-seed sweep is ``make chaos``."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = [pytest.mark.chaos, pytest.mark.slow]
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_chaos_smoke_fixed_seed():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "chaos.py"),
+         "--smoke", "--seed", "0"],
+        env=env, capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 0, (
+        f"chaos smoke failed (exit {proc.returncode}):\n"
+        f"{proc.stdout}\n{proc.stderr}")
+    assert "OK" in proc.stdout and "lossless" in proc.stdout

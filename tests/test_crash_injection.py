@@ -1,11 +1,13 @@
 """Crash injection for the generation swap and the online rebalance.
 
-`os.replace` and `os.fsync` are wrapped to raise at the N-th call —
-simulating the process dying at every durability step of `swap_shard`
-(dict sidecar write included) and `rebalance` — then the store root is
-reopened cold and must present either the OLD or the NEW generation
-byte-identically (never a torn mix), with every orphaned `.bin` /
-`.idx.jsonl` / `.dict` file garbage-collected.
+Driven by the shared failpoint harness (`repro.core.failpoints`): one
+alternation rule over the durability sites and the `store.replace`
+commit points enumerates every durability step of `swap_shard` (dict
+sidecar write included) and `rebalance` with a `count` action, then a
+`nth:N,crash` rule simulates the process dying at each step — the store
+root is reopened cold and must present either the OLD or the NEW
+generation byte-identically (never a torn mix), with every orphaned
+`.bin` / `.idx.jsonl` / `.dict` file garbage-collected.
 
 Both operations are deterministic for a quiescent store, so the clean-run
 "after" snapshot is computed once per operation on a copy of the seeded
@@ -13,12 +15,12 @@ root and reused as the NEW-side reference for every fault point.
 """
 
 import json
-import os
 import shutil
 from pathlib import Path
 
 import pytest
 
+from repro.core import failpoints
 from repro.core.api import PromptCompressor
 from repro.core.store import ShardedPromptStore
 from repro.service.compaction import compact_store
@@ -26,10 +28,14 @@ from repro.tokenizer.vocab import default_tokenizer
 
 pytestmark = pytest.mark.crash
 
+#: one shared hit counter across every durability step: file/dir fsyncs,
+#: temp-file writes, and the os.replace commit points of the store
+_PATTERN = "durability.*|store.replace"
+
 
 class InjectedCrash(BaseException):
     """BaseException so no production except-Exception path can swallow
-    the simulated death."""
+    the simulated death (for the one non-failpoint injection below)."""
 
 
 @pytest.fixture(scope="module")
@@ -69,34 +75,6 @@ def _live_files(store) -> set:
         if lay.dict_shas[i]:
             names.add(store._dict_path(i, lay.gens[i], lay.n_shards).name)
     return names
-
-
-class _FaultInjector:
-    """Counts os.replace/os.fsync calls; raises InjectedCrash when the
-    combined call index reaches `crash_at` (None = count only)."""
-
-    def __init__(self, crash_at=None):
-        self.calls = 0
-        self.crash_at = crash_at
-        self._replace = os.replace
-        self._fsync = os.fsync
-
-    def _tick(self, what):
-        if self.crash_at is not None and self.calls == self.crash_at:
-            raise InjectedCrash(f"{what} call #{self.calls}")
-        self.calls += 1
-
-    def install(self, monkeypatch):
-        def replace(src, dst, *a, **kw):
-            self._tick("os.replace")
-            return self._replace(src, dst, *a, **kw)
-
-        def fsync(fd):
-            self._tick("os.fsync")
-            return self._fsync(fd)
-
-        monkeypatch.setattr(os, "replace", replace)
-        monkeypatch.setattr(os, "fsync", fsync)
 
 
 def _assert_meta_old_or_new(data: bytes, before: dict, after: dict,
@@ -161,39 +139,36 @@ def seeded(tok, tmp_path_factory):
     return out
 
 
-def _fault_count(seeded_root, op, tok, monkeypatch, tmp_path):
+def _fault_count(seeded_root, op, tok, tmp_path):
+    """Enumerate the operation's durability steps with a count rule."""
     work = tmp_path / "count"
     shutil.copytree(seeded_root, work)
-    counter = _FaultInjector(crash_at=None)
-    with monkeypatch.context() as m:
-        counter.install(m)
+    with failpoints.injected(f"{_PATTERN}=always,count") as rules:
         op(_open(work, tok))
-    return counter.calls
+        hits = rules[0].hits
+    return hits
 
 
 @pytest.mark.parametrize("opname", sorted(OPS))
-def test_crash_at_every_fault_point(opname, seeded, tok, monkeypatch,
-                                    tmp_path):
+def test_crash_at_every_fault_point(opname, seeded, tok, tmp_path):
     op = OPS[opname]
     seed_root, before, after = seeded[opname]
-    n_faults = _fault_count(seed_root, op, tok, monkeypatch, tmp_path)
+    n_faults = _fault_count(seed_root, op, tok, tmp_path)
     assert n_faults >= 3, "operation must have durability steps to test"
     keys = _open(seed_root, tok).keys()
 
-    for crash_at in range(n_faults):
-        work = tmp_path / f"crash-{crash_at}"
+    for nth in range(1, n_faults + 1):
+        work = tmp_path / f"crash-{nth}"
         shutil.copytree(seed_root, work)
-        injector = _FaultInjector(crash_at=crash_at)
-        with monkeypatch.context() as m:
-            injector.install(m)
+        with failpoints.injected(f"{_PATTERN}=nth:{nth},crash"):
             store = _open(work, tok)
-            with pytest.raises(InjectedCrash):
+            with pytest.raises(failpoints.FailpointCrash):
                 op(store)
             del store  # the process is dead; only the disk survives
 
         # cold reopen: every record present and byte-lossless
         reopened = _open(work, tok)
-        assert reopened.keys() == keys, f"keys lost at fault {crash_at}"
+        assert reopened.keys() == keys, f"keys lost at fault {nth}"
         assert reopened.get_many(keys) == TEXTS
         assert reopened.verify_all()["failure"] == 0
 
@@ -204,17 +179,37 @@ def test_crash_at_every_fault_point(opname, seeded, tok, monkeypatch,
         files = _snapshot(work)
         for name, data in files.items():
             if name == "store.json":
-                _assert_meta_old_or_new(data, before, after, crash_at)
+                _assert_meta_old_or_new(data, before, after, nth)
                 continue
             assert (before.get(name) == data or after.get(name) == data), (
-                f"{name} at fault {crash_at} is neither the old nor the "
+                f"{name} at fault {nth} is neither the old nor the "
                 "new generation")
 
         # orphan GC: nothing outside the committed layout remains
         assert set(files) == _live_files(reopened), (
-            f"orphans after fault {crash_at}: "
+            f"orphans after fault {nth}: "
             f"{set(files) ^ _live_files(reopened)}")
         shutil.rmtree(work)
+
+
+def test_torn_creation_meta_never_publishes(tok, tmp_path):
+    """A power cut mid-write of the creation meta's TEMP file (torn
+    action at the cooperating write_durable site) leaves a truncated
+    temp — which must never reach the commit name: store.json is the
+    os.replace target, so it either doesn't exist or is whole.  Retrying
+    after the 'power cut' completes creation and the store is fully
+    functional."""
+    with failpoints.injected("durability.write_durable=nth:1,torn"):
+        with pytest.raises(failpoints.TornWrite):
+            _open(tmp_path, tok)
+    assert not (tmp_path / "store.json").exists()
+    torn_tmp = tmp_path / ".store.json.tmp"
+    if torn_tmp.exists():  # the partial is a strict prefix, never whole
+        assert not torn_tmp.read_bytes().endswith(b"\n")
+    store = _open(tmp_path, tok)
+    keys = store.put_many(TEXTS)
+    assert store.get_many(keys) == TEXTS
+    assert store.verify_all()["failure"] == 0
 
 
 def test_crash_after_rebalance_commit_sweeps_gen0_leftovers(tok, monkeypatch,
@@ -223,9 +218,8 @@ def test_crash_after_rebalance_commit_sweeps_gen0_leftovers(tok, monkeypatch,
     of the dropped shards if the process dies before cleanup.  Those
     names are ambiguous with foreign backups, so GC must not guess —
     the committed meta's explicit `sweep` list declares them ours and a
-    reopen finishes the unlink."""
-    from pathlib import Path
-
+    reopen finishes the unlink.  (Path.unlink is not an I/O commit
+    point, so this one stays a monkeypatch rather than a failpoint.)"""
     _seed(tmp_path, tok)  # 2 shards, all gen 0
     store = _open(tmp_path, tok)
 
@@ -248,22 +242,19 @@ def test_crash_after_rebalance_commit_sweeps_gen0_leftovers(tok, monkeypatch,
     assert reopened.get_many(reopened.keys()) == TEXTS
 
 
-def test_rebalance_preserves_seq_order_across_crashes(seeded, tok,
-                                                      monkeypatch, tmp_path):
+def test_rebalance_preserves_seq_order_across_crashes(seeded, tok, tmp_path):
     """Acceptance: rebalance(n_shards) preserves every key AND the global
     seq iteration order at every fault point (spot-checked above per key
     set; this pins the order against the seed)."""
     seed_root, _, _ = seeded["rebalance_grow"]
     expected = _open(seed_root, tok).keys()
     n_faults = _fault_count(seed_root, OPS["rebalance_grow"], tok,
-                            monkeypatch, tmp_path / "c")
-    for crash_at in (0, n_faults // 2, n_faults - 1):
-        work = tmp_path / f"seq-{crash_at}"
+                            tmp_path / "c")
+    for nth in (1, n_faults // 2 + 1, n_faults):
+        work = tmp_path / f"seq-{nth}"
         shutil.copytree(seed_root, work)
-        injector = _FaultInjector(crash_at=crash_at)
-        with monkeypatch.context() as m:
-            injector.install(m)
-            with pytest.raises(InjectedCrash):
+        with failpoints.injected(f"{_PATTERN}=nth:{nth},crash"):
+            with pytest.raises(failpoints.FailpointCrash):
                 _open(work, tok).rebalance(5)
         assert _open(work, tok).keys() == expected
         shutil.rmtree(work)

@@ -1,0 +1,267 @@
+"""repro.core.failpoints: spec grammar, seeded schedules, action
+semantics (crash/torn/error/latency/count), the shared alternation hit
+counter, live REPRO_FAULTS env re-sync, and the REPRO008 static rule
+that keeps fire() call sites honest against the SITES catalog."""
+
+import os
+
+import pytest
+
+from repro.analysis.core import parse_source, run_rules
+from repro.core import failpoints
+from repro.core.durability import write_durable
+from repro.core.failpoints import (FailpointCrash, FailpointError, FaultRule,
+                                   TornWrite, parse_spec)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    failpoints.disarm_all()
+    yield
+    failpoints.disarm_all()
+
+
+# ---------------------------------------------------------------------------
+# grammar
+# ---------------------------------------------------------------------------
+
+
+def test_parse_spec_clauses():
+    rules = parse_spec(
+        "durability.fsync_file=nth:3,crash; gateway.send=p:0.05,error;"
+        "codec.*=always,latency:0.01;;")
+    assert [r.pattern for r in rules] == [
+        "durability.fsync_file", "gateway.send", "codec.*"]
+    assert rules[0].schedule == ("nth", 3)
+    assert rules[1].schedule == ("p", 0.05)
+    assert rules[2].action == ("latency", 0.01)
+
+
+@pytest.mark.parametrize("bad", [
+    "durability.fsync_file",                 # no schedule/action
+    "durability.fsync_file=nth:3",           # no action
+    "durability.fsync_file=nth:0,crash",     # nth is 1-based
+    "durability.fsync_file=p:1.5,crash",     # p out of range
+    "durability.fsync_file=every:2,crash",   # unknown schedule
+    "durability.fsync_file=nth:1,explode",   # unknown action
+    "durability.fsync_file=nth:1,crash:9",   # crash takes no arg
+    "durability.fsync_file=nth:1,torn:1.0",  # torn frac must be < 1
+    "no.such.site=nth:1,crash",              # unregistered literal
+    "nosuch.*=nth:1,crash",                  # glob matching no site
+    "durability.fsync_file|=nth:1,crash",    # empty alternation part
+])
+def test_parse_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_spec(bad)
+
+
+def test_fire_rejects_unregistered_site_even_unarmed():
+    with pytest.raises(RuntimeError, match="unregistered failpoint site"):
+        failpoints.fire("no.such.site")
+
+
+# ---------------------------------------------------------------------------
+# schedules + actions
+# ---------------------------------------------------------------------------
+
+
+def test_nth_fires_exactly_once():
+    with failpoints.injected("codec.decompress=nth:3,error") as rules:
+        for i in range(1, 6):
+            if i == 3:
+                with pytest.raises(FailpointError):
+                    failpoints.fire("codec.decompress")
+            else:
+                failpoints.fire("codec.decompress")
+        assert rules[0].hits == 5
+        assert rules[0].fired == 1
+
+
+def test_probability_is_seed_deterministic():
+    def pattern(seed):
+        fired = []
+        rule = FaultRule("codec.tokens", "p:0.5", "count", seed=seed)
+        for _ in range(64):
+            rule.hits += 1
+            fired.append(rule._should_fire())
+        return fired
+
+    assert pattern(7) == pattern(7)            # replayable
+    assert pattern(7) != pattern(8)            # seed actually matters
+    # distinct rule indices from one seed get distinct streams
+    a = FaultRule("codec.tokens", "p:0.5", "count", seed=7, index=0)
+    b = FaultRule("codec.tokens", "p:0.5", "count", seed=7, index=1)
+    draws = [(a._should_fire(), b._should_fire()) for _ in range(64)]
+    assert any(x != y for x, y in draws)
+
+
+def test_alternation_shares_one_hit_counter():
+    # 4 hits interleaved across two sites; nth:3 lands on the second
+    # decompress hit because the counter is shared — the property the
+    # crash suite's combined fsync+replace enumeration depends on
+    with failpoints.injected(
+            "codec.decompress|codec.tokens=nth:3,error") as rules:
+        failpoints.fire("codec.decompress")   # hit 1
+        failpoints.fire("codec.tokens")       # hit 2
+        with pytest.raises(FailpointError):
+            failpoints.fire("codec.decompress")  # hit 3 -> fires
+        failpoints.fire("codec.tokens")       # hit 4
+        assert rules[0].hits == 4 and rules[0].fired == 1
+
+
+def test_error_action_is_oserror():
+    with failpoints.injected("gateway.send=always,error"):
+        with pytest.raises(OSError):
+            failpoints.fire("gateway.send")
+        with pytest.raises(ConnectionError):
+            failpoints.fire("gateway.send")
+
+
+def test_crash_action_is_baseexception_not_exception():
+    with failpoints.injected("store.replace=always,crash"):
+        try:
+            failpoints.fire("store.replace")
+        except Exception:  # noqa: BLE001 - asserting it is NOT caught here
+            pytest.fail("FailpointCrash must not be catchable as Exception")
+        except BaseException as e:
+            assert isinstance(e, FailpointCrash)
+
+
+def test_torn_write_persists_prefix(tmp_path):
+    """The cooperating write_durable site leaves keep(n) bytes of the
+    payload on disk before re-raising — a real torn file."""
+    payload = bytes(range(10)) * 10          # 100 bytes
+    target = tmp_path / "artifact.bin"
+    with failpoints.injected("durability.write_durable=nth:1,torn:0.3"):
+        with pytest.raises(TornWrite) as ei:
+            write_durable(target, payload)
+    keep = ei.value.keep(len(payload))
+    assert keep == 30
+    assert target.read_bytes() == payload[:keep]
+    # exhausted nth rule: the retry goes through whole
+    with failpoints.injected("durability.write_durable=nth:1,torn:0.3"):
+        pass
+    write_durable(target, payload)
+    assert target.read_bytes() == payload
+
+
+def test_torn_keep_never_whole():
+    t = TornWrite("durability.write_durable", 1, frac=0.99)
+    assert t.keep(1) == 0
+    assert t.keep(100) == 99                 # capped at n-1
+    assert TornWrite("durability.write_durable", 1, frac=0.0).keep(100) == 0
+
+
+def test_count_action_never_faults():
+    with failpoints.injected("codec.*=always,count") as rules:
+        for _ in range(5):
+            failpoints.fire("codec.decompress")
+        failpoints.fire("codec.tokens")
+        assert rules[0].hits == 6 and rules[0].fired == 6
+
+
+def test_injected_disarms_on_exception_and_stats_report():
+    with pytest.raises(FailpointCrash):
+        with failpoints.injected("lease.acquire=always,crash"):
+            assert failpoints.stats()["n_rules"] == 1
+            failpoints.fire("lease.acquire")
+    assert failpoints.stats()["n_rules"] == 0
+    failpoints.fire("lease.acquire")         # disarmed: clean
+
+
+# ---------------------------------------------------------------------------
+# env-driven arming (REPRO_FAULTS)
+# ---------------------------------------------------------------------------
+
+
+def test_env_spec_arms_and_resyncs(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "codec.decompress=nth:1,error")
+    with pytest.raises(FailpointError):
+        failpoints.fire("codec.decompress")
+    # changed spec re-arms (fresh counters), removal disarms — no restart
+    monkeypatch.setenv("REPRO_FAULTS", "codec.tokens=nth:1,error")
+    failpoints.fire("codec.decompress")
+    with pytest.raises(FailpointError):
+        failpoints.fire("codec.tokens")
+    monkeypatch.delenv("REPRO_FAULTS")
+    failpoints.fire("codec.tokens")
+    assert failpoints.active() == []
+
+
+def test_env_seed_feeds_probability_rules(monkeypatch):
+    def fired_hits(seed):
+        monkeypatch.setenv("REPRO_FAULTS", "codec.tokens=p:0.5,count")
+        monkeypatch.setenv("REPRO_FAULTS_SEED", str(seed))
+        # force a re-parse: the raw spec string is the change detector
+        failpoints._sync_env()
+        failpoints._env_raw = None
+        failpoints._sync_env()
+        for _ in range(32):
+            failpoints.fire("codec.tokens")
+        rule = failpoints.active()[0]
+        return rule.fired
+
+    a, b = fired_hits(3), fired_hits(3)
+    assert a == b
+
+
+def test_env_malformed_spec_is_loud(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "not-a-clause")
+    with pytest.raises(ValueError, match="bad failpoint clause"):
+        failpoints.fire("codec.decompress")
+    monkeypatch.delenv("REPRO_FAULTS")
+    failpoints.fire("codec.decompress")
+
+
+# ---------------------------------------------------------------------------
+# REPRO008: static fire()-site hygiene
+# ---------------------------------------------------------------------------
+
+
+def _real_failpoints_file():
+    path = os.path.join(REPO, "src", "repro", "core", "failpoints.py")
+    with open(path, encoding="utf-8") as fh:
+        return parse_source("src/repro/core/failpoints.py", fh.read())
+
+
+def _rule8(extra_sources):
+    files = [_real_failpoints_file()]
+    files += [parse_source(p, s) for p, s in sorted(extra_sources.items())]
+    return [f for f in run_rules(files, ["REPRO008"])
+            if f.rule == "REPRO008"]
+
+
+def _fires_all_sites():
+    """Source that fires every declared site (keeps never-fired quiet)."""
+    lines = ["from repro.core import failpoints"]
+    lines += [f"failpoints.fire({s!r})" for s in failpoints.SITES]
+    return "\n".join(lines) + "\n"
+
+
+def test_repro008_clean_on_real_tree():
+    assert _rule8({"src/ok.py": _fires_all_sites()}) == []
+
+
+def test_repro008_flags_unknown_site():
+    src = _fires_all_sites() + "failpoints.fire('no.such.site')\n"
+    found = _rule8({"src/bad.py": src})
+    assert len(found) == 1
+    assert "unknown failpoint site" in found[0].message
+
+
+def test_repro008_flags_non_literal_site():
+    src = _fires_all_sites() + "name = 'x'\nfailpoints.fire(name)\n"
+    found = _rule8({"src/bad.py": src})
+    assert len(found) == 1 and "non-literal" in found[0].message
+
+
+def test_repro008_flags_never_fired_sites():
+    src = ("from repro.core.failpoints import fire\n"
+           "fire('durability.publish')\n")
+    found = _rule8({"src/partial.py": src})
+    missing = {f.message.split("'")[1] for f in found}
+    assert missing == set(failpoints.SITES) - {"durability.publish"}
+    assert all("never" in f.message for f in found)
+    assert all(f.path == "src/repro/core/failpoints.py" for f in found)

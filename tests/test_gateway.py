@@ -1,7 +1,9 @@
 """Gateway + multi-process store ownership: the socket frame protocol,
-admission control and per-connection backpressure, the fcntl store
-lease (writer / standby / replica roles), read-replica generation
-follow, and the writer-kill -> standby-takeover crash path."""
+admission control and per-connection backpressure, client resilience
+(reconnect, retry taxonomy, seeded backoff, ticket re-attach), the
+fcntl store lease (writer / standby / replica roles), read-replica
+generation follow, and the writer-kill -> standby-takeover crash
+path."""
 
 import json
 import os
@@ -17,12 +19,14 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+from repro.core import failpoints
 from repro.core.api import PromptCompressor
 from repro.core.lease import (StoreLeaseHeld, acquire_store_lease,
                               lease_path)
 from repro.core.store import ShardedPromptStore
 from repro.service import PromptService
-from repro.service.gateway import (GatewayClient, GatewayError,
+from repro.service.gateway import (GatewayClient, GatewayConnectionLost,
+                                   GatewayError, RetryPolicy,
                                    start_in_thread)
 from repro.tokenizer.vocab import default_tokenizer
 
@@ -117,7 +121,9 @@ def test_gateway_frame_limits_and_bad_frames(tmp_path, tok):
 
 def test_gateway_admission_reject(tmp_path, tok):
     """With max_inflight=1, a request arriving while one executes is
-    rejected immediately — never queued behind it."""
+    rejected immediately — never queued behind it.  retries=0 observes
+    the raw protocol verdict (the default retrying client would mask
+    the reject by backing off until the slot frees — that's its job)."""
     store = _store(tmp_path, tok)
     svc = _service(store, flush_interval_s=0.4, flush_batch=1024)
     with start_in_thread(svc, max_inflight=1, conn_window=4) as h:
@@ -134,10 +140,11 @@ def test_gateway_admission_reject(tmp_path, tok):
         t.start()
         occupied.wait(5)
         time.sleep(0.1)                       # let the put reach _execute
-        with GatewayClient("127.0.0.1", h.port) as c2:
+        with GatewayClient("127.0.0.1", h.port, retries=0) as c2:
             with pytest.raises(GatewayError) as ei:
                 c2.ping()
             assert ei.value.code == "admission_reject"
+            assert ei.value.retryable is True # server taxonomy verdict
             t.join(10)
             assert done and done[0]["durable"]
             assert c2.ping()["pong"] is True  # slot free again
@@ -145,6 +152,126 @@ def test_gateway_admission_reject(tmp_path, tok):
             assert st["gateway"]["admission_rejects"] >= 1
     svc.stop()
     store.close()
+
+
+# -- client resilience: retry taxonomy, reconnect, backoff --------------------
+
+
+def test_client_retries_admission_reject_to_success(tmp_path, tok):
+    """The flip side of the reject test: a DEFAULT client treats
+    admission_reject as the transient the server declares it to be and
+    backs off until the slot frees — no caller-visible error."""
+    store = _store(tmp_path, tok)
+    svc = _service(store, flush_interval_s=0.3, flush_batch=1024)
+    with start_in_thread(svc, max_inflight=1, conn_window=4) as h:
+        occupied = threading.Event()
+        done: list = []
+
+        def slow_put():
+            with GatewayClient("127.0.0.1", h.port) as c1:
+                occupied.set()
+                done.append(c1.put_async(["slow " * 20], wait=True))
+
+        t = threading.Thread(target=slow_put)
+        t.start()
+        occupied.wait(5)
+        time.sleep(0.1)
+        with GatewayClient("127.0.0.1", h.port, retries=8,
+                           retry_base_s=0.05) as c2:
+            assert c2.ping()["pong"] is True   # retried through the reject
+            t.join(10)
+            assert done and done[0]["durable"]
+            assert c2.stats()["gateway"]["admission_rejects"] >= 1
+    svc.stop()
+    store.close()
+
+
+def test_client_reconnects_after_server_closed_conn(tmp_path, tok):
+    """frame_too_large kills the connection server-side; the terminal
+    error surfaces (never retried), then the next call transparently
+    reconnects instead of failing forever on a dead socket."""
+    store = _store(tmp_path, tok)
+    svc = _service(store, ingest_async=False)
+    with start_in_thread(svc, frame_max=1024) as h:
+        with GatewayClient("127.0.0.1", h.port, retries=4,
+                           retry_base_s=0.01) as c:
+            with pytest.raises(GatewayError) as ei:
+                c.call("ping", junk="x" * 4096)
+            assert ei.value.code == "frame_too_large"
+            assert ei.value.retryable is False
+            assert c.ping()["pong"] is True    # lazy reconnect healed it
+    svc.stop()
+    store.close()
+
+
+def test_client_survives_injected_socket_faults(tmp_path, tok):
+    """Deterministic chaos at the client socket sites: every injected
+    send/recv failure is absorbed by reconnect+retry and the acked data
+    reads back byte-identical (puts are content-addressed, so the
+    ambiguous 'did the torn request execute?' retry is safe)."""
+    store = _store(tmp_path, tok)
+    svc = _service(store)
+    texts = _texts(6, tag="fault")
+    with start_in_thread(svc) as h:
+        with GatewayClient("127.0.0.1", h.port, retries=6,
+                           retry_base_s=0.01) as c:
+            with failpoints.injected("gateway.recv=nth:2,error"):
+                keys = c.put(texts[:3])
+                assert c.get_many(keys) == texts[:3]
+            with failpoints.injected("gateway.send=nth:1,error"):
+                keys2 = c.put(texts[3:])
+            assert c.get_many(keys2) == texts[3:]
+    svc.stop()
+    store.close()
+
+
+def test_connection_lost_carries_request_context(tmp_path, tok):
+    store = _store(tmp_path, tok)
+    svc = _service(store, ingest_async=False)
+    with start_in_thread(svc) as h:
+        c = GatewayClient("127.0.0.1", h.port, retries=0)
+        try:
+            with failpoints.injected("gateway.recv=nth:1,error"):
+                with pytest.raises(GatewayConnectionLost) as ei:
+                    c.get("0" * 64)
+            assert ei.value.op == "get"
+            assert ei.value.request_id == 1
+            assert ei.value.bytes_read == 0
+            assert isinstance(ei.value, ConnectionError)  # old contract
+        finally:
+            c.close()
+    svc.stop()
+    store.close()
+
+
+def test_wait_reattaches_to_ticket_across_connections(tmp_path, tok):
+    """Tickets are server-side state keyed by server id: a ticket issued
+    on one connection is redeemable on ANOTHER (the reconnect-retry of
+    `wait` is therefore idempotent, never a lost write)."""
+    store = _store(tmp_path, tok)
+    svc = _service(store, flush_interval_s=0.2, flush_batch=1024)
+    texts = _texts(3, tag="ticket")
+    with start_in_thread(svc) as h:
+        with GatewayClient("127.0.0.1", h.port) as c1:
+            r = c1.put_async(texts)
+            assert not r["durable"]
+        # c1 is gone; a fresh connection redeems the same ticket
+        with GatewayClient("127.0.0.1", h.port) as c2:
+            assert c2.wait(r["ticket"], timeout=30) == r["keys"]
+            assert c2.get_many(r["keys"]) == texts
+    svc.stop()
+    store.close()
+
+
+def test_retry_policy_backoff_is_seeded_and_bounded():
+    a = RetryPolicy(retries=4, base_s=0.05, seed=11)
+    b = RetryPolicy(retries=4, base_s=0.05, seed=11)
+    seq_a = [a.backoff_s(i) for i in range(8)]
+    assert seq_a == [b.backoff_s(i) for i in range(8)]      # replayable
+    assert all(0 < s <= a.max_s for s in seq_a)
+    # exponential envelope: attempt i is bounded by base * 2^i
+    for i, s in enumerate(seq_a):
+        assert s <= min(a.max_s, 0.05 * 2 ** i)
 
 
 # -- store lease --------------------------------------------------------------
@@ -203,6 +330,57 @@ def test_lease_cross_process_conflict(tmp_path, tok):
     out = subprocess.run([sys.executable, "-c", probe],
                          capture_output=True, text=True, timeout=60)
     assert out.stdout.strip() == "ACQUIRED", out.stderr
+
+
+def test_lease_wait_timeout_releases_cleanly(tmp_path, tok):
+    """A standby whose mode='wait' acquire times out must leave no
+    residue: no fd holding the flock, a clean TimeoutError, and the
+    ability to immediately re-wait — and then actually win once the
+    holder exits."""
+    root = tmp_path / "store"
+    _store(root, tok).close()                 # create the root + lease file
+    hold = (
+        "import sys; sys.path.insert(0, {src!r})\n"
+        "from repro.core.lease import acquire_store_lease\n"
+        "lease = acquire_store_lease({root!r}, mode='try')\n"
+        "print('HELD', flush=True)\n"
+        "sys.stdin.readline()\n"              # parent says when to let go
+        "lease.release()\n"
+    ).format(src=_SRC, root=str(root))
+    holder = subprocess.Popen([sys.executable, "-c", hold],
+                              stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                              text=True)
+    try:
+        assert holder.stdout.readline().strip() == "HELD"
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError, match="store lease"):
+            acquire_store_lease(root, mode="wait", timeout_s=0.3)
+        assert time.monotonic() - t0 < 5.0
+        # clean state after the timeout: an immediate re-wait behaves
+        # identically instead of deadlocking on a leaked fd
+        with pytest.raises(TimeoutError):
+            acquire_store_lease(root, mode="wait", timeout_s=0.3)
+        holder.stdin.write("go\n")
+        holder.stdin.flush()
+        assert holder.wait(timeout=30) == 0
+        lease = acquire_store_lease(root, mode="wait", timeout_s=10)
+        lease.release()
+        assert _flock_free(root)              # nothing leaked across all that
+    finally:
+        if holder.poll() is None:
+            holder.kill()
+
+
+def test_lease_acquire_failpoint_site(tmp_path, tok):
+    """The lease.acquire failpoint injects before the flock: chaos can
+    simulate a flaky takeover without touching kernel state."""
+    root = tmp_path / "store"
+    _store(root, tok).close()
+    with failpoints.injected("lease.acquire=nth:1,error"):
+        with pytest.raises(ConnectionError):
+            acquire_store_lease(root, mode="try")
+    lease = acquire_store_lease(root, mode="try")   # healthy afterwards
+    lease.release()
 
 
 def test_lease_none_skips_ownership(tmp_path, tok):

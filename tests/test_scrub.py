@@ -1,0 +1,294 @@
+"""Self-healing store: scrub -> quarantine -> degraded reads -> repair.
+
+Corrupts real on-disk records (targeted byte flips inside a record's
+[offset, offset+length) window), then asserts the fault-tolerance
+contract end to end: the scrubber quarantines exactly the failing
+shard, every healthy key keeps serving (degraded reads, never a
+store-wide failure), repair re-commits survivors / resyncs casualties
+from a replica root / drops only what no copy of survives, and the
+gateway surfaces the whole state machine ("shard_quarantined" error
+code, scrub stats, store_generation)."""
+
+import numpy as np
+import pytest
+
+from repro.core.api import PromptCompressor
+from repro.core.store import ShardedPromptStore, ShardQuarantined
+from repro.service import PromptService
+from repro.service.compaction import compact_shard, compact_store
+from repro.service.scrub import (BackgroundScrubber, repair_shard,
+                                 repair_store, scrub_shard, scrub_store)
+from repro.service.gateway import GatewayClient, GatewayError, start_in_thread
+from repro.tokenizer.vocab import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+TEXTS = [f"scrub {i}: rotate the audit log, re-sign the manifest, "
+         f"then verify checksum chain segment #{i % 5}. " * 3
+         for i in range(18)]
+
+
+def _store(root, tok, **kw):
+    kw.setdefault("n_shards", 3)
+    return ShardedPromptStore(root, PromptCompressor(tok, method="zstd"),
+                              **kw)
+
+
+def _corrupt(store, key) -> int:
+    """Flip bytes in the middle of `key`'s on-disk record; returns its
+    shard id."""
+    lay = store._layout
+    sid = store._shard_of(key, lay.n_shards)
+    rec = store._index[key]
+    data, _ = store._shard_paths(sid, lay.gens[sid], lay.n_shards)
+    with open(data, "r+b") as f:
+        f.seek(rec["offset"] + rec["length"] // 2)
+        chunk = max(4, rec["length"] // 4)
+        f.write(bytes(b ^ 0xFF for b in f.read(chunk)) or b"\xff")
+    return sid
+
+
+def _seeded(root, tok):
+    store = _store(root, tok)
+    keys = store.put_many(TEXTS)
+    return store, keys
+
+
+# ---------------------------------------------------------------------------
+# scrub + quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_clean_scrub_quarantines_nothing(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    results = scrub_store(store)
+    assert len(results) == store.n_shards
+    assert all(r.clean and not r.quarantined for r in results)
+    assert sum(r.n_records for r in results) == len(keys)
+    assert store.quarantined() == {}
+    store.close()
+
+
+def test_scrub_detects_corruption_and_reads_degrade(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    bad_key = keys[4]
+    sid = _corrupt(store, bad_key)
+    res = scrub_shard(store, sid)
+    assert res.quarantined and bad_key in res.bad_keys
+
+    # the corrupt key refuses with the full casualty list...
+    with pytest.raises(ShardQuarantined) as ei:
+        store.get(bad_key)
+    assert ei.value.shard_id == sid
+    assert bad_key in ei.value.bad_keys
+    # ...while every healthy key keeps serving byte-identically —
+    # including healthy keys in the QUARANTINED shard
+    healthy = [k for k in keys if k not in res.bad_keys]
+    assert any(store._shard_of(k, store.n_shards) == sid for k in healthy)
+    assert store.get_many(healthy) == [TEXTS[keys.index(k)] for k in healthy]
+
+    st = store.stats()
+    assert st["quarantined_shards"] == [sid]
+    assert st["quarantined_keys"] == len(res.bad_keys)
+    store.close()
+
+
+def test_quarantine_blocks_tokens_and_merges(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    sid = store._shard_of(keys[0], store.n_shards)
+    store.quarantine_shard(sid, [keys[0]], "test")
+    with pytest.raises(ShardQuarantined):
+        store.get_tokens(keys[0])
+    # idempotent merge: a second declaration extends the casualty list
+    more = [k for k in keys[1:]
+            if store._shard_of(k, store.n_shards) == sid][:1]
+    store.quarantine_shard(sid, more)
+    assert store.quarantined()[sid]["bad_keys"] == sorted([keys[0]] + more)
+    held = store.clear_quarantine(sid)
+    assert sorted(held) == sorted([keys[0]] + more)
+    assert store.get(keys[0]) == TEXTS[0]     # (bytes were never touched)
+    store.close()
+
+
+def test_compactor_skips_quarantined_shard(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    sid = _corrupt(store, keys[0])
+    scrub_shard(store, sid)
+    assert compact_shard(store, sid, reselect=False) is None  # forensics
+    other = (sid + 1) % store.n_shards
+    # healthy shards still compact
+    assert compact_shard(store, other, reselect=False) is not None \
+        or store.shard_records(other) == []
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# repair
+# ---------------------------------------------------------------------------
+
+
+def test_repair_without_source_drops_casualties(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    bad_key = keys[7]
+    sid = _corrupt(store, bad_key)
+    casualties = scrub_shard(store, sid).bad_keys
+    res = repair_shard(store, sid)
+    assert res.repaired and res.n_dropped == len(casualties)
+    assert res.n_resynced == 0
+    assert not store.is_quarantined(sid)
+    # honest loss: KeyError, not wrong bytes and not a held quarantine
+    with pytest.raises(KeyError):
+        store.get(bad_key)
+    survivors = [k for k in keys if k not in casualties]
+    assert store.get_many(survivors) == [TEXTS[keys.index(k)]
+                                         for k in survivors]
+    store.close()
+    # a cold reopen scrubs clean
+    reopened = _store(tmp_path, tok)
+    assert all(r.clean for r in scrub_store(reopened))
+    assert reopened.get_many(survivors) == [TEXTS[keys.index(k)]
+                                            for k in survivors]
+    reopened.close()
+
+
+def test_repair_resyncs_from_source(tmp_path, tok):
+    backup, bkeys = _seeded(tmp_path / "backup", tok)
+    store, keys = _seeded(tmp_path / "live", tok)
+    assert bkeys == keys                      # content-addressed: same keys
+    sid = _corrupt(store, keys[2])
+    casualties = scrub_shard(store, sid).bad_keys
+    res = repair_shard(store, sid, source=backup)
+    assert res.repaired and res.n_resynced == len(casualties)
+    assert res.n_dropped == 0
+    # full recovery, byte-identical, including the ex-casualty
+    assert store.get_many(keys) == TEXTS
+    assert all(r.clean for r in scrub_store(store))
+    store.close()
+    backup.close()
+
+
+def test_repair_carries_dictionary_sidecar(tmp_path, tok):
+    """Survivors in a dict-compacted shard reference the .dict sidecar;
+    the repaired generation must re-persist it or they rot on reopen."""
+    store, keys = _seeded(tmp_path, tok)
+    compact_store(store, reselect=True, train_dict=True)
+    assert store.stats()["dicts"] > 0
+    bad_key = keys[0]
+    sid = _corrupt(store, bad_key)
+    casualties = scrub_shard(store, sid).bad_keys
+    assert repair_shard(store, sid).repaired
+    store.close()
+    reopened = _store(tmp_path, tok)
+    survivors = [k for k in keys if k not in casualties]
+    assert reopened.get_many(survivors) == [TEXTS[keys.index(k)]
+                                            for k in survivors]
+    assert reopened.verify_all()["failure"] == 0
+    reopened.close()
+
+
+def test_repair_store_heals_every_quarantined_shard(tmp_path, tok):
+    backup, _ = _seeded(tmp_path / "backup", tok)
+    store, keys = _seeded(tmp_path / "live", tok)
+    sids = {_corrupt(store, keys[1]), _corrupt(store, keys[9])}
+    scrub_store(store)
+    assert set(store.quarantined()) == sids
+    results = repair_store(store, source=backup)
+    assert len(results) == len(sids) and all(r.repaired for r in results)
+    assert store.quarantined() == {}
+    assert store.get_many(keys) == TEXTS
+    store.close()
+    backup.close()
+
+
+# ---------------------------------------------------------------------------
+# background scrubber + service wiring
+# ---------------------------------------------------------------------------
+
+
+def test_background_scrubber_pass_counts_new_quarantines(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    scrubber = BackgroundScrubber(store, interval_s=3600.0)
+    assert all(r.clean for r in scrubber.run_pass())
+    _corrupt(store, keys[3])
+    scrubber.run_pass()
+    scrubber.run_pass()                       # still quarantined: no recount
+    st = scrubber.stats()
+    assert st["passes"] == 3 and st["quarantines"] == 1
+    store.close()
+
+
+def test_service_scrub_and_repair_methods(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    svc = PromptService(store, ingest_async=False,
+                        scrub_interval_s=3600.0).start()
+    try:
+        assert svc.scrubber is not None
+        assert all(r.clean for r in svc.scrub())
+        sid = _corrupt(store, keys[5])
+        assert svc.scrub(sid)[0].quarantined
+        assert svc.stats()["scrub"]["passes"] == 0  # synchronous path
+        assert svc.repair(sid)[0].repaired
+        assert not store.is_quarantined(sid)
+    finally:
+        svc.stop()
+        store.close()
+
+
+def test_gateway_surfaces_quarantine(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    svc = PromptService(store, ingest_async=False,
+                        scrub_interval_s=3600.0).start()
+    with start_in_thread(svc) as h:
+        with GatewayClient("127.0.0.1", h.port) as c:
+            bad_key = keys[6]
+            sid = _corrupt(store, bad_key)
+            svc.scrub(sid)
+            with pytest.raises(GatewayError) as ei:
+                c.get(bad_key)
+            assert ei.value.code == "shard_quarantined"
+            assert ei.value.retryable is False   # terminal: don't hammer
+            # healthy keys keep serving through the same gateway
+            casualties = store.quarantined()[sid]["bad_keys"]
+            healthy = [k for k in keys if k not in casualties]
+            assert c.get_many(healthy) == [TEXTS[keys.index(k)]
+                                           for k in healthy]
+            st = c.stats()
+            assert st["service"]["store"]["quarantined_shards"] == [sid]
+            assert st["service"]["scrub"]["interval_s"] == 3600.0
+            assert st["gateway"]["store_generation"] >= 1
+    svc.stop()
+    store.close()
+
+
+def test_meta_generation_tracks_commits_and_replica_staleness(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    g0 = store.meta_generation
+    assert g0 >= 1
+    replica = _store(tmp_path, tok, readonly=True)
+    assert replica.meta_generation == g0
+    compact_store(store, reselect=False, train_dict=False)
+    assert store.meta_generation > g0         # every publish bumps
+    assert replica.meta_generation <= store.meta_generation
+    replica.refresh()
+    assert replica.meta_generation == store.meta_generation
+    assert replica.get_many(keys) == TEXTS
+    assert store.stats()["meta_gen"] == store.meta_generation
+    replica.close()
+    store.close()
+
+
+def test_tokens_stay_lossless_after_repair(tmp_path, tok):
+    store, keys = _seeded(tmp_path, tok)
+    before = [np.asarray(a) for a in store.get_tokens_many(keys)]
+    sid = _corrupt(store, keys[8])
+    casualties = scrub_shard(store, sid).bad_keys
+    repair_shard(store, sid)
+    for k, ref in zip(keys, before):
+        if k in casualties:
+            continue
+        assert np.array_equal(np.asarray(store.get_tokens(k)), ref)
+    store.close()
